@@ -1,0 +1,158 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh) cell, from results/dryrun/*.json:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs          [s]
+    memory term     = HLO_bytes_per_device / HBM_bw              [s]
+    collective term = collective_bytes_per_device / link_bw      [s]
+
+HLO numerators are the trip-count-weighted values from
+launch/hlo_analysis.py (raw cost_analysis undercounts while-loop bodies;
+both are recorded). MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D
+(prefill/decode) per device — the ratio against HLO_FLOPs exposes
+remat/replication waste. Dominant term = the bottleneck; roofline
+fraction = MODEL_FLOPS_time / dominant_time (how close the cell runs to
+the compute roofline for useful work).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link
+ICI (per-link, conservative).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro import configs
+from repro.configs.shapes import SHAPES
+from repro.models import lm
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link (per-link, conservative)
+
+
+def model_flops_per_device(arch: str, shape: str, n_devices: int) -> float:
+    """6*N_active*D for train, 2*N_active*D for prefill, 2*N_active*B
+    per decode step (plus the attention-KV term is reported separately in
+    EXPERIMENTS.md where it dominates)."""
+    cfg = configs.get_config(arch)
+    cell = SHAPES[shape]
+    n_active = lm.n_active_params(cfg)
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        total = 6.0 * n_active * tokens
+    elif cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        total = 2.0 * n_active * tokens
+    else:                                    # decode: one token per seq
+        total = 2.0 * n_active * cell.global_batch
+    return total / n_devices
+
+
+def decode_kv_bytes_per_device(arch: str, shape: str,
+                               n_devices: int) -> Optional[float]:
+    """Decode is memory-bound on the KV/state cache read: bytes of cache
+    touched per step (the minimum HBM traffic for one decode step)."""
+    cell = SHAPES[shape]
+    if cell.kind != "decode":
+        return None
+    cfg = configs.get_config(arch)
+    from repro.models import transformer as tf
+    import numpy as np
+    spec = tf.cache_spec(cfg, cell.global_batch, cell.seq_len)
+    total = sum(int(np.prod(s.shape)) * s.dtype.itemsize
+                for s in __import__("jax").tree.leaves(spec))
+    return total / n_devices
+
+
+def analyze_cell(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    n = rec["n_devices"]
+    arch, shape = rec["arch"], rec["shape"]
+    flops = rec["hlo_weighted"]["flops"]
+    hbytes = rec["hlo_weighted"]["bytes_accessed"]
+    cbytes = rec["collectives"]["total_operand_bytes"]
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbytes / HBM_BW
+    t_coll = cbytes / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    mflops = model_flops_per_device(arch, shape, n)
+    t_model = mflops / PEAK_FLOPS
+    t_dom = terms[dominant]
+    out = {
+        "arch": arch, "shape": shape, "mesh": rec["mesh"],
+        "n_devices": n,
+        "compute_s": t_compute, "memory_s": t_memory,
+        "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_dev": mflops,
+        "hlo_flops_per_dev": flops,
+        "useful_ratio": mflops / flops if flops else 0.0,
+        "roofline_fraction": (t_model / t_dom) if t_dom > 0 else 0.0,
+        "temp_gib": rec["memory"]["temp_bytes"] / 2**30,
+        "args_gib": rec["memory"]["argument_bytes"] / 2**30,
+        "fits_hbm16": (rec["memory"]["temp_bytes"] +
+                       rec["memory"]["argument_bytes"]) < 16 * 2**30,
+        "compile_s": rec["compile_s"],
+    }
+    kvb = decode_kv_bytes_per_device(arch, shape, n)
+    if kvb is not None:
+        out["kv_bytes_per_dev"] = kvb
+        out["kv_floor_s"] = kvb / HBM_BW
+    return out
+
+
+def load(results_dir: str = "results/dryrun") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        row = analyze_cell(rec)
+        if row is not None:
+            row["tag"] = os.path.basename(path)[:-5]
+            rows.append(row)
+    return rows
+
+
+def fmt_table(rows: List[Dict], mesh: str = "single") -> str:
+    hdr = ("| arch | shape | compute s | memory s | coll s | dominant | "
+           "useful | roofline frac | temp GiB | fits 16G |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.3f} | "
+            f"{r['roofline_fraction']:.3f} | {r['temp_gib']:.1f} | "
+            f"{'Y' if r['fits_hbm16'] else 'N'} |")
+    return "\n".join(lines)
+
+
+def main(results_dir: str = "results/dryrun"):
+    rows = load(results_dir)
+    cols = ["arch", "shape", "mesh", "compute_s", "memory_s",
+            "collective_s", "dominant", "useful_ratio",
+            "roofline_fraction", "temp_gib", "fits_hbm16"]
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(
+            f"{r[c]:.4g}" if isinstance(r[c], float) else str(r[c])
+            for c in cols))
+    os.makedirs("results", exist_ok=True)
+    with open("results/roofline.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

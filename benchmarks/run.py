@@ -1,0 +1,86 @@
+"""Benchmark harness: one module per paper table/figure + system benches.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--full]
+
+Emits ``name,us_per_call,derived`` CSV lines per the harness contract,
+then each table's own CSV. Roofline rows are produced only when
+results/dryrun/*.json exist (run launch/dryrun.py first).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced training steps (CI-sized)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale training for table1/fig2 accuracy")
+    args = ap.parse_args(argv)
+
+    from benchmarks import fig2, kernel_bench, roofline, table1
+
+    print("name,us_per_call,derived")
+    summary = []
+
+    t0 = time.perf_counter()
+    t1_rows = table1.run(quick=args.quick)
+    dt = (time.perf_counter() - t0) * 1e6
+    acc_gap = max(abs(r["accuracy"] - r["paper_accuracy"])
+                  for r in t1_rows if r["theta"] != "BF-0.1")
+    dim_exact = all(r["input_dim"] == r["paper_input_dim"]
+                    for r in t1_rows)
+    print(f"table1,{dt:.0f},input_dim_exact={dim_exact}"
+          f";max_acc_gap={acc_gap:.3f}")
+    summary.append(("table1", t1_rows))
+
+    t0 = time.perf_counter()
+    f2_rows = fig2.run(train=False)
+    dt = (time.perf_counter() - t0) * 1e6
+    c = [r["memory_mb"] for r in f2_rows if r["mode"] == "C-LMBF"]
+    l = [r["memory_mb"] for r in f2_rows if r["mode"] == "LMBF"]
+    print(f"fig2,{dt:.0f},clmbf_mean_mb={sum(c)/len(c):.2f}"
+          f";lmbf_mean_mb={sum(l)/len(l):.2f}")
+    summary.append(("fig2", f2_rows))
+
+    t0 = time.perf_counter()
+    k_rows = kernel_bench.run()
+    dt = (time.perf_counter() - t0) * 1e6
+    for r in k_rows:
+        print(f"kernel_{r['name']},{r.get('ref_us', 0):.0f},"
+              f"vmem_kb={r['vmem_working_set_kb']:.0f}")
+    summary.append(("kernels", k_rows))
+
+    if glob.glob("results/dryrun/*.json"):
+        t0 = time.perf_counter()
+        rl_rows = roofline.load()
+        dt = (time.perf_counter() - t0) * 1e6
+        n_fit = sum(1 for r in rl_rows if r["fits_hbm16"])
+        print(f"roofline,{dt:.0f},cells={len(rl_rows)}"
+              f";fit_16g={n_fit}")
+        summary.append(("roofline", rl_rows))
+    else:
+        print("roofline,0,skipped_no_dryrun_results")
+
+    print()
+    for name, rows in summary:
+        print(f"## {name}")
+        if rows:
+            cols = []                     # union, first-seen order
+            for r in rows:
+                cols += [c for c in r if c not in cols]
+            print(",".join(cols))
+            for r in rows:
+                print(",".join(
+                    f"{r[c]:.4g}" if isinstance(r.get(c), float)
+                    else str(r.get(c, "")) for c in cols))
+        print()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

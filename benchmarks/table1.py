@@ -1,0 +1,88 @@
+"""Paper Table 1: C-LMBF (theta sweep) vs LMBF vs classic BF.
+
+Memory / params / input-dim columns are exact analytic reproductions
+(tests/test_table1_accounting.py); accuracy is measured by training on
+synthetic relations with the paper's published per-column cardinality
+profiles (the real datasets are not redistributable — DESIGN.md §1).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.configs import clmbf
+from repro.core import bloom, existence, memory
+from repro.data import tuples
+
+
+def run(steps: int = 8_000, n_records: int = 100_000, quick: bool = False
+        ) -> List[dict]:
+    """Training protocol (§4 'train until convergence'):
+
+    * synthetic relations with the published per-column cardinalities;
+      ``noise=0.15`` calibrated so the *uncompressed* LMBF reproduces the
+      paper's 0.98 accuracy band (the real data is not redistributable —
+      the measured quantity is then the paper's actual claim, the
+      accuracy cost of compression at each theta);
+    * 400k sampled positives/negatives (full record coverage — one-shot
+      60k sampling caps per-ID-embedding models at the ~45% of records
+      ever seen in training).
+    """
+    rows = []
+    n_samp = 400_000
+    if quick:
+        steps, n_records, n_samp = 600, 20_000, 60_000
+    for exp in clmbf.TABLE1:
+        ds = tuples.synthesize(exp.cards, n_records=n_records,
+                               seed=hash(exp.dataset) % 1000, noise=0.15)
+        t0 = time.perf_counter()
+        idx = existence.fit(
+            ds, theta=exp.effective_theta, ns=exp.ns, hidden=exp.hidden,
+            settings=existence.TrainSettings(
+                steps=steps, batch_size=4096, learning_rate=3e-3,
+                n_pos=n_samp, n_neg=n_samp))
+        dt = time.perf_counter() - t0
+        mem = idx.memory
+        paper = memory.PAPER_TABLE1[exp.dataset][exp.theta]
+        rows.append({
+            "dataset": exp.dataset,
+            "theta": exp.theta if exp.theta is not None else "LMBF",
+            "accuracy": round(idx.train_log["accuracy"], 3),
+            "paper_accuracy": paper[0],
+            "memory_mb": round(mem.keras_equiv_mb, 3),
+            "paper_memory_mb": paper[1],
+            "nn_params": mem.nn_params,
+            "paper_nn_params": paper[2],
+            "input_dim": mem.input_dim,
+            "paper_input_dim": paper[3],
+            "fixup_mb": round(idx.fixup_filter.size_mb, 4),
+            "train_s": round(dt, 1),
+        })
+    # classic BF row (the paper's BF-0.1 over ~5M subset combinations)
+    p = bloom.params_for(clmbf.BF_N_KEYS, clmbf.BF_FPR)
+    rows.append({
+        "dataset": "both", "theta": "BF-0.1", "accuracy": 1.0,
+        "paper_accuracy": 1.0,
+        "memory_mb": round(p.size_mb, 2), "paper_memory_mb": 6.10,
+        "nn_params": 0, "paper_nn_params": 0,
+        "input_dim": 0, "paper_input_dim": 0, "fixup_mb": 0.0,
+        "train_s": 0.0,
+    })
+    return rows
+
+
+def main(quick: bool = False):
+    rows = run(quick=quick)
+    cols = ["dataset", "theta", "accuracy", "paper_accuracy", "memory_mb",
+            "paper_memory_mb", "nn_params", "paper_nn_params",
+            "input_dim", "paper_input_dim", "fixup_mb", "train_s"]
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

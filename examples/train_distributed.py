@@ -1,0 +1,50 @@
+"""Distributed training demo: REAL sharded execution (not a dry-run) on
+an 8-device host mesh, with a mid-run preemption + elastic restart onto
+a DIFFERENT mesh shape from the checkpoint.
+
+This exercises the full production path numerically: pjit'd train step
+with FSDP/TP shardings, sharded data ingestion, atomic checkpointing,
+reshard-on-load. The placeholder-device flag makes the single CPU
+pretend to be 8 devices — the program and shardings are identical to a
+real 8-chip slice.
+
+    PYTHONPATH=src python examples/train_distributed.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch.train import train
+from repro.sharding import rules as R
+
+CKPT = "/tmp/repro_distributed_demo"
+
+
+def main():
+    import shutil
+    shutil.rmtree(CKPT, ignore_errors=True)
+    cfg = configs.get_smoke_config("smollm-360m")
+
+    # ---- phase 1: train 30 steps on a (4 data x 2 model) mesh --------
+    mesh_a = jax.make_mesh((4, 2), ("data", "model"))
+    out1 = train(cfg, mesh=mesh_a, steps=30, global_batch=8, seq_len=128,
+                 ckpt_dir=CKPT, ckpt_every=10, log_every=10)
+    print(f"phase 1 (4x2 mesh): loss {out1['final']['loss']:.4f}")
+
+    # ---- phase 2: "node failure" -> restart on a (2 data x 4 model)
+    # mesh from the latest committed checkpoint (elastic reshard) ------
+    mesh_b = jax.make_mesh((2, 4), ("data", "model"))
+    out2 = train(cfg, mesh=mesh_b, steps=60, global_batch=8, seq_len=128,
+                 ckpt_dir=CKPT, ckpt_every=20, log_every=10)
+    print(f"phase 2 (2x4 mesh, resumed): loss {out2['final']['loss']:.4f} "
+          f"after {out2['steps_run']} more steps")
+    assert out2["steps_run"] == 30, "should resume from step 30"
+    assert out2["final"]["loss"] < out1["final"]["loss"] + 0.5
+
+
+if __name__ == "__main__":
+    main()

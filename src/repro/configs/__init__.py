@@ -1,0 +1,30 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Each module exposes ``config(**overrides)`` (the exact published shape)
+and ``smoke_config(**overrides)`` (a reduced same-family variant for CPU
+smoke tests). The paper's own C-LMBF configs live in ``clmbf.py``.
+"""
+from repro.configs import (deepseek_coder_33b, deepseek_v3_671b, glm4_9b,
+                           grok_1_314b, hubert_xlarge, jamba_v01_52b,
+                           qwen2_7b, qwen2_vl_72b, rwkv6_1_6b, smollm_360m)
+from repro.configs.base import (MambaConfig, MLAConfig, ModelConfig,
+                                MoEConfig, RWKVConfig)
+from repro.configs.shapes import (SHAPE_ORDER, SHAPES, ShapeCell,
+                                  live_cells, skip_reason)
+
+REGISTRY = {
+    m.ARCH_ID: m
+    for m in (hubert_xlarge, smollm_360m, deepseek_coder_33b, qwen2_7b,
+              glm4_9b, qwen2_vl_72b, deepseek_v3_671b, grok_1_314b,
+              jamba_v01_52b, rwkv6_1_6b)
+}
+
+ARCH_IDS = tuple(REGISTRY)
+
+
+def get_config(arch: str, **overrides) -> ModelConfig:
+    return REGISTRY[arch].config(**overrides)
+
+
+def get_smoke_config(arch: str, **overrides) -> ModelConfig:
+    return REGISTRY[arch].smoke_config(**overrides)

@@ -1,0 +1,172 @@
+"""Model configuration dataclasses shared by every architecture family."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-style multi-head latent attention dims."""
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+    @property
+    def qk_dim(self) -> int:
+        return self.qk_nope_dim + self.qk_rope_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0                 # shared (always-on) experts
+    first_dense: int = 0              # leading layers with dense FFN
+    layer_period: int = 1             # MoE every `period` layers ...
+    layer_offset: int = 0             # ... at indices i % period == offset
+    capacity_factor: float = 1.25
+    group_tokens: int = 512           # dispatch-einsum token group size
+    aux_loss_weight: float = 0.01
+    router_score: str = "softmax"     # "softmax" | "sigmoid" (deepseek-v3)
+    dispatch: str = "einsum"          # "einsum" | "scatter" (see models/moe)
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: Optional[int] = None     # default ceil(d_model / 16)
+    chunk: int = 256                  # scan chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64
+    decay_lora: int = 64
+    mix_lora: int = 32
+    gate_lora: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: Optional[int] = None      # default d_model // n_heads
+
+    # --- attention ---
+    attn_type: str = "gqa"            # gqa | mla | none
+    causal: bool = True
+    rope_theta: float = 10000.0
+    mrope_sections: Optional[Tuple[int, int, int]] = None   # qwen2-vl
+    qkv_bias: bool = False
+    attn_softcap: Optional[float] = None
+    mla: Optional[MLAConfig] = None
+    mla_absorb: bool = True           # absorbed-latent MLA decode (§Perf)
+    attn_chunk: int = 1024            # kv-chunked (flash-pattern) attention
+    kv_cache_dtype: object = None     # None = dtype; f8_e4m3 halves decode
+                                      # cache bytes (§Perf cell C, iter 3)
+
+    # --- ffn ---
+    ffn_type: str = "swiglu"          # swiglu | gelu
+    norm_type: str = "rmsnorm"        # rmsnorm | layernorm
+
+    # --- mixture of experts ---
+    moe: Optional[MoEConfig] = None
+
+    # --- hybrid / ssm ---
+    mamba: Optional[MambaConfig] = None
+    attn_layer_period: int = 0        # jamba: attention at i%period==offset
+    attn_layer_offset: int = 0
+    rwkv: Optional[RWKVConfig] = None
+
+    # --- embedding / head (the paper's technique plugs in here) ---
+    embedding: str = "dense"          # dense | compressed
+    embed_ns: int = 2                 # QR subcolumns when compressed
+    embed_combine: str = "sum"        # sum | concat
+    tie_embeddings: bool = True
+    embed_scale: Optional[float] = None   # grok multiplies by sqrt-ish const
+    logit_softcap: Optional[float] = None
+    mtp_depth: int = 0                # deepseek-v3 multi-token prediction
+
+    # --- input modality ---
+    input_kind: str = "tokens"        # tokens | frames (audio) | tokens3d (vlm)
+
+    # --- numerics / training ---
+    dtype: object = jnp.bfloat16      # activations
+    param_dtype: object = jnp.bfloat16
+    remat: str = "full"               # full | none
+    scan_layers: bool = True
+
+    def __post_init__(self):
+        if self.d_head is None:
+            object.__setattr__(self, "d_head",
+                               self.d_model // max(self.n_heads, 1))
+
+    # ----- derived layer pattern -----
+    def layer_kinds(self) -> Tuple[Tuple[str, str], ...]:
+        """Per layer: (mixer, ffn) with mixer in {attn, mla, mamba, rwkv},
+        ffn in {dense, moe}."""
+        kinds = []
+        for i in range(self.n_layers):
+            if self.rwkv is not None:
+                mixer = "rwkv"
+            elif self.mamba is not None and self.attn_layer_period:
+                mixer = ("attn" if i % self.attn_layer_period ==
+                         self.attn_layer_offset else "mamba")
+            elif self.attn_type == "mla":
+                mixer = "mla"
+            else:
+                mixer = "attn"
+            ffn = "dense"
+            if self.moe is not None:
+                if (i >= self.moe.first_dense and
+                        i % self.moe.layer_period == self.moe.layer_offset):
+                    ffn = "moe"
+            kinds.append((mixer, ffn))
+        return tuple(kinds)
+
+    def scan_groups(self) -> Tuple[Tuple[Tuple[str, str], int], ...]:
+        """Greedy grouping of the layer pattern into (unit, repeats) so the
+        stack lowers to a few lax.scans. A unit is a maximal repeating
+        subsequence (e.g. jamba's period-8 block)."""
+        kinds = list(self.layer_kinds())
+        groups = []
+        i = 0
+        n = len(kinds)
+        while i < n:
+            best = (1, 1)  # (unit_len, repeats)
+            for unit_len in range(1, min(16, n - i) + 1):
+                unit = kinds[i:i + unit_len]
+                reps = 1
+                while (i + (reps + 1) * unit_len <= n and
+                       kinds[i + reps * unit_len:
+                             i + (reps + 1) * unit_len] == unit):
+                    reps += 1
+                if unit_len > 1 and reps < 2:
+                    continue  # an unrepeated multi-layer unit never stacks
+                # prefer the grouping covering the most layers, shortest unit
+                if reps * unit_len > best[0] * best[1] or (
+                        reps * unit_len == best[0] * best[1] and
+                        unit_len < best[0]):
+                    best = (unit_len, reps)
+            unit_len, reps = best
+            groups.append((tuple(kinds[i:i + unit_len]), reps))
+            i += unit_len * reps
+        return tuple(groups)
+
+    @property
+    def uses_cache(self) -> bool:
+        return self.causal   # encoder-only archs have no decode path

@@ -1,0 +1,59 @@
+"""The paper's own C-LMBF / LMBF experiment configs (Table 1, Figure 2).
+
+Datasets are synthesized with the exact published per-column cardinality
+profiles (core/memory.py); thetas and NN widths follow §4.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core import memory
+
+AIRPLANE_CARDS = memory.AIRPLANE_CARDS
+DMV_CARDS = memory.DMV_CARDS
+
+
+@dataclasses.dataclass(frozen=True)
+class CLMBFExperiment:
+    dataset: str                    # "airplane" | "dmv"
+    theta: Optional[int]            # None = LMBF (no compression)
+    ns: int = 2
+    hidden: Tuple[int, ...] = (64,)
+    n_records: int = 100_000
+
+    @property
+    def cards(self) -> Tuple[int, ...]:
+        return AIRPLANE_CARDS if self.dataset == "airplane" else DMV_CARDS
+
+    @property
+    def effective_theta(self) -> int:
+        if self.theta is None:
+            return memory.no_compression_theta(self.cards)
+        return self.theta
+
+
+# Table 1 rows
+TABLE1 = [
+    CLMBFExperiment("airplane", 3000),
+    CLMBFExperiment("airplane", 5500),
+    CLMBFExperiment("airplane", 8000),
+    CLMBFExperiment("airplane", None),
+    CLMBFExperiment("dmv", 100),
+    CLMBFExperiment("dmv", 1000),
+    CLMBFExperiment("dmv", 2000),
+    CLMBFExperiment("dmv", None),
+]
+
+# Figure 2: memory vs NN width sweep (theta fixed per dataset)
+FIG2_WIDTHS = (16, 32, 64, 128, 256)
+FIG2 = ([CLMBFExperiment("airplane", 5500, hidden=(w,))
+         for w in FIG2_WIDTHS] +
+        [CLMBFExperiment("airplane", None, hidden=(w,))
+         for w in FIG2_WIDTHS] +
+        [CLMBFExperiment("dmv", 100, hidden=(w,)) for w in FIG2_WIDTHS] +
+        [CLMBFExperiment("dmv", None, hidden=(w,)) for w in FIG2_WIDTHS])
+
+# classic-BF baseline: ~5M unique subset combinations at FPR 0.1 (§4)
+BF_N_KEYS = 5_000_000
+BF_FPR = 0.1

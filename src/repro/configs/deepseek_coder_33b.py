@@ -1,0 +1,30 @@
+"""deepseek-coder-33b [dense]: 62L d_model=7168 56H (GQA kv=8) d_ff=19200
+vocab=32256 — llama-arch. [arXiv:2401.14196; hf]
+"""
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "deepseek-coder-33b"
+
+
+def config(**overrides) -> ModelConfig:
+    kw = dict(
+        name=ARCH_ID,
+        family="dense",
+        n_layers=62,
+        d_model=7168,
+        n_heads=56,
+        n_kv_heads=8,
+        d_ff=19200,
+        vocab=32256,
+        tie_embeddings=False,
+        rope_theta=100000.0,
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+def smoke_config(**overrides) -> ModelConfig:
+    kw = dict(n_layers=2, d_model=64, n_heads=8, n_kv_heads=2, d_ff=160,
+              vocab=256)
+    kw.update(overrides)
+    return config(**kw)

@@ -1,0 +1,48 @@
+"""deepseek-v3-671b [moe]: 61L d_model=7168 128H d_ff=2048(expert)
+vocab=129280, MoE 1 shared + 256 routed top-8, MLA, MTP.
+[arXiv:2412.19437; hf]
+
+Published details carried over: MLA dims (q_lora 1536, kv_lora 512,
+nope 128 / rope 64, v_head 128), sigmoid router scores, 3 leading dense
+layers with d_ff 18432. Simplifications (DESIGN.md): aux-loss balancing
+instead of aux-loss-free bias update; ``mtp_depth=0`` in the dry-run cells
+(the MTP head is exercised in the smoke test).
+"""
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+ARCH_ID = "deepseek-v3-671b"
+
+
+def config(**overrides) -> ModelConfig:
+    kw = dict(
+        name=ARCH_ID,
+        family="moe",
+        n_layers=61,
+        d_model=7168,
+        n_heads=128,
+        n_kv_heads=128,
+        d_ff=18432,                      # dense (first 3) layers
+        vocab=129280,
+        attn_type="mla",
+        mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512, qk_nope_dim=128,
+                      qk_rope_dim=64, v_head_dim=128),
+        moe=MoEConfig(n_experts=256, top_k=8, d_ff_expert=2048, n_shared=1,
+                      first_dense=3, router_score="sigmoid",
+                      capacity_factor=1.25),
+        tie_embeddings=False,
+        mtp_depth=0,
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+def smoke_config(**overrides) -> ModelConfig:
+    kw = dict(n_layers=3, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+              vocab=256,
+              mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16, qk_nope_dim=16,
+                            qk_rope_dim=8, v_head_dim=16),
+              moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=32, n_shared=1,
+                            first_dense=1, router_score="sigmoid"),
+              mtp_depth=1)
+    kw.update(overrides)
+    return config(**kw)

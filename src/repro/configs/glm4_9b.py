@@ -1,0 +1,33 @@
+"""glm4-9b [dense]: 40L d_model=4096 32H (GQA kv=2) d_ff=13696
+vocab=151552 — RoPE, GQA. [hf:THUDM/glm-4-9b; hf]
+
+Simplification (DESIGN.md): GLM4's half-rotary RoPE is implemented as full
+rotary (the sharding/memory behaviour is identical).
+"""
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "glm4-9b"
+
+
+def config(**overrides) -> ModelConfig:
+    kw = dict(
+        name=ARCH_ID,
+        family="dense",
+        n_layers=40,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=2,
+        d_ff=13696,
+        vocab=151552,
+        tie_embeddings=False,
+        rope_theta=10000.0,
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+def smoke_config(**overrides) -> ModelConfig:
+    kw = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=144,
+              vocab=512)
+    kw.update(overrides)
+    return config(**kw)

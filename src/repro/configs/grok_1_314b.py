@@ -1,0 +1,40 @@
+"""grok-1-314b [moe]: 64L d_model=6144 48H (GQA kv=8) d_ff=32768
+vocab=131072, MoE 8 experts top-2. [hf:xai-org/grok-1; unverified]
+
+Public-config details: attention-logit soft-cap 30, output-logit soft-cap
+30, embedding multiplier sqrt(d_model).
+"""
+import math
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+ARCH_ID = "grok-1-314b"
+
+
+def config(**overrides) -> ModelConfig:
+    kw = dict(
+        name=ARCH_ID,
+        family="moe",
+        n_layers=64,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=8,
+        d_ff=32768,
+        vocab=131072,
+        moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=32768,
+                      capacity_factor=1.25),
+        attn_softcap=30.0,
+        logit_softcap=30.0,
+        embed_scale=math.sqrt(6144.0),
+        tie_embeddings=True,
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+def smoke_config(**overrides) -> ModelConfig:
+    kw = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+              vocab=256, embed_scale=math.sqrt(64.0),
+              moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=128))
+    kw.update(overrides)
+    return config(**kw)

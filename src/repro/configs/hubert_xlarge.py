@@ -1,0 +1,38 @@
+"""hubert-xlarge [audio]: 48L d_model=1280 16H (kv=16) d_ff=5120 vocab=504.
+
+Encoder-only (bidirectional), same backbone as wav2vec2-XL. The conv
+feature extractor is a STUB: ``input_specs`` yields precomputed frame
+embeddings (B, T, 1280). Masked-prediction loss over 504 cluster ids.
+Simplifications (DESIGN.md): RoPE instead of conv positional embedding;
+pre-norm blocks. [arXiv:2106.07447; unverified]
+"""
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "hubert-xlarge"
+
+
+def config(**overrides) -> ModelConfig:
+    kw = dict(
+        name=ARCH_ID,
+        family="audio",
+        n_layers=48,
+        d_model=1280,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=5120,
+        vocab=504,
+        causal=False,
+        ffn_type="gelu",
+        norm_type="layernorm",
+        tie_embeddings=False,
+        input_kind="frames",
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+def smoke_config(**overrides) -> ModelConfig:
+    kw = dict(n_layers=3, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+              vocab=32)
+    kw.update(overrides)
+    return config(**kw)

@@ -1,0 +1,42 @@
+"""jamba-v0.1-52b [hybrid]: 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=65536, MoE 16e top-2 — Mamba+attention 1:7 interleave.
+[arXiv:2403.19887; hf]
+
+Period-8 block: attention at layer index 4 of each period (1 attn : 7
+mamba); MoE every other layer (odd indices). Mamba-1 with d_state 16,
+d_conv 4, expand 2, inner dt/B/C RMSNorms.
+"""
+from repro.configs.base import MambaConfig, ModelConfig, MoEConfig
+
+ARCH_ID = "jamba-v0.1-52b"
+
+
+def config(**overrides) -> ModelConfig:
+    kw = dict(
+        name=ARCH_ID,
+        family="hybrid",
+        n_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        d_ff=14336,
+        vocab=65536,
+        moe=MoEConfig(n_experts=16, top_k=2, d_ff_expert=14336,
+                      layer_period=2, layer_offset=1),
+        mamba=MambaConfig(d_state=16, d_conv=4, expand=2),
+        attn_layer_period=8,
+        attn_layer_offset=4,
+        tie_embeddings=False,
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+def smoke_config(**overrides) -> ModelConfig:
+    kw = dict(n_layers=8, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+              vocab=256,
+              moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=128,
+                            layer_period=2, layer_offset=1),
+              mamba=MambaConfig(d_state=8, d_conv=4, expand=2, chunk=16))
+    kw.update(overrides)
+    return config(**kw)

@@ -1,0 +1,31 @@
+"""qwen2-7b [dense]: 28L d_model=3584 28H (GQA kv=4) d_ff=18944
+vocab=152064 — GQA with QKV bias. [arXiv:2407.10671; hf]
+"""
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "qwen2-7b"
+
+
+def config(**overrides) -> ModelConfig:
+    kw = dict(
+        name=ARCH_ID,
+        family="dense",
+        n_layers=28,
+        d_model=3584,
+        n_heads=28,
+        n_kv_heads=4,
+        d_ff=18944,
+        vocab=152064,
+        qkv_bias=True,
+        tie_embeddings=False,
+        rope_theta=1000000.0,
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+def smoke_config(**overrides) -> ModelConfig:
+    kw = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=192,
+              vocab=512)
+    kw.update(overrides)
+    return config(**kw)

@@ -1,0 +1,38 @@
+"""qwen2-vl-72b [vlm]: 80L d_model=8192 64H (GQA kv=8) d_ff=29568
+vocab=152064 — M-RoPE, dynamic resolution. [arXiv:2409.12191; hf]
+
+Backbone only: the vision frontend is a STUB — ``input_specs`` provides
+token ids plus precomputed (t, h, w) position ids; dynamic resolution
+enters only through those ids. M-RoPE sections (16, 24, 24) frequency
+pairs (= head_dim/2 = 64).
+"""
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "qwen2-vl-72b"
+
+
+def config(**overrides) -> ModelConfig:
+    kw = dict(
+        name=ARCH_ID,
+        family="vlm",
+        n_layers=80,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=29568,
+        vocab=152064,
+        qkv_bias=True,
+        tie_embeddings=False,
+        rope_theta=1000000.0,
+        mrope_sections=(16, 24, 24),
+        input_kind="tokens3d",
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+def smoke_config(**overrides) -> ModelConfig:
+    kw = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=192,
+              vocab=512, mrope_sections=(2, 3, 3))
+    kw.update(overrides)
+    return config(**kw)

@@ -1,0 +1,36 @@
+"""rwkv6-1.6b [ssm]: 24L d_model=2048 (attention-free) d_ff=7168
+vocab=65536 — "Finch", data-dependent decay. [arXiv:2404.05892; unverified]
+
+head_dim 64 (32 wkv heads). The channel-mix squared-ReLU FFN uses d_ff
+7168 (3.5x). All four shape cells are live, including long_500k (state is
+O(1) in sequence length).
+"""
+from repro.configs.base import ModelConfig, RWKVConfig
+
+ARCH_ID = "rwkv6-1.6b"
+
+
+def config(**overrides) -> ModelConfig:
+    kw = dict(
+        name=ARCH_ID,
+        family="ssm",
+        n_layers=24,
+        d_model=2048,
+        n_heads=32,                     # d_model / head_dim
+        n_kv_heads=32,
+        d_ff=7168,
+        vocab=65536,
+        attn_type="none",
+        rwkv=RWKVConfig(head_dim=64, decay_lora=64, mix_lora=32),
+        tie_embeddings=False,
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+def smoke_config(**overrides) -> ModelConfig:
+    kw = dict(n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, d_ff=128,
+              vocab=256, rwkv=RWKVConfig(head_dim=32, decay_lora=16,
+                                         mix_lora=8))
+    kw.update(overrides)
+    return config(**kw)

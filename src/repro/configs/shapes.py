@@ -1,0 +1,49 @@
+"""The four assigned input-shape cells + per-family skip rules.
+
+``train_*`` lowers ``train_step``; ``prefill_*`` lowers a full forward
+(encoder archs) or cache-filling prefill (decoder archs); ``decode_*`` /
+``long_*`` lower ``serve_step`` — ONE new token against a KV/state cache
+of ``seq_len``. ``long_500k`` requires sub-quadratic attention and is
+live only for SSM/hybrid archs (skips are *documented*, per task rules).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+SHAPE_ORDER = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def skip_reason(cfg: ModelConfig, shape: str) -> Optional[str]:
+    """None if the (arch, shape) cell is live; else the documented skip."""
+    cell = SHAPES[shape]
+    if not cfg.causal and cell.kind == "decode":
+        return "encoder-only arch has no decode step"
+    if shape == "long_500k":
+        subquadratic = cfg.mamba is not None or cfg.rwkv is not None
+        if not subquadratic:
+            return ("pure full-attention arch: 500k decode needs "
+                    "sub-quadratic attention (documented skip)")
+    return None
+
+
+def live_cells(cfg: ModelConfig):
+    return [s for s in SHAPE_ORDER if skip_reason(cfg, s) is None]

@@ -1,0 +1,33 @@
+"""smollm-360m [dense]: 32L d_model=960 15H (GQA kv=5) d_ff=2560
+vocab=49152 — llama-arch small. [hf:HuggingFaceTB/SmolLM-360M; hf]
+
+The paper-representative hillclimb cell: the embedding + tied head are the
+largest single weight class (47.2M of ~360M params), so this is where the
+paper's compression technique (``embedding="compressed"``) bites hardest.
+"""
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "smollm-360m"
+
+
+def config(**overrides) -> ModelConfig:
+    kw = dict(
+        name=ARCH_ID,
+        family="dense",
+        n_layers=32,
+        d_model=960,
+        n_heads=15,
+        n_kv_heads=5,
+        d_ff=2560,
+        vocab=49152,
+        tie_embeddings=True,
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+def smoke_config(**overrides) -> ModelConfig:
+    kw = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+              vocab=256)
+    kw.update(overrides)
+    return config(**kw)

@@ -1,0 +1,4 @@
+# The paper's primary contribution: lossless input compression for learned
+# (multidimensional) Bloom filters, plus the full existence-index system
+# around it (classic BF, LMBF/C-LMBF models, fixup filter, memory accounting).
+from repro.core import bloom, compression, existence, fixup, lmbf, memory

@@ -1,0 +1,113 @@
+"""Classic Bloom filter over multidimensional tuples, JAX-native.
+
+The bit array is packed ``uint32``; hashing is murmur3-style 32-bit mixing
+with double hashing (Kirsch–Mitzenmacher) for the ``h`` probe positions.
+Insertion happens host-side (``np.bitwise_or.at`` — a build-time operation);
+querying is the hot path and runs in JAX (and in the ``kernels/bloom_query``
+Pallas kernel, which keeps the packed bitset VMEM-resident on TPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_C1 = jnp.uint32(0xCC9E2D51)
+_C2 = jnp.uint32(0x1B873593)
+_GOLDEN = jnp.uint32(0x9E3779B9)
+
+
+def _rotl32(x, r):
+    return (x << jnp.uint32(r)) | (x >> jnp.uint32(32 - r))
+
+
+def fmix32(h):
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> jnp.uint32(13))
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> jnp.uint32(16))
+    return h
+
+
+def hash_tuples(ids, seed: int) -> jax.Array:
+    """ids: (..., n_cols) int32 -> (...,) uint32 murmur3-style tuple hash."""
+    ids = jnp.asarray(ids).astype(jnp.uint32)
+    h = jnp.full(ids.shape[:-1], jnp.uint32(seed))
+    n = ids.shape[-1]
+    for i in range(n):
+        k = ids[..., i] ^ (jnp.uint32(i + 1) * _GOLDEN)
+        k = k * _C1
+        k = _rotl32(k, 15)
+        k = k * _C2
+        h = h ^ k
+        h = _rotl32(h, 13)
+        h = h * jnp.uint32(5) + jnp.uint32(0xE6546B64)
+    return fmix32(h ^ jnp.uint32(n))
+
+
+@dataclasses.dataclass(frozen=True)
+class BloomParams:
+    m_bits: int
+    n_hashes: int
+
+    @property
+    def n_words(self) -> int:
+        return (self.m_bits + 31) // 32
+
+    @property
+    def size_bytes(self) -> int:
+        return self.n_words * 4
+
+    @property
+    def size_mb(self) -> float:
+        return self.size_bytes / (1024.0 * 1024.0)
+
+
+def params_for(n_keys: int, fpr: float) -> BloomParams:
+    """Optimal sizing: m = -n ln p / ln2^2 ; h = (m/n) ln 2."""
+    m = int(math.ceil(-n_keys * math.log(fpr) / (math.log(2) ** 2)))
+    m = max(m, 64)
+    h = max(1, int(round((m / max(n_keys, 1)) * math.log(2))))
+    return BloomParams(m_bits=m, n_hashes=h)
+
+
+def empty(params: BloomParams) -> np.ndarray:
+    return np.zeros(params.n_words, dtype=np.uint32)
+
+
+def probe_positions(ids, params: BloomParams) -> jax.Array:
+    """(..., n_cols) -> (..., h) uint32 bit positions (double hashing)."""
+    h1 = hash_tuples(ids, seed=0x0000A5A5)
+    h2 = hash_tuples(ids, seed=0x00005EED) | jnp.uint32(1)
+    ks = jnp.arange(params.n_hashes, dtype=jnp.uint32)
+    pos = (h1[..., None] + ks * h2[..., None]) % jnp.uint32(params.m_bits)
+    return pos
+
+
+def add(bits: np.ndarray, ids, params: BloomParams) -> np.ndarray:
+    """Host-side insertion (build-time). Returns the mutated array."""
+    pos = np.asarray(probe_positions(ids, params)).reshape(-1)
+    words = (pos >> 5).astype(np.int64)
+    masks = (np.uint32(1) << (pos & 31).astype(np.uint32))
+    np.bitwise_or.at(bits, words, masks)
+    return bits
+
+
+def query(bits, ids, params: BloomParams) -> jax.Array:
+    """(..., n_cols) -> (...,) bool. JAX reference implementation."""
+    bits = jnp.asarray(bits)
+    pos = probe_positions(ids, params)                 # (..., h)
+    words = jnp.take(bits, (pos >> jnp.uint32(5)).astype(jnp.int32), axis=0)
+    hit = (words >> (pos & jnp.uint32(31))) & jnp.uint32(1)
+    return jnp.all(hit == jnp.uint32(1), axis=-1)
+
+
+def fpr_estimate(params: BloomParams, n_keys: int) -> float:
+    """Theoretical FPR after inserting n_keys."""
+    return (1.0 - math.exp(-params.n_hashes * n_keys / params.m_bits)
+            ) ** params.n_hashes

@@ -1,0 +1,122 @@
+"""End-to-end existence index: C-LMBF/LMBF model + fixup filter.
+
+``ExistenceIndex.fit`` trains the classifier on sampled positives/negatives,
+builds the fixup filter from residual false negatives, and exposes
+``query`` with the Bloom-filter contract: **no false negatives** on the
+indexed positives (property-tested in tests/test_existence.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compression as comp, fixup, lmbf, memory
+from repro.data import tuples as tuples_lib
+from repro.optim import Adam
+
+
+@dataclasses.dataclass
+class TrainSettings:
+    steps: int = 600
+    batch_size: int = 512
+    learning_rate: float = 1e-2
+    tau: float = 0.5
+    fixup_fpr: float = 0.01
+    seed: int = 0
+    wildcard_prob: float = 0.2
+    n_pos: int = 20_000
+    n_neg: int = 20_000
+
+
+@dataclasses.dataclass
+class ExistenceIndex:
+    cfg: lmbf.LMBFConfig
+    params: object
+    fixup_filter: fixup.FixupFilter
+    tau: float
+    train_log: dict
+
+    def scores(self, raw_ids) -> jax.Array:
+        enc = comp.encode(jnp.asarray(raw_ids, jnp.int32), self.cfg.plan)
+        return lmbf.predict(self.params, self.cfg, enc)
+
+    def query(self, raw_ids) -> jax.Array:
+        """(n, n_cols) raw ids -> (n,) bool membership answers."""
+        s = self.scores(raw_ids)
+        model_yes = s >= self.tau
+        backup_yes = self.fixup_filter.query(jnp.asarray(raw_ids, jnp.int32))
+        return model_yes | backup_yes
+
+    @property
+    def memory(self) -> memory.ModelMemory:
+        return memory.accounting(self.cfg)
+
+    @property
+    def total_mb(self) -> float:
+        return self.memory.weights_mb + self.fixup_filter.size_mb
+
+
+def fit(ds: tuples_lib.TupleDataset, theta: int, ns: int = 2,
+        hidden: Tuple[int, ...] = (64,), onehot_max: int = 0,
+        settings: Optional[TrainSettings] = None) -> ExistenceIndex:
+    st = settings or TrainSettings()
+    plan = comp.make_plan(ds.cards, theta=theta, ns=ns)
+    cfg = lmbf.LMBFConfig(plan=plan, hidden=hidden, onehot_max=onehot_max)
+
+    ids, labels = tuples_lib.make_training_set(
+        ds, st.n_pos, st.n_neg, st.seed, st.wildcard_prob)
+    enc = comp.encode_np(ids, plan)
+
+    key = jax.random.key(st.seed)
+    params = lmbf.init(cfg, key)
+    opt = Adam(learning_rate=st.learning_rate, grad_clip_norm=1.0)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(params, opt_state, batch_ids, batch_labels):
+        loss, grads = jax.value_and_grad(lmbf.bce_loss)(
+            params, cfg, batch_ids, batch_labels)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    rng = np.random.default_rng(st.seed + 7)
+    t0 = time.perf_counter()
+    losses = []
+    n = len(enc)
+    for i in range(st.steps):
+        sel = rng.integers(0, n, size=min(st.batch_size, n))
+        params, opt_state, loss = step(
+            params, opt_state, jnp.asarray(enc[sel]),
+            jnp.asarray(labels[sel]))
+        if i % 50 == 0 or i == st.steps - 1:
+            losses.append((i, float(loss)))
+    train_s = time.perf_counter() - t0
+
+    # fixup from ALL indexed positives (wildcard-free records + sampled
+    # wildcard variants used in training)
+    pos_mask = labels > 0.5
+    pos_ids = ids[pos_mask]
+    all_pos = np.concatenate([ds.records, pos_ids], axis=0)
+    all_pos = np.unique(all_pos, axis=0)
+    scores = np.asarray(lmbf.predict(
+        params, cfg, jnp.asarray(comp.encode_np(all_pos, plan))))
+    fx = fixup.build(all_pos, scores, st.tau, st.fixup_fpr)
+
+    # held-out accuracy (fresh positives + negatives)
+    test_ids, test_labels = tuples_lib.make_training_set(
+        ds, 4096, 4096, st.seed + 1000, st.wildcard_prob)
+    test_scores = np.asarray(lmbf.predict(
+        params, cfg, jnp.asarray(comp.encode_np(test_ids, plan))))
+    acc = float(np.mean((test_scores >= st.tau) == (test_labels > 0.5)))
+
+    return ExistenceIndex(
+        cfg=cfg, params=params, fixup_filter=fx, tau=st.tau,
+        train_log={"losses": losses, "train_seconds": train_s,
+                   "accuracy": acc,
+                   "fn_count": fx.n_false_negatives,
+                   "steps": st.steps})

@@ -1,0 +1,98 @@
+"""Deterministic, resumable LM data pipeline.
+
+Batches are a pure function of ``(seed, step, host_shard)`` — there is no
+cursor to lose, so checkpoint/restart is *exactly-once* by construction:
+the iterator state is just the step integer, which rides inside the model
+checkpoint. Multi-host: each host materializes only its batch shard.
+
+The synthetic stream is a mixture of Zipf unigrams and a repeated-ngram
+process so small models have learnable structure (loss visibly drops in
+the 100M-scale example run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class LMStreamConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.1
+    ngram_repeat: float = 0.7      # prob of copying from `lag` back
+    lag: int = 64
+    n_hosts: int = 1
+    host_id: int = 0
+
+    @property
+    def host_batch(self) -> int:
+        assert self.global_batch % self.n_hosts == 0
+        return self.global_batch // self.n_hosts
+
+
+class LMStream:
+    """state == step; ``batch_at(step)`` is pure and random-access."""
+
+    def __init__(self, cfg: LMStreamConfig):
+        self.cfg = cfg
+        self.step = 0
+        # precompute a Zipf-ish CDF once (vocab can be 150k)
+        ranks = np.arange(1, cfg.vocab + 1, dtype=np.float64)
+        w = ranks ** (-cfg.zipf_a)
+        self._cdf = np.cumsum(w) / w.sum()
+
+    # ------------------------------------------------------------- state
+    def state_dict(self) -> Dict:
+        return {"step": self.step, "seed": self.cfg.seed}
+
+    def load_state_dict(self, state: Dict):
+        assert state["seed"] == self.cfg.seed, "seed mismatch on restore"
+        self.step = int(state["step"])
+
+    # ------------------------------------------------------------- batches
+    def _sample_tokens(self, rng: np.random.Generator, shape):
+        u = rng.random(shape)
+        toks = np.searchsorted(self._cdf, u).astype(np.int32)
+        return np.minimum(toks, self.cfg.vocab - 1)
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        c = self.cfg
+        rng = np.random.default_rng(
+            np.random.SeedSequence([c.seed, step, c.host_id]))
+        B, S = c.host_batch, c.seq_len
+        toks = self._sample_tokens(rng, (B, S + 1))
+        # repeated-ngram structure: with prob ngram_repeat, token t copies
+        # token t - lag  -> learnable long-range pattern
+        copy = rng.random((B, S + 1)) < c.ngram_repeat
+        copy[:, :c.lag] = False
+        idx = np.arange(S + 1)
+        src = np.clip(idx - c.lag, 0, None)
+        copied = toks[:, src]
+        toks = np.where(copy, copied, toks)
+        return {"tokens": toks[:, :-1].astype(np.int32),
+                "labels": toks[:, 1:].astype(np.int32)}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        b = self.batch_at(self.step)
+        self.step += 1
+        return b
+
+
+def frames_batch_at(step: int, *, batch: int, seq: int, d_model: int,
+                    vocab: int, seed: int = 0,
+                    mask_prob: float = 0.3) -> Dict[str, np.ndarray]:
+    """Audio-stub batch: frame embeddings + masked cluster labels."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step]))
+    frames = rng.standard_normal((batch, seq, d_model)).astype(np.float32)
+    labels = rng.integers(0, vocab, size=(batch, seq)).astype(np.int32)
+    mask = rng.random((batch, seq)) < mask_prob
+    labels = np.where(mask, labels, -1)
+    return {"frames": frames, "labels": labels}

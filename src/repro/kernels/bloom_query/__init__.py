@@ -1,0 +1,2 @@
+from repro.kernels.bloom_query.ops import bloom_query
+from repro.kernels.bloom_query.ref import bloom_query_ref

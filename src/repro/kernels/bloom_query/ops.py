@@ -1,0 +1,17 @@
+"""Public wrapper for the VMEM Bloom probe kernel."""
+from __future__ import annotations
+
+from repro.core import bloom
+from repro.kernels.bloom_query.bloom_query import bloom_query_call
+
+
+def bloom_query(ids, bits, params: bloom.BloomParams, *,
+                block_n: int = 2048, interpret: bool = True):
+    """Batched membership probe against a packed Bloom bitset.
+
+    Drop-in replacement for ``core.bloom.query`` (same hash family) with
+    the bitset VMEM-pinned; validated bit-exact in tests.
+    """
+    return bloom_query_call(ids, bits, n_hashes=params.n_hashes,
+                            m_bits=params.m_bits, block_n=block_n,
+                            interpret=interpret)

@@ -1,0 +1,11 @@
+"""Oracle: the core/bloom.py JAX query path."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import bloom
+
+
+def bloom_query_ref(ids, bits, *, n_hashes: int, m_bits: int):
+    params = bloom.BloomParams(m_bits=m_bits, n_hashes=n_hashes)
+    return bloom.query(jnp.asarray(bits), jnp.asarray(ids), params)

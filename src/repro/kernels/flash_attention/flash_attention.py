@@ -1,0 +1,135 @@
+"""Blocked online-softmax attention (flash pattern), TPU Pallas.
+
+Tiling: grid = (batch*q_heads, n_q_blocks, n_kv_blocks); the kv axis is
+the minor-most grid dimension, which TPU executes sequentially per
+(bh, iq) — so the running (m, l, acc) statistics live in VMEM scratch
+that persists across kv steps and the output block is written once, on
+the last kv step. Block shapes keep the working set in VMEM:
+
+    q:   (block_q, d)      — revisited for every kv step
+    k/v: (block_k, d)      — streamed HBM->VMEM by the BlockSpec pipeline
+    scratch: (block_q, d) f32 acc + (block_q,) m/l f32
+
+MXU alignment: block_q/block_k multiples of 128, d = head_dim (64/128).
+Causal masking is applied per-element from absolute positions; fully
+masked (future) kv blocks still iterate (TPU grids cannot skip steps) but
+their compare+select cost is negligible against the two matmuls.
+
+GQA: q head h reads kv head h // group via the BlockSpec index_map — no
+KV duplication in HBM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, block_q: int, block_k: int,
+            n_kv_blocks: int, kv_len: int, softcap: Optional[float]):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                    # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                    # (bk, d)
+    v = v_ref[0].astype(jnp.float32)                    # (bk, dv)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    valid = k_pos < kv_len                              # kv padding mask
+    if causal:
+        q_pos = iq * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        valid = valid & (k_pos <= q_pos)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+    acc_scr[...] = (acc_scr[...] * alpha[:, None] +
+                    jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "scale",
+                              "softcap", "interpret"))
+def flash_attention_call(q, k, v, *, causal: bool = True,
+                         block_q: int = 128, block_k: int = 128,
+                         scale=None, softcap=None, interpret: bool = True):
+    """q: (B, Sq, H, d); k/v: (B, Skv, KV, d/dv) with H % KV == 0.
+
+    Returns (B, Sq, H, dv). Sq/Skv padded to block multiples internally
+    (padded kv columns are masked; padded q rows are sliced off).
+    """
+    B, Sq, H, d = q.shape
+    _, Skv, KV, dv = v.shape
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    pq = (-Sq) % block_q
+    pk = (-Skv) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    Sq_p, Skv_p = q.shape[1], k.shape[1]
+    nq, nk = Sq_p // block_q, Skv_p // block_k
+
+    qh = q.transpose(0, 2, 1, 3).reshape(B * H, Sq_p, d)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * KV, Skv_p, d)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * KV, Skv_p, dv)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, n_kv_blocks=nk, kv_len=Skv, softcap=softcap)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda bh, iq, ik, G=G: (bh // G, ik, 0)),
+            pl.BlockSpec((1, block_k, dv),
+                         lambda bh, iq, ik, G=G: (bh // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dv),
+                               lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq_p, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    out = out.reshape(B, H, Sq_p, dv).transpose(0, 2, 1, 3)
+    return out[:, :Sq] if pq else out

@@ -1,0 +1,17 @@
+"""Public wrapper for the Pallas flash-attention kernel."""
+from __future__ import annotations
+
+from repro.kernels.flash_attention.flash_attention import \
+    flash_attention_call
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, scale=None, softcap=None,
+                    interpret: bool = True):
+    """Drop-in blocked attention: same contract as models.attention.attend
+    restricted to contiguous positions (prefill/training); validated
+    against ref.attention_ref across shape/dtype sweeps in tests.
+    """
+    return flash_attention_call(q, k, v, causal=causal, block_q=block_q,
+                                block_k=block_k, scale=scale,
+                                softcap=softcap, interpret=interpret)

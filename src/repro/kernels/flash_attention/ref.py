@@ -1,0 +1,28 @@
+"""Pure-jnp oracle: naive full-matrix softmax attention."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+import jax
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale=None,
+                  softcap: Optional[float] = None):
+    """q: (B, Sq, H, d); k/v: (B, Skv, KV, d/dv) -> (B, Sq, H, dv)."""
+    B, Sq, H, d = q.shape
+    _, Skv, KV, dv = v.shape
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(B, Sq, KV, G, d).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bckd->bqkgc", qg,
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    if causal:
+        mask = (jnp.arange(Skv)[None, :] <= jnp.arange(Sq)[:, None])
+        s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgc,bckd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, dv).astype(q.dtype)

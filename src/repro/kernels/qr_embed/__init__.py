@@ -1,0 +1,2 @@
+from repro.kernels.qr_embed.ops import qr_embed
+from repro.kernels.qr_embed.ref import qr_embed_ref

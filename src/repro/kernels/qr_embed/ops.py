@@ -1,0 +1,22 @@
+"""Public jit'd wrapper: arbitrary-rank ids, model-layer integration."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qr_embed.qr_embed import qr_embed_call
+
+
+def qr_embed(ids, table_q, table_r, *, divisor: int, block_n: int = 1024,
+             interpret: bool = True):
+    """ids: (...,) int32 -> (..., d) compressed-embedding lookup.
+
+    Equivalent to ``table_q[ids // divisor] + table_r[ids % divisor]``
+    with the tables VMEM-pinned and the gather executed as one-hot MXU
+    matmuls (see qr_embed.py).
+    """
+    shape = ids.shape
+    flat = ids.reshape(-1)
+    out = qr_embed_call(flat, table_q, table_r, divisor=divisor,
+                        block_n=block_n, interpret=interpret)
+    return out.reshape(*shape, table_q.shape[1])

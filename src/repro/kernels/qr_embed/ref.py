@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused QR-embedding kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def qr_embed_ref(ids, table_q, table_r, *, divisor: int):
+    """ids: (N,) int32 -> (N, d): E_q[ids // divisor] + E_r[ids % divisor]."""
+    q = ids // divisor
+    r = ids % divisor
+    return (jnp.take(table_q, q, axis=0).astype(jnp.float32) +
+            jnp.take(table_r, r, axis=0).astype(jnp.float32)
+            ).astype(table_q.dtype)

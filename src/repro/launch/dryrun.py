@@ -1,0 +1,196 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above run before ANY other import — jax locks the device
+count on first init, and the production meshes need 512 placeholder
+devices. Smoke tests and benchmarks never import this module.
+
+Per cell this records, into a JSON file consumed by EXPERIMENTS.md and
+the roofline benchmark:
+
+* ``memory_analysis()``  — bytes per device (proves the cell fits),
+* ``cost_analysis()``    — HLO FLOPs / bytes for the roofline terms,
+* collective bytes parsed from the post-SPMD HLO text (all-gather /
+  all-reduce / reduce-scatter / all-to-all / collective-permute), which
+  ``cost_analysis`` does not report.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m \
+      --shape train_4k --mesh single --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+
+from repro import configs
+from repro.configs.shapes import SHAPES, live_cells, skip_reason
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import make_production_mesh
+from repro.launch import hlo_analysis
+from repro.sharding import rules as R
+
+def _apply_overrides(arch: str, overrides: Dict[str, Any] | None):
+    """Build the config; dotted keys (e.g. "moe.capacity_factor") patch
+    nested config dataclasses via dataclasses.replace."""
+    import dataclasses
+    flat = {k: v for k, v in (overrides or {}).items() if "." not in k}
+    cfg = configs.get_config(arch, **flat)
+    for k, v in (overrides or {}).items():
+        if "." not in k:
+            continue
+        outer, inner = k.split(".", 1)
+        sub = getattr(cfg, outer)
+        cfg = dataclasses.replace(
+            cfg, **{outer: dataclasses.replace(sub, **{inner: v})})
+    return cfg
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             rules: R.Rules = R.DEFAULT_RULES,
+             overrides: Dict[str, Any] | None = None,
+             save_hlo: str | None = None) -> Dict[str, Any]:
+    cfg = _apply_overrides(arch, overrides)
+    reason = skip_reason(cfg, shape)
+    if reason is not None:
+        return {"arch": arch, "shape": shape,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.perf_counter()
+    ls = specs_lib.lowering_spec(cfg, shape, mesh, rules)
+    with R.use_mesh(mesh, rules):
+        jitted = jax.jit(ls.fn, in_shardings=ls.in_shardings,
+                         donate_argnums=ls.donate_argnums)
+        lowered = jitted.lower(*ls.args)
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    txt = compiled.as_text()
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(txt)
+    hlo = hlo_analysis.analyze(txt)
+
+    def g(obj, attr):
+        try:
+            return int(getattr(obj, attr))
+        except Exception:
+            return None
+
+    n_dev = mesh.devices.size
+    out = {
+        "arch": arch, "shape": shape,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok",
+        "n_devices": int(n_dev),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": g(mem, "argument_size_in_bytes"),
+            "output_bytes": g(mem, "output_size_in_bytes"),
+            "temp_bytes": g(mem, "temp_size_in_bytes"),
+            "alias_bytes": g(mem, "alias_size_in_bytes"),
+            "generated_code_bytes": g(mem, "generated_code_size_in_bytes"),
+        },
+        "cost": {
+            "flops": float(cost.get("flops", -1)) if cost else None,
+            "bytes_accessed": (float(cost.get("bytes accessed", -1))
+                               if cost else None),
+        },
+        "hlo_weighted": {
+            "flops": hlo["weighted_flops"],
+            "bytes_accessed": hlo["weighted_bytes_accessed"],
+        },
+        "collectives": hlo["collectives"],
+    }
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--rules", choices=tuple(R.RULE_VARIANTS),
+                    default="default",
+                    help="sharding-rule variant (perf iterations)")
+    ap.add_argument("--tag", default=None,
+                    help="suffix for output files (perf iterations)")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--override", default=None,
+                    help="JSON dict of ModelConfig overrides")
+    ap.add_argument("--save-hlo", action="store_true",
+                    help="dump post-SPMD HLO text next to the JSON")
+    args = ap.parse_args(argv)
+
+    rules = R.RULE_VARIANTS[args.rules]
+    overrides = json.loads(args.override) if args.override else None
+
+    cells = []
+    archs = configs.ARCH_IDS if (args.all or args.arch is None) \
+        else (args.arch,)
+    for arch in archs:
+        cfg = configs.get_config(arch)
+        shapes = (live_cells(cfg) if (args.all or args.shape is None)
+                  else (args.shape,))
+        for shape in shapes:
+            meshes = (("single", "multi") if args.mesh == "both"
+                      else (args.mesh,))
+            for m in meshes:
+                cells.append((arch, shape, m == "multi"))
+
+    os.makedirs(args.out, exist_ok=True)
+    ok = failed = 0
+    for arch, shape, multi in cells:
+        tag = f"{arch}__{shape}__{'multi' if multi else 'single'}"
+        if args.tag:
+            tag += f"__{args.tag}"
+        path = os.path.join(args.out, tag + ".json")
+        hlo_path = (os.path.join(args.out, tag + ".hlo.txt")
+                    if args.save_hlo else None)
+        try:
+            res = run_cell(arch, shape, multi, rules, overrides,
+                           save_hlo=hlo_path)
+            ok += 1
+        except Exception as e:
+            res = {"arch": arch, "shape": shape,
+                   "mesh": "multi" if multi else "single",
+                   "status": "error", "error": repr(e),
+                   "traceback": traceback.format_exc()}
+            failed += 1
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        status = res["status"]
+        extra = ""
+        if status == "ok":
+            mb = res["memory"]
+            extra = (f" compile={res['compile_s']}s "
+                     f"temp={mb['temp_bytes']/2**30:.2f}GiB "
+                     f"args={mb['argument_bytes']/2**30:.2f}GiB "
+                     f"flops={res['hlo_weighted']['flops']:.3g} "
+                     f"coll={res['collectives']['total_operand_bytes']/2**30:.2f}GiB")
+        elif status == "error":
+            extra = " " + res["error"][:200]
+        print(f"[{status:7s}] {tag}{extra}", flush=True)
+    print(f"done: {ok} ok, {failed} failed")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,242 @@
+"""Trip-count-weighted analysis of post-SPMD HLO text.
+
+``compiled.cost_analysis()`` visits each ``while`` body ONCE, so any
+scanned model (scan-over-layers, kv-chunked attention, SSM scans)
+under-reports FLOPs/bytes/collectives by the loop trip count — often 10
+to 100x. This module re-derives the three roofline numerators from the
+HLO text itself:
+
+* computations are segmented and a call-graph multiplier is propagated
+  from ENTRY (``while`` bodies × their ``known_trip_count`` from
+  ``backend_config``; ``call``/``conditional`` inherit; fusion bodies are
+  byte-transparent — the fusion call site counts, matching
+  HloCostAnalysis semantics),
+* FLOPs: 2·M·N·K per ``dot`` (wherever it appears) — elementwise FLOPs
+  are deliberately excluded (they are bandwidth-bound and show up in the
+  memory term; documented in EXPERIMENTS.md),
+* bytes: operand+result bytes of every top-level instruction in
+  non-fusion computations (parameters/tuples/GTEs excluded),
+* collectives: operand/result bytes per kind (all-gather, all-reduce,
+  reduce-scatter, all-to-all, collective-permute), ``-start`` counted,
+  ``-done`` skipped.
+
+All sizes are per-device (the text is the post-SPMD per-device program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^=]*?\))|(?:[^\s(]+))\s+"
+    r"([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_ATTR_COMP_RE = re.compile(
+    r"(?:condition|body|to_apply|calls)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count..:..n.:.(\d+)')
+_CONST_RE = re.compile(r"\bs(?:8|16|32|64)\[\]\s+constant\((\d+)\)")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BDIMS_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+_SKIP_BYTES_OPS = {"parameter", "tuple", "get-tuple-element", "constant",
+                   "bitcast", "after-all", "opt-barrier", "partition-id",
+                   "replica-id", "iota"}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        out.append((dtype,
+                    [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str
+    line: str
+
+
+def parse_computations(hlo_text: str):
+    comps: Dict[str, List[Instr]] = {}
+    fusion_comps = set()
+    entry = None
+    cur: Optional[str] = None
+    comment_re = re.compile(r"/\*.*?\*/")
+    for raw in hlo_text.splitlines():
+        line = comment_re.sub("", raw).rstrip()
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m and "=" not in line.split("{")[0]:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+            continue
+        if line == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            name, type_str, op, rest = m.groups()
+            comps[cur].append(Instr(name, type_str, op, rest, line))
+    return comps, entry
+
+
+def _dot_flops(instr: Instr, sizes_of: Dict[str, str]) -> float:
+    """2*M*N*K from the dot line: result elements x contracted size x 2."""
+    res = _shape_dims(instr.type_str)
+    if not res:
+        return 0.0
+    _, rdims = res[0]
+    out_elems = 1
+    for d in rdims:
+        out_elems *= d
+    # contracted size from lhs operand type + contracting dims
+    ops = re.findall(r"%?([\w.\-]+)", instr.rest.split("),")[0])
+    cdims = _CDIMS_RE.search(instr.line)
+    k = 1
+    if ops and cdims is not None:
+        lhs_type = sizes_of.get(ops[0])
+        if lhs_type:
+            dims = _shape_dims(lhs_type)
+            if dims:
+                _, ldims = dims[0]
+                for ci in cdims.group(1).split(","):
+                    if ci != "" and int(ci) < len(ldims):
+                        k *= ldims[int(ci)]
+    return 2.0 * out_elems * k
+
+
+def analyze(hlo_text: str) -> Dict[str, Any]:
+    comps, entry = parse_computations(hlo_text)
+
+    type_of: Dict[str, str] = {}
+    for cname, instrs in comps.items():
+        for it in instrs:
+            type_of[it.name] = it.type_str
+
+    # call-graph multipliers
+    mult: Dict[str, float] = {}
+    fusion_bodies = set()
+    for cname, instrs in comps.items():
+        for it in instrs:
+            if it.op == "fusion":
+                for callee in _ATTR_COMP_RE.findall(it.line):
+                    fusion_bodies.add(callee)
+
+    def trip_count(it: Instr, cond: str) -> float:
+        m = _TRIP_RE.search(it.line)
+        if m:
+            return float(m.group(1))
+        consts = []
+        for cit in comps.get(cond, ()):
+            consts += [int(v) for v in _CONST_RE.findall(cit.line)]
+        return float(max(consts)) if consts else 1.0
+
+    seen_stack = set()
+
+    def visit(cname: str, m: float):
+        if cname not in comps or cname in seen_stack:
+            return
+        if mult.get(cname, 0.0) >= m:
+            return
+        mult[cname] = m
+        seen_stack.add(cname)
+        for it in comps[cname]:
+            if it.op == "while":
+                refs = _ATTR_COMP_RE.findall(it.line)
+                if len(refs) >= 2:
+                    cond, body = refs[0], refs[1]
+                    tc = trip_count(it, cond)
+                    visit(cond, m * tc)
+                    visit(body, m * tc)
+            else:
+                for callee in _ATTR_COMP_RE.findall(it.line):
+                    visit(callee, m)
+                b = _BRANCH_RE.search(it.line)
+                if b:
+                    for br in b.group(1).split(","):
+                        visit(br.strip().lstrip("%"), m)
+        seen_stack.discard(cname)
+
+    if entry:
+        visit(entry, 1.0)
+    else:
+        for c in comps:
+            mult[c] = 1.0
+
+    flops = 0.0
+    bytes_accessed = 0.0
+    per_kind: Dict[str, Dict[str, float]] = {
+        k: {"count": 0.0, "operand_bytes": 0.0, "result_bytes": 0.0}
+        for k in COLLECTIVES}
+
+    for cname, instrs in comps.items():
+        for it in instrs:
+            if it.op in ("dot", "convolution"):
+                flops += _dot_flops(it, type_of) * mult.get(cname, 1.0)
+            base = (it.op[:-len("-start")]
+                    if it.op.endswith("-start") else it.op)
+            if it.op.endswith("-done"):
+                continue
+            if base in COLLECTIVES:
+                ops = re.findall(r"%?([\w.\-]+)",
+                                 it.rest.split("),")[0])
+                opb = sum(_type_bytes(type_of.get(o, ""))
+                          for o in ops if o in type_of)
+                per_kind[base]["count"] += mult.get(cname, 1.0)
+                per_kind[base]["operand_bytes"] += opb * mult.get(cname, 1.0)
+                per_kind[base]["result_bytes"] += (
+                    _type_bytes(it.type_str) * mult.get(cname, 1.0))
+            if cname in fusion_bodies:
+                continue                      # bytes: call site counts
+            if it.op in _SKIP_BYTES_OPS:
+                continue
+            ops = re.findall(r"%?([\w.\-]+)", it.rest.split("),")[0])
+            opb = sum(_type_bytes(type_of.get(o, ""))
+                      for o in ops if o in type_of)
+            bytes_accessed += (opb + _type_bytes(it.type_str)) * \
+                mult.get(cname, 1.0)
+
+    total_operand = sum(v["operand_bytes"] for v in per_kind.values())
+    total_result = sum(v["result_bytes"] for v in per_kind.values())
+    return {
+        "weighted_flops": flops,
+        "weighted_bytes_accessed": bytes_accessed,
+        "collectives": {
+            "per_kind": per_kind,
+            "total_operand_bytes": total_operand,
+            "total_result_bytes": total_result,
+        },
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,189 @@
+"""ShapeDtypeStruct input specs + sharding resolution per (arch × shape).
+
+Everything here is allocation-free: abstract parameter/optimizer/cache
+trees plus NamedShardings, ready for ``jax.jit(...).lower(...)`` in the
+dry-run and for ``jax.device_put`` layouts in the real launcher.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import SHAPES, ShapeCell
+from repro.models import lm, transformer as tf
+from repro.optim import Adam
+from repro.sharding import rules as R
+
+
+# ------------------------------------------------------------------ inputs
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """Abstract batch for the step the cell lowers."""
+    B, S = cell.global_batch, cell.seq_len
+    if cell.kind == "decode":
+        return {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                "index": jax.ShapeDtypeStruct((), jnp.int32)}
+    if cfg.input_kind == "frames":
+        out = {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                              cfg.dtype)}
+        if cell.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return out
+    out = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.input_kind == "tokens3d":
+        out["positions"] = jax.ShapeDtypeStruct((B, S, 3), jnp.int32)
+    if cell.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return out
+
+
+def batch_shardings(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+                    rules: R.Rules = R.DEFAULT_RULES) -> Dict[str, Any]:
+    specs = batch_specs(cfg, cell)
+
+    def one(name, sds):
+        if name == "index":
+            return NamedSharding(mesh, PartitionSpec())
+        axes: list = [None] * len(sds.shape)
+        axes[0] = "batch"
+        if name in ("tokens", "labels", "frames") and len(sds.shape) > 1:
+            axes[1] = "seq"
+        return NamedSharding(
+            mesh, R.spec_for(sds.shape, axes, mesh, rules.act))
+
+    return {k: one(k, v) for k, v in specs.items()}
+
+
+# ------------------------------------------------------------------ params
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh,
+                    rules: R.Rules = R.DEFAULT_RULES):
+    ab = lm.abstract(cfg)
+    ax = lm.param_axes(cfg)
+    return R.param_sharding(ab, ax, mesh, rules)
+
+
+def opt_shardings(cfg: ModelConfig, mesh: Mesh, opt: Adam,
+                  rules: R.Rules = R.DEFAULT_RULES):
+    ab = opt.init_abstract(lm.abstract(cfg))
+    p_sh = param_shardings(cfg, mesh, rules)
+    return type(ab)(step=NamedSharding(mesh, PartitionSpec()),
+                    mu=p_sh, nu=p_sh)
+
+
+# ------------------------------------------------------------------ caches
+
+# Cache logical-axis table: seq ("kv_seq") shards over the model axis —
+# none of the decode archs' kv_heads divide 16, and a 32k-128B cache does
+# not fit per-chip otherwise. attend()'s chunked scan then streams one
+# kv chunk per iteration instead of materializing a full all-gather.
+CACHE_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "kv_seq": ("model",),
+    "kv_heads": ("model",),
+    "heads": ("model",),
+    "mlp": ("model",),
+    "layers": (),
+}
+
+
+def cache_abstract(cfg: ModelConfig, cell: ShapeCell):
+    return tf.cache_spec(cfg, cell.global_batch, cell.seq_len)
+
+
+def cache_shardings(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh):
+    ab = cache_abstract(cfg, cell)
+    ax_tree = tf.cache_axes(cfg)
+
+    def one(sds, axes):
+        # map the attention-cache seq dim (axis after batch) to kv_seq
+        axes = list(axes)
+        # attention/mla caches have shape (..., batch, seq, ...): mark the
+        # dim right after "batch" as kv_seq iff ndim says there is a seq dim
+        if "batch" in axes:
+            bi = axes.index("batch")
+            if (len(sds.shape) > bi + 1 and axes[bi + 1] is None
+                    and sds.shape[bi + 1] == cell.seq_len):
+                axes[bi + 1] = "kv_seq"
+        return NamedSharding(
+            mesh, R.spec_for(sds.shape, axes, mesh, CACHE_RULES))
+
+    ab_leaves, treedef = jax.tree.flatten(ab)
+    ax_leaves = jax.tree.leaves(ax_tree,
+                                is_leaf=lambda x: isinstance(x, tuple))
+    assert len(ab_leaves) == len(ax_leaves), (
+        f"cache tree mismatch {len(ab_leaves)} vs {len(ax_leaves)}")
+    return jax.tree.unflatten(treedef,
+                              [one(a, x) for a, x in
+                               zip(ab_leaves, ax_leaves)])
+
+
+# ------------------------------------------------------------------ steps
+
+@dataclasses.dataclass
+class LoweringSpec:
+    """Everything dryrun.py needs to lower one (arch × shape × mesh)."""
+    fn: Any                       # the step callable
+    args: Tuple[Any, ...]         # abstract args, in order
+    in_shardings: Tuple[Any, ...]
+    donate_argnums: Tuple[int, ...]
+
+
+def make_optimizer(cfg: ModelConfig) -> Adam:
+    return Adam(learning_rate=3e-4, b1=0.9, b2=0.95,
+                moment_dtype=jnp.bfloat16, grad_clip_norm=1.0)
+
+
+def lowering_spec(cfg: ModelConfig, shape_name: str, mesh: Mesh,
+                  rules: R.Rules = R.DEFAULT_RULES) -> LoweringSpec:
+    cell = SHAPES[shape_name]
+    p_ab = lm.abstract(cfg)
+    p_sh = param_shardings(cfg, mesh, rules)
+
+    if cell.kind == "train":
+        opt = make_optimizer(cfg)
+        o_ab = opt.init_abstract(p_ab)
+        o_sh = opt_shardings(cfg, mesh, opt, rules)
+        b_ab = batch_specs(cfg, cell)
+        b_sh = batch_shardings(cfg, cell, mesh, rules)
+        step = lm.make_train_step(cfg, opt)
+        return LoweringSpec(fn=step, args=(p_ab, o_ab, b_ab),
+                            in_shardings=(p_sh, o_sh, b_sh),
+                            donate_argnums=(0, 1))
+
+    if cell.kind == "prefill":
+        b_ab = batch_specs(cfg, cell)
+        b_sh = batch_shardings(cfg, cell, mesh, rules)
+        if not cfg.causal:
+            # encoder: prefill == one full forward (no cache exists)
+            def encode(params, batch):
+                h, _, _ = lm.forward(params, cfg, batch)
+                return h
+            return LoweringSpec(fn=encode, args=(p_ab, b_ab),
+                                in_shardings=(p_sh, b_sh),
+                                donate_argnums=())
+
+        def prefill_step(params, batch):
+            return lm.prefill(params, cfg, batch, max_len=cell.seq_len)
+        return LoweringSpec(fn=prefill_step, args=(p_ab, b_ab),
+                            in_shardings=(p_sh, b_sh),
+                            donate_argnums=())
+
+    # decode: one new token against a seq_len cache
+    c_ab = cache_abstract(cfg, cell)
+    c_sh = cache_shardings(cfg, cell, mesh)
+    b = batch_specs(cfg, cell)
+    tok_sh = NamedSharding(
+        mesh, R.spec_for((cell.global_batch, 1), ["batch", None],
+                         mesh, rules.act))
+    idx_sh = NamedSharding(mesh, PartitionSpec())
+    serve = lm.make_serve_step(cfg)
+    return LoweringSpec(fn=serve,
+                        args=(p_ab, c_ab, b["token"], b["index"]),
+                        in_shardings=(p_sh, c_sh, tok_sh, idx_sh),
+                        donate_argnums=(1,))

@@ -1,0 +1,160 @@
+"""Production train loop: sharded step, checkpoint/restart, preemption,
+straggler log, metrics.
+
+Runs unchanged from one CPU device (smoke/example) up to the production
+mesh — the mesh and sharding rules are injected, everything else is
+config. The end-to-end ~100M example is ``examples/train_smollm.py``.
+
+Usage (local, real devices):
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+      --smoke --steps 100 --batch 8 --seq 256
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import CheckpointManager
+from repro.data.lm_pipeline import LMStream, LMStreamConfig
+from repro.launch import specs as specs_lib
+from repro.models import lm
+from repro.runtime import (Heartbeat, MetricsLogger, PreemptionGuard,
+                           StepTimer)
+from repro.sharding import rules as R
+
+
+def train(cfg, *, mesh=None, rules: R.Rules = R.DEFAULT_RULES,
+          steps: int = 100, global_batch: int = 8, seq_len: int = 256,
+          ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
+          metrics_path: Optional[str] = None, seed: int = 0,
+          log_every: int = 10, guard: Optional[PreemptionGuard] = None,
+          run_dir: Optional[str] = None) -> Dict[str, Any]:
+    """Returns a summary dict (final loss, steps run, straggler count)."""
+    opt = specs_lib.make_optimizer(cfg)
+    stream = LMStream(LMStreamConfig(vocab=cfg.vocab, seq_len=seq_len,
+                                     global_batch=global_batch, seed=seed))
+
+    if mesh is not None:
+        p_sh = specs_lib.param_shardings(cfg, mesh, rules)
+        o_sh = specs_lib.opt_shardings(cfg, mesh, opt, rules)
+        ctx = R.use_mesh(mesh, rules)
+    else:
+        p_sh = o_sh = None
+        ctx = None
+
+    key = jax.random.key(seed)
+    params = lm.init_params(cfg, key)
+    opt_state = opt.init(params)
+    if p_sh is not None:
+        params = jax.device_put(params, p_sh)
+        opt_state = jax.device_put(opt_state, o_sh)
+
+    manager = CheckpointManager(ckpt_dir, keep=3) if ckpt_dir else None
+    start_step = 0
+    if manager is not None:
+        latest = manager.latest_step()
+        if latest is not None:
+            meta = manager.read_meta(latest)
+            state = manager.restore(
+                {"params": lm.abstract(cfg),
+                 "opt": opt.init_abstract(lm.abstract(cfg))},
+                step=latest,
+                shardings=({"params": p_sh,
+                            "opt": specs_lib.opt_shardings(
+                                cfg, mesh, opt, rules)}
+                           if p_sh is not None else None))
+            params, opt_state = state["params"], state["opt"]
+            stream.load_state_dict(meta["extra"]["stream"])
+            start_step = latest
+            print(f"restored checkpoint step {latest}", flush=True)
+
+    step_fn = lm.make_train_step(cfg, opt)
+    if mesh is not None:
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+    else:
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    hb = None
+    if run_dir:
+        hb = Heartbeat(os.path.join(run_dir, "health")).start()
+    metrics = MetricsLogger(metrics_path, echo=True)
+    timer = StepTimer()
+    last = {}
+
+    def save_ckpt(step):
+        if manager is None:
+            return
+        manager.save(step, {"params": params, "opt": opt_state},
+                     extra={"stream": stream.state_dict(),
+                            "arch": cfg.name})
+
+    if ctx is not None:
+        ctx.__enter__()
+    try:
+        for step in range(start_step, steps):
+            if guard is not None and guard.should_stop:
+                save_ckpt(step)
+                metrics.log(step, event="preempted")
+                break
+            batch = stream.batch_at(step)
+            stream.step = step + 1
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            with timer:
+                params, opt_state, m = step_fn(params, opt_state, batch)
+            last = {k: float(v) for k, v in m.items()}
+            if step % log_every == 0 or step == steps - 1:
+                metrics.log(step, seconds=timer.times[-1], **last)
+            if ckpt_every and (step + 1) % ckpt_every == 0:
+                save_ckpt(step + 1)
+    finally:
+        if ctx is not None:
+            ctx.__exit__(None, None, None)
+        if manager is not None:
+            manager.wait()
+        if hb is not None:
+            hb.stop()
+        metrics.close()
+
+    return {"final": last, "steps_run": stream.step - start_step,
+            "stragglers": timer.stragglers,
+            "median_step_s": timer.median,
+            "params": params, "opt_state": opt_state}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--metrics", default=None)
+    ap.add_argument("--compressed-embedding", action="store_true",
+                    help="enable the paper's QR-compressed vocab (C-LMBF "
+                         "technique applied to the LM embedding/head)")
+    args = ap.parse_args(argv)
+
+    over = {}
+    if args.compressed_embedding:
+        over["embedding"] = "compressed"
+    cfg = (configs.get_smoke_config(args.arch, **over) if args.smoke
+           else configs.get_config(args.arch, **over))
+    with PreemptionGuard() as guard:
+        out = train(cfg, steps=args.steps, global_batch=args.batch,
+                    seq_len=args.seq, ckpt_dir=args.ckpt_dir,
+                    metrics_path=args.metrics, guard=guard)
+    print({k: v for k, v in out.items()
+           if k in ("final", "steps_run", "median_step_s")})
+
+
+if __name__ == "__main__":
+    main()

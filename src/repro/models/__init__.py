@@ -1,0 +1,2 @@
+from repro.models import (attention, embeddings, lm, mamba, moe, rwkv,
+                          transformer)

@@ -1,0 +1,358 @@
+"""Attention mixers: GQA/MHA (RoPE, M-RoPE, QKV bias, logit soft-cap) and
+DeepSeek-style MLA (low-rank q/kv, nope/rope split, compressed KV cache).
+
+All attention goes through :func:`attend`, a kv-chunked online-softmax
+("flash-pattern") implementation in pure jnp — temp memory is
+O(Sq * chunk) instead of O(Sq * Skv), which is what lets the 32k prefill
+cells fit. The Pallas kernel in ``repro.kernels.flash_attention`` is the
+TPU-tiled version of the same contraction (validated against this path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn import ParamSpec
+from repro.nn import layers as L
+from repro.sharding import constrain
+
+
+# ------------------------------------------------------------------ specs
+
+def gqa_spec(cfg: ModelConfig):
+    D, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    pd = cfg.param_dtype
+    spec = {
+        "wq": ParamSpec((D, H, dh), pd, "scaled_normal",
+                        ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((D, KV, dh), pd, "scaled_normal",
+                        ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((D, KV, dh), pd, "scaled_normal",
+                        ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((H, dh, D), pd, "scaled_normal",
+                        ("heads", "head_dim", "embed"),
+                        fan_in_dims=(0, 1)),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = ParamSpec((H, dh), pd, "zeros", ("heads", "head_dim"))
+        spec["bk"] = ParamSpec((KV, dh), pd, "zeros",
+                               ("kv_heads", "head_dim"))
+        spec["bv"] = ParamSpec((KV, dh), pd, "zeros",
+                               ("kv_heads", "head_dim"))
+    return spec
+
+
+def mla_spec(cfg: ModelConfig):
+    D, H = cfg.d_model, cfg.n_heads
+    m = cfg.mla
+    pd = cfg.param_dtype
+    return {
+        "wq_a": ParamSpec((D, m.q_lora_rank), pd, "scaled_normal",
+                          ("embed", "q_lora")),
+        "q_norm": ParamSpec((m.q_lora_rank,), pd, "ones", ("q_lora",)),
+        "wq_b": ParamSpec((m.q_lora_rank, H, m.qk_dim), pd, "scaled_normal",
+                          ("q_lora", "heads", "head_dim")),
+        "wkv_a": ParamSpec((D, m.kv_lora_rank + m.qk_rope_dim), pd,
+                           "scaled_normal", ("embed", "kv_lora")),
+        "kv_norm": ParamSpec((m.kv_lora_rank,), pd, "ones", ("kv_lora",)),
+        "wkv_b": ParamSpec((m.kv_lora_rank, H,
+                            m.qk_nope_dim + m.v_head_dim), pd,
+                           "scaled_normal",
+                           ("kv_lora", "heads", "head_dim")),
+        "wo": ParamSpec((H, m.v_head_dim, D), pd, "scaled_normal",
+                        ("heads", "head_dim", "embed"), fan_in_dims=(0, 1)),
+    }
+
+
+# ------------------------------------------------------- chunked attention
+
+def _online_merge(m, l, acc, m_new, l_new, acc_new):
+    m_next = jnp.maximum(m, m_new)
+    a = jnp.exp(m - m_next)
+    b = jnp.exp(m_new - m_next)
+    return (m_next, l * a + l_new * b,
+            acc * a[..., None] + acc_new * b[..., None])
+
+
+def attend(q, k, v, q_pos, kv_pos, *, causal: bool,
+           softcap: Optional[float] = None, chunk: int = 1024,
+           scale: Optional[float] = None, remat_chunks: bool = True):
+    """Online-softmax attention.
+
+    q: (B, Sq, H, dh); k/v: (B, Skv, KV, dh_k/dh_v); GQA via H % KV == 0.
+    q_pos: (B, Sq) absolute positions; kv_pos: (Skv,) cache-slot positions.
+    Returns (B, Sq, H, dh_v).
+
+    ``remat_chunks`` checkpoints the kv-chunk scan body: backward
+    recomputes the O(Sq*chunk) score block per chunk instead of saving
+    score/mask residuals for every chunk (the flash memory property —
+    without it a 4k x 4k train cell stacks ~16 GB of per-chunk residuals
+    per layer).
+    """
+    B, Sq, H, dhq = q.shape
+    _, Skv, KV, dhv = v.shape
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(dhq)
+    qg = q.reshape(B, Sq, KV, G, dhq)
+
+    if Sq == 1:
+        # decode: one full-cache contraction instead of the chunk scan.
+        # The scores tensor is tiny (B,1,KV,G,Skv) and — crucially — the
+        # softmax reductions over the kv axis partition cleanly when the
+        # cache is seq-sharded (partial max/sum + all-reduce), where the
+        # chunk scan's per-iteration dynamic-slice forced GSPMD into
+        # replicate-then-reshard copies of every chunk (§Perf cell C).
+        #
+        # Matmuls run on the cache dtype with f32 ACCUMULATION
+        # (preferred_element_type) — an `astype(f32)` here materialized
+        # an f32 copy of the entire 62-layer cache stack (§Perf cell C,
+        # iteration 2: 7.8 GiB of temp for deepseek-coder decode_32k).
+        cdt = jnp.bfloat16 if k.dtype in (jnp.float8_e4m3fn,
+                                          jnp.float8_e5m2) else k.dtype
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qg.astype(cdt),
+                       k.astype(cdt),
+                       preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = L.soft_cap(s, softcap)
+        valid = kv_pos[None, None, :] >= 0
+        if causal:
+            valid = valid & (kv_pos[None, None, :] <= q_pos[:, :, None])
+        else:
+            valid = valid & (kv_pos[None, None, :] <
+                             jnp.iinfo(jnp.int32).max)
+        s = jnp.where(valid[:, :, None, None, :], s, jnp.float32(-1e30))
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        out = jnp.einsum("bqkgc,bckd->bqkgd", p.astype(cdt),
+                         v.astype(cdt),
+                         preferred_element_type=jnp.float32)
+        out = out / jnp.maximum(jnp.sum(p, axis=-1)[..., None], 1e-30)
+        return out.reshape(B, Sq, H, dhv).astype(q.dtype)
+
+    nchunks = max(1, -(-Skv // chunk))
+    pad = nchunks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad),
+                         constant_values=jnp.iinfo(jnp.int32).max)
+    kc = k.reshape(B, nchunks, chunk, KV, dhq).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nchunks, chunk, KV, dhv).transpose(1, 0, 2, 3, 4)
+    pc = kv_pos.reshape(nchunks, chunk)
+
+    neg = jnp.float32(-1e30)
+    m0 = jnp.full((B, Sq, KV, G), neg, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KV, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, KV, G, dhv), jnp.float32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, pb = xs
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qg.astype(jnp.float32),
+                       kb.astype(jnp.float32)) * scale
+        if softcap is not None:
+            s = L.soft_cap(s, softcap)
+        valid = pb[None, None, :] >= 0
+        if causal:
+            valid = valid & (pb[None, None, :] <= q_pos[:, :, None])
+        else:
+            valid = valid & (pb[None, None, :] <
+                             jnp.iinfo(jnp.int32).max)
+        s = jnp.where(valid[:, :, None, None, :], s, neg)
+        m_new = jnp.max(s, axis=-1)
+        l_new = jnp.sum(jnp.exp(s - m_new[..., None]), axis=-1)
+        acc_new = jnp.einsum("bqkgc,bckd->bqkgd",
+                             jnp.exp(s - m_new[..., None]),
+                             vb.astype(jnp.float32))
+        return _online_merge(m, l, acc, m_new, l_new, acc_new), None
+
+    if nchunks == 1:
+        (m, l, acc), _ = body((m0, l0, a0), (kc[0], vc[0], pc[0]))
+    else:
+        body_fn = (jax.checkpoint(body, prevent_cse=False)
+                   if remat_chunks else body)
+        (m, l, acc), _ = jax.lax.scan(body_fn, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, H, dhv).astype(q.dtype)
+
+
+# ------------------------------------------------------------------ cache
+
+def gqa_cache_spec(cfg: ModelConfig, batch: int, max_len: int, n_layers: int):
+    KV, dh = cfg.n_kv_heads, cfg.d_head
+    return {
+        "k": jax.ShapeDtypeStruct((n_layers, batch, max_len, KV, dh),
+                                  cfg.dtype),
+        "v": jax.ShapeDtypeStruct((n_layers, batch, max_len, KV, dh),
+                                  cfg.dtype),
+    }
+
+
+def mla_cache_spec(cfg: ModelConfig, batch: int, max_len: int, n_layers: int):
+    m = cfg.mla
+    return {
+        "c_kv": jax.ShapeDtypeStruct((n_layers, batch, max_len,
+                                      m.kv_lora_rank), cfg.dtype),
+        "k_rope": jax.ShapeDtypeStruct((n_layers, batch, max_len,
+                                        m.qk_rope_dim), cfg.dtype),
+    }
+
+
+# ------------------------------------------------------------------ apply
+
+def _rope_for(cfg: ModelConfig, positions, dim: int):
+    """positions: (B, S) or (B, S, 3) for M-RoPE. -> cos, sin (B, S, dim//2)."""
+    if cfg.mrope_sections is not None and positions.ndim == 3:
+        return L.mrope_cos_sin(positions, dim, cfg.mrope_sections,
+                               cfg.rope_theta)
+    if positions.ndim == 3:
+        positions = positions[..., 0]
+    return L.rope_cos_sin(positions, dim, cfg.rope_theta)
+
+
+def _plain_pos(positions):
+    return positions[..., 0] if positions.ndim == 3 else positions
+
+
+def gqa_apply(params, cfg: ModelConfig, x, positions, cache=None,
+              cache_index=None):
+    """x: (B, S, D). cache: {"k","v"} (B, max, KV, dh) single-layer slices.
+    Returns (y, new_cache)."""
+    B, S, D = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = constrain(q, ("batch", "seq", "heads", None))
+    k = constrain(k, ("batch", "seq", "kv_heads", None))
+
+    cos, sin = _rope_for(cfg, positions, dh)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    qp = _plain_pos(positions)
+
+    if cache is not None:
+        idx = cache_index
+        new_k = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+        new_v = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+        kv_pos = jnp.arange(cache["k"].shape[1], dtype=jnp.int32)
+        out = attend(q, new_k, new_v, qp, kv_pos, causal=True,
+                     softcap=cfg.attn_softcap, chunk=cfg.attn_chunk)
+        new_cache = {"k": new_k, "v": new_v}
+    else:
+        kv_pos = jnp.arange(S, dtype=jnp.int32)
+        out = attend(q, k, v, qp, kv_pos, causal=cfg.causal,
+                     softcap=cfg.attn_softcap, chunk=cfg.attn_chunk)
+        new_cache = None
+    out = constrain(out, ("batch", "seq", "heads", None))
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, new_cache
+
+
+def mla_apply(params, cfg: ModelConfig, x, positions, cache=None,
+              cache_index=None):
+    """DeepSeek-V3 MLA. Cache holds (c_kv, k_rope) — the compressed latents."""
+    B, S, D = x.shape
+    m = cfg.mla
+    H = cfg.n_heads
+
+    q = jnp.einsum("bsd,dr->bsr", x, params["wq_a"])
+    q = L.rms_norm(q, params["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", q, params["wq_b"])
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+
+    kv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
+    c_kv, k_rope = kv[..., :m.kv_lora_rank], kv[..., m.kv_lora_rank:]
+    c_kv = L.rms_norm(c_kv, params["kv_norm"])
+
+    cos, sin = _rope_for(cfg, positions, m.qk_rope_dim)
+    q_rope = L.apply_rope(q_rope, cos, sin)
+    k_rope = L.apply_rope(k_rope[..., None, :], cos, sin)[..., 0, :]
+    qp = _plain_pos(positions)
+
+    if cache is not None:
+        idx = cache_index
+        c_all = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, idx, 0))
+        r_all = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
+            (0, idx, 0))
+        kv_pos = jnp.arange(c_all.shape[1], dtype=jnp.int32)
+        new_cache = {"c_kv": c_all, "k_rope": r_all}
+    else:
+        c_all, r_all = c_kv, k_rope
+        kv_pos = jnp.arange(S, dtype=jnp.int32)
+        new_cache = None
+
+    # naive (paper-faithful prefill) path: expand latents to per-head k/v
+    kvb = jnp.einsum("bsr,rhk->bshk", c_all, params["wkv_b"])
+    k_nope = kvb[..., :m.qk_nope_dim]
+    v = kvb[..., m.qk_nope_dim:]
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(r_all[:, :, None, :],
+                                  k_nope.shape[:3] + (m.qk_rope_dim,))],
+        axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = attend(q_full, k_full, v, qp, kv_pos, causal=True,
+                 softcap=cfg.attn_softcap, chunk=cfg.attn_chunk,
+                 scale=1.0 / math.sqrt(m.qk_dim))
+    out = constrain(out, ("batch", "seq", "heads", None))
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, new_cache
+
+
+def mla_apply_absorbed(params, cfg: ModelConfig, x, positions, cache,
+                       cache_index):
+    """Decode-optimized MLA: absorb wkv_b into the query/output projections
+    so cached latents are attended over *directly* — no per-step expansion
+    of the whole cache (beyond-paper perf variant; see EXPERIMENTS.md §Perf).
+    """
+    B, S, D = x.shape
+    m = cfg.mla
+    H = cfg.n_heads
+
+    q = jnp.einsum("bsd,dr->bsr", x, params["wq_a"])
+    q = L.rms_norm(q, params["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", q, params["wq_b"])
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+
+    kv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
+    c_kv, k_rope = kv[..., :m.kv_lora_rank], kv[..., m.kv_lora_rank:]
+    c_kv = L.rms_norm(c_kv, params["kv_norm"])
+    cos, sin = _rope_for(cfg, positions, m.qk_rope_dim)
+    q_rope = L.apply_rope(q_rope, cos, sin)
+    k_rope = L.apply_rope(k_rope[..., None, :], cos, sin)[..., 0, :]
+    qp = _plain_pos(positions)
+
+    idx = cache_index
+    c_all = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, idx, 0))
+    r_all = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, idx, 0))
+    kv_pos = jnp.arange(c_all.shape[1], dtype=jnp.int32)
+
+    w_uk = params["wkv_b"][..., :m.qk_nope_dim]     # (r, H, nope)
+    w_uv = params["wkv_b"][..., m.qk_nope_dim:]     # (r, H, v)
+    # absorb: q_eff[h] = q_nope[h] @ w_uk[h]^T  lives in latent space (r)
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, w_uk)
+    # attention over latents: treat (c_kv ++ k_rope) as a single kv head
+    q_cat = jnp.concatenate([q_lat, q_rope], axis=-1)    # (B,S,H,r+rope)
+    k_cat = jnp.concatenate([c_all, r_all], axis=-1)[:, :, None, :]
+    out_lat = attend(q_cat, k_cat, c_all[:, :, None, :], qp, kv_pos,
+                     causal=True, chunk=cfg.attn_chunk,
+                     scale=1.0 / math.sqrt(m.qk_dim))   # (B,S,H,r)
+    # un-absorb: out[h] = out_lat[h] @ w_uv[h]
+    out = jnp.einsum("bshr,rhk->bshk", out_lat, w_uv)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, {"c_kv": c_all, "k_rope": r_all}

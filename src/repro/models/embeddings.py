@@ -1,0 +1,244 @@
+"""Token embeddings and LM heads — dense and *compressed* (the paper's
+technique lifted to LM vocabularies).
+
+The paper's C-LMBF compresses a categorical column with ``v`` distinct
+values into ``ns`` subcolumns via repeated divmod (quotient/remainder),
+shrinking the embedding tables from ``O(v·d)`` to ``O(ns·v^(1/ns)·d)``.
+An LM vocabulary IS such a column. ``compressed`` mode applies exactly the
+paper's codec (:mod:`repro.core.compression`) to token ids:
+
+* input side — ``id -> (q, r)``; embedding = ``E_q[q] + E_r[r]`` (sum
+  combine, both tables d_model wide) or ``concat`` (d_model/ns each).
+* output side — a *factorized softmax head*: subcolumn logit vectors
+  ``lq (cq,)`` and ``lr (cr,)``; the joint logit of token ``x`` is
+  ``lq[x // d] + lr[x % d]``. Because the joint is additive,
+  ``logsumexp_{i,j}(lq_i + lr_j) = logsumexp(lq) + logsumexp(lr)`` — the
+  partition function factorizes and the training loss NEVER materializes
+  ``(tokens, vocab)`` logits, only ``(tokens, cq)+(tokens, cr)``.
+
+  Caveat (documented, beyond-paper design choice): the factorized
+  partition ranges over ``cq*cr >= vocab`` joint slots; the ≤ ``sv_d - 1``
+  invalid slots receive probability mass the model learns to suppress —
+  same regime as Megatron's padded-vocab logits. ``joint_logits`` gives
+  the exactly-masked joint for decode/eval.
+
+Tied embeddings tie *per subcolumn table* (E_q doubles as the lq
+projection), exactly mirroring dense tying.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import compression as comp
+from repro.nn import ParamSpec
+from repro.nn import layers as L
+from repro.sharding import constrain
+
+
+# ------------------------------------------------------------------ plan
+
+def vocab_plan(cfg: ModelConfig) -> comp.ColumnPlan:
+    """The paper's ColumnPlan for the vocabulary column (theta=0: always
+    split when embedding == 'compressed')."""
+    return comp.plan_column(cfg.vocab, theta=0, ns=cfg.embed_ns)
+
+
+def _sub_dims(cfg: ModelConfig, plan: comp.ColumnPlan) -> Tuple[int, ...]:
+    """Embedding width per subcolumn table."""
+    if cfg.embed_combine == "concat":
+        k = len(plan.sub_cards)
+        base = cfg.d_model // k
+        dims = [base] * k
+        dims[0] += cfg.d_model - base * k
+        return tuple(dims)
+    return tuple([cfg.d_model] * len(plan.sub_cards))
+
+
+# ------------------------------------------------------------------ specs
+
+def embed_spec(cfg: ModelConfig):
+    pd = cfg.param_dtype
+    if cfg.input_kind == "frames":
+        # audio stub frontend delivers frame embeddings; only a projection
+        # (identity-shaped) plus the cluster-prediction head vocabulary.
+        spec = {"frame_proj": ParamSpec((cfg.d_model, cfg.d_model), pd,
+                                        "scaled_normal", ("embed", "embed2"))}
+        spec["head"] = ParamSpec((cfg.d_model, cfg.vocab), pd,
+                                 "scaled_normal", ("embed", "vocab"))
+        return spec
+    if cfg.embedding == "compressed":
+        plan = vocab_plan(cfg)
+        dims = _sub_dims(cfg, plan)
+        spec = {}
+        for i, (rows, d) in enumerate(zip(plan.sub_cards, dims)):
+            spec[f"sub{i}"] = ParamSpec((rows, d), pd, "embedding",
+                                        ("vocab", "embed"), init_scale=0.02)
+        if not cfg.tie_embeddings:
+            for i, (rows, d) in enumerate(zip(plan.sub_cards, dims)):
+                spec[f"head{i}"] = ParamSpec((d, rows), pd, "scaled_normal",
+                                             ("embed", "vocab"))
+        return spec
+    spec = {"table": ParamSpec((cfg.vocab, cfg.d_model), pd, "embedding",
+                               ("vocab", "embed"), init_scale=0.02)}
+    if not cfg.tie_embeddings:
+        spec["head"] = ParamSpec((cfg.d_model, cfg.vocab), pd,
+                                 "scaled_normal", ("embed", "vocab"))
+    return spec
+
+
+# ------------------------------------------------------------------ input
+
+def embed_tokens(params, cfg: ModelConfig, tokens) -> jax.Array:
+    """tokens: (B, S) int32 -> (B, S, D)."""
+    if cfg.input_kind == "frames":
+        raise ValueError("frame inputs use embed_frames()")
+    if cfg.embedding == "compressed":
+        plan = vocab_plan(cfg)
+        subs = _split_ids(tokens, plan)
+        if cfg.embed_combine == "concat":
+            x = jnp.concatenate(
+                [L.take_embedding(params[f"sub{i}"], s)
+                 for i, s in enumerate(subs)], axis=-1)
+        else:
+            x = L.take_embedding(params["sub0"], subs[0])
+            for i, s in enumerate(subs[1:], start=1):
+                x = x + L.take_embedding(params[f"sub{i}"], s)
+    else:
+        x = L.take_embedding(params["table"], tokens)
+    if cfg.embed_scale is not None:
+        x = x * jnp.asarray(cfg.embed_scale, x.dtype)
+    return x
+
+
+def embed_frames(params, cfg: ModelConfig, frames) -> jax.Array:
+    """frames: (B, S, D) precomputed frontend embeddings (audio stub)."""
+    return jnp.einsum("bsd,de->bse", frames, params["frame_proj"])
+
+
+def _split_ids(ids, plan: comp.ColumnPlan):
+    """Pure-jnp divmod split, quotient-first (matches core.compression).
+
+    The fused Pallas version lives in kernels/qr_embed.
+    """
+    subs = []
+    cur = ids
+    for d in plan.divisors:
+        subs.append(cur % d)
+        cur = cur // d
+    subs.append(cur)
+    return subs[::-1]
+
+
+# ------------------------------------------------------------------ output
+
+def logits_dense(params, cfg: ModelConfig, x) -> jax.Array:
+    """x: (..., D) -> (..., vocab) logits."""
+    if cfg.input_kind == "frames":
+        out = jnp.einsum("...d,dv->...v", x, params["head"])
+    elif cfg.embedding == "compressed":
+        return joint_logits(params, cfg, x)
+    elif cfg.tie_embeddings:
+        out = jnp.einsum("...d,vd->...v", x, params["table"])
+    else:
+        out = jnp.einsum("...d,dv->...v", x, params["head"])
+    # leading dim is batch — constraining it keeps the token dims sharded
+    # (a None entry in a sharding constraint means *replicated*, so the
+    # axes list must name every dim we want to keep distributed)
+    out = constrain(out, ("batch",) + (None,) * (out.ndim - 2) + ("vocab",))
+    if cfg.logit_softcap:
+        out = L.soft_cap(out, cfg.logit_softcap)
+    return out
+
+
+def sub_logits(params, cfg: ModelConfig, x):
+    """Factorized head: list of (..., c_i) logit arrays, quotient-first."""
+    plan = vocab_plan(cfg)
+    outs = []
+    for i in range(len(plan.sub_cards)):
+        if cfg.tie_embeddings:
+            t = params[f"sub{i}"]
+            if cfg.embed_combine == "concat":
+                dims = _sub_dims(cfg, plan)
+                lo = sum(dims[:i])
+                outs.append(jnp.einsum("...d,vd->...v",
+                                       x[..., lo:lo + dims[i]], t))
+            else:
+                outs.append(jnp.einsum("...d,vd->...v", x, t))
+        else:
+            outs.append(jnp.einsum("...d,dv->...v", x, params[f"head{i}"]))
+    if cfg.logit_softcap:
+        outs = [L.soft_cap(o, cfg.logit_softcap) for o in outs]
+    return outs
+
+
+def joint_logits(params, cfg: ModelConfig, x) -> jax.Array:
+    """Materialized (..., vocab) logits from the factorized head —
+    exact-masked (invalid joint slots dropped). For decode/eval."""
+    plan = vocab_plan(cfg)
+    subs = sub_logits(params, cfg, x)
+    joint = subs[0][..., :, None]
+    for s in subs[1:]:
+        joint = joint[..., None] if joint.ndim < s.ndim + 1 else joint
+        joint = (joint + s[..., None, :]).reshape(
+            joint.shape[:-2] + (joint.shape[-2] * s.shape[-1],))
+    return joint[..., :cfg.vocab]
+
+
+def cross_entropy_dense(logits, labels, ignore: int = -1):
+    """logits (..., V), labels (...,) -> mean CE over non-ignored.
+
+    The label logit is picked via a one-hot contraction rather than
+    ``take_along_axis`` — a gather on the vocab dim would force GSPMD to
+    all-gather vocab-sharded logits, while the one-hot product reduces to
+    partial sums + a small all-reduce.
+    """
+    l32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(l32, axis=-1)
+    onehot = jax.nn.one_hot(jnp.maximum(labels, 0), logits.shape[-1],
+                            dtype=l32.dtype)
+    picked = jnp.sum(l32 * onehot, axis=-1)
+    mask = (labels != ignore).astype(jnp.float32)
+    ce = (lse - picked) * mask
+    return jnp.sum(ce) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def cross_entropy_factorized(params, cfg: ModelConfig, x, labels,
+                             ignore: int = -1):
+    """Factorized CE: never materializes (tokens, vocab).
+
+    loss(x) = -(sum_i lq_i[label_i]) + sum_i logsumexp(lq_i)
+    """
+    plan = vocab_plan(cfg)
+    subs_lab = _split_ids(jnp.maximum(labels, 0), plan)
+    logit_list = sub_logits(params, cfg, x)
+    mask = (labels != ignore).astype(jnp.float32)
+    total = jnp.zeros(labels.shape, jnp.float32)
+    for lg, lab in zip(logit_list, subs_lab):
+        l32 = lg.astype(jnp.float32)
+        lse = jax.nn.logsumexp(l32, axis=-1)
+        picked = jnp.take_along_axis(l32, lab[..., None], axis=-1)[..., 0]
+        total = total + (lse - picked)
+    return jnp.sum(total * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def lm_loss(params, cfg: ModelConfig, x, labels, ignore: int = -1):
+    """Dispatch: factorized CE for compressed heads, dense CE otherwise.
+
+    x: (B, S, D) final hidden states; labels: (B, S) int32.
+    """
+    if cfg.embedding == "compressed" and cfg.input_kind != "frames":
+        return cross_entropy_factorized(params, cfg, x, labels, ignore)
+    return cross_entropy_dense(logits_dense(params, cfg, x), labels, ignore)
+
+
+def count_embed_params(cfg: ModelConfig) -> int:
+    import numpy as np
+    spec = embed_spec(cfg)
+    return int(sum(int(np.prod(s.shape))
+                   for s in jax.tree.leaves(
+                       spec, is_leaf=lambda v: isinstance(v, ParamSpec))))

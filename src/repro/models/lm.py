@@ -1,0 +1,228 @@
+"""Top-level language model: spec, forward, train/prefill/decode steps.
+
+Every assigned architecture is an instance of this module; family
+differences (attention flavor, MoE pattern, SSM mixers, modality frontends)
+are resolved by ``transformer.stack_apply`` from the config alone.
+
+The paper's technique enters through ``cfg.embedding == "compressed"``:
+token ids are losslessly divmod-split (core/compression), the embedding is
+the sum of subcolumn tables, and the loss uses the factorized softmax that
+never materializes ``(tokens, vocab)`` logits (models/embeddings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import embeddings as emb
+from repro.models import transformer as tf
+from repro.nn import (ParamSpec, abstract_params, axes_tree, build_params,
+                      count_bytes, count_params)
+from repro.sharding import constrain
+
+
+# ------------------------------------------------------------------ spec
+
+def lm_spec(cfg: ModelConfig):
+    spec: Dict[str, Any] = {
+        "embed": emb.embed_spec(cfg),
+        "blocks": tf.stack_spec(cfg),
+        "final_norm": tf._norm_spec(cfg),
+    }
+    if cfg.mtp_depth > 0:
+        # deepseek-v3 multi-token prediction: one extra block per depth,
+        # fed by a projection of [h_main ; emb(next token)].
+        mtp = {}
+        for d in range(cfg.mtp_depth):
+            mtp[f"d{d}"] = {
+                "proj": ParamSpec((2 * cfg.d_model, cfg.d_model),
+                                  cfg.param_dtype, "scaled_normal",
+                                  ("embed", "embed2")),
+                "norm": tf._norm_spec(cfg),
+                "block": tf.block_spec(cfg, cfg.layer_kinds()[-1]),
+            }
+        spec["mtp"] = mtp
+    return spec
+
+
+def init_params(cfg: ModelConfig, key):
+    return build_params(lm_spec(cfg), key)
+
+
+def abstract(cfg: ModelConfig):
+    return abstract_params(lm_spec(cfg))
+
+
+def param_axes(cfg: ModelConfig):
+    return axes_tree(lm_spec(cfg))
+
+
+def n_params(cfg: ModelConfig) -> int:
+    return count_params(lm_spec(cfg))
+
+
+def n_bytes(cfg: ModelConfig) -> int:
+    return count_bytes(lm_spec(cfg))
+
+
+def n_active_params(cfg: ModelConfig) -> int:
+    """Active (per-token) params — MoE counts top_k + shared experts."""
+    total = n_params(cfg)
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    n_moe_layers = sum(1 for _, f in cfg.layer_kinds() if f == "moe")
+    per_expert = 3 * cfg.d_model * m.d_ff_expert
+    inactive = n_moe_layers * (m.n_experts - m.top_k) * per_expert
+    return total - inactive
+
+
+# ------------------------------------------------------------------ forward
+
+def _positions_for(cfg: ModelConfig, batch_positions, B, S, offset=None):
+    if batch_positions is not None:
+        return batch_positions
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :]
+    if offset is not None:
+        pos = pos + offset
+    pos = jnp.broadcast_to(pos, (B, S))
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(pos[..., None], (B, S, 3))
+    return pos
+
+
+def forward(params, cfg: ModelConfig, batch, caches=None, cache_index=None):
+    """batch: dict with 'tokens' (B,S) or 'frames' (B,S,D); optional
+    'positions'. Returns (hidden (B,S,D), aux, new_caches)."""
+    if cfg.input_kind == "frames":
+        x = emb.embed_frames(params["embed"], cfg, batch["frames"])
+        B, S = x.shape[:2]
+    else:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = emb.embed_tokens(params["embed"], cfg, tokens)
+    x = x.astype(cfg.dtype)
+    x = constrain(x, ("batch", "seq", "embed"))
+    positions = _positions_for(cfg, batch.get("positions"), B, S,
+                               offset=cache_index)
+    x, aux, new_caches = tf.stack_apply(params["blocks"], cfg, x, positions,
+                                        caches, cache_index)
+    x = tf._norm(params["final_norm"], cfg, x)
+    return x, aux, new_caches
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """Scalar training loss (+ metrics dict)."""
+    h, aux, _ = forward(params, cfg, batch)
+    ce = emb.lm_loss(params["embed"], cfg, h, batch["labels"])
+    loss = ce + aux
+    metrics = {"ce": ce, "aux": aux}
+    if cfg.mtp_depth > 0 and cfg.input_kind == "tokens":
+        mtp_ce = _mtp_loss(params, cfg, h, batch)
+        loss = loss + 0.3 * mtp_ce
+        metrics["mtp_ce"] = mtp_ce
+    return loss, metrics
+
+
+def _mtp_loss(params, cfg: ModelConfig, h, batch):
+    """DeepSeek-V3 MTP: depth-d head predicts token t+1+d from the chained
+    hidden state combined with the embedding of token t+d."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    B, S = tokens.shape
+    total = jnp.zeros((), jnp.float32)
+    h_cur = h
+    for d in range(cfg.mtp_depth):
+        mp = params["mtp"][f"d{d}"]
+        # shift: combine h_t with emb(token_{t+1+d}) to predict label_{t+1+d}
+        nxt = jnp.roll(tokens, -(d + 1), axis=1)
+        e = emb.embed_tokens(params["embed"], cfg, nxt).astype(cfg.dtype)
+        cat = jnp.concatenate([tf._norm(mp["norm"], cfg, h_cur), e], axis=-1)
+        x = jnp.einsum("bsd,de->bse", cat, mp["proj"])
+        positions = _positions_for(cfg, None, B, S)
+        x, _, _ = tf.block_apply(mp["block"], cfg, cfg.layer_kinds()[-1],
+                                 x, positions)
+        lab = jnp.roll(labels, -(d + 1), axis=1)
+        # mask the wrapped tail
+        idx = jnp.arange(S)
+        lab = jnp.where(idx[None, :] < S - (d + 1), lab, -1)
+        total = total + emb.lm_loss(params["embed"], cfg, x, lab)
+        h_cur = x
+    return total / max(cfg.mtp_depth, 1)
+
+
+# ------------------------------------------------------------------ steps
+
+def make_train_step(cfg: ModelConfig, opt):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). Pure function of its inputs — jit/pjit it at the call site."""
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, batch)
+        params, opt_state = opt.update(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, cfg, batch)
+        return dict(metrics, loss=loss)
+    return eval_step
+
+
+def prefill(params, cfg: ModelConfig, batch, max_len: int):
+    """Run the prompt through the stack, filling a fresh cache.
+
+    Returns (last_hidden (B, D), caches). 'tokens': (B, S_prompt)."""
+    if cfg.input_kind == "frames":
+        B = batch["frames"].shape[0]
+    else:
+        B = batch["tokens"].shape[0]
+    caches = tf.init_cache(cfg, B, max_len)
+    h, _, caches = forward(params, cfg, batch, caches,
+                           cache_index=jnp.zeros((), jnp.int32))
+    return h[:, -1, :], caches
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One decode step: (params, caches, token (B,1), index) ->
+    (logits (B, vocab), new_caches). ``index`` is the write position =
+    number of tokens already in the cache."""
+
+    def serve_step(params, caches, token, index):
+        batch = {"tokens": token}
+        if cfg.mrope_sections is not None:
+            pos = jnp.broadcast_to(index.astype(jnp.int32),
+                                   (token.shape[0], 1, 3))
+            batch["positions"] = pos
+        h, _, caches = forward(params, cfg, batch, caches,
+                               cache_index=index)
+        logits = emb.logits_dense(params["embed"], cfg, h[:, -1, :])
+        return logits, caches
+
+    return serve_step
+
+
+def greedy_decode(params, cfg: ModelConfig, prompt, n_steps: int,
+                  max_len: int):
+    """Reference autoregressive loop (examples / tests)."""
+    B, S = prompt.shape
+    last_h, caches = prefill(params, cfg, {"tokens": prompt}, max_len)
+    logits = emb.logits_dense(params["embed"], cfg, last_h)
+    token = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    serve_step = make_serve_step(cfg)
+    out = [token]
+    idx = jnp.asarray(S, jnp.int32)
+    for _ in range(n_steps - 1):
+        logits, caches = serve_step(params, caches, token, idx)
+        token = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out.append(token)
+        idx = idx + 1
+    return jnp.concatenate(out, axis=1)

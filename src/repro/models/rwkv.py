@@ -1,0 +1,213 @@
+"""RWKV-6 "Finch" mixer: data-dependent-decay time-mix + channel-mix.
+
+Time-mix recurrence (per head, state S: (dh_k, dh_v)):
+
+    y_t     = r_t @ (S_t + (u ⊙ k_t) v_tᵀ)
+    S_{t+1} = diag(w_t) S_t + k_t v_tᵀ
+
+with *data-dependent* per-channel decay ``w_t = exp(-exp(w0 + lora(x_t)))``
+(the Finch contribution) and token-shift mixing whose five mix vectors are
+themselves LoRA-produced from the shifted input.
+
+All projections are computed for the full sequence outside the recurrence;
+only the O(dh²) state update is sequential. Prefill runs a two-level scan
+(outer chunks, remat'd; inner steps) so backward stores only chunk-boundary
+states. Decode consumes/updates a cached ``(shift, shift_cm, state)``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn import ParamSpec
+from repro.nn import layers as L
+from repro.sharding import constrain
+
+_MIXES = ("w", "k", "v", "r", "g")
+
+
+def _dims(cfg: ModelConfig):
+    dh = cfg.rwkv.head_dim
+    H = cfg.d_model // dh
+    return H, dh
+
+
+def rwkv_spec(cfg: ModelConfig):
+    D = cfg.d_model
+    r = cfg.rwkv
+    H, dh = _dims(cfg)
+    pd = cfg.param_dtype
+    spec = {
+        # token-shift base mix coefficients (x_maa) + per-target deltas
+        "mix_x": ParamSpec((D,), pd, "uniform", ("embed",), init_scale=0.5),
+        "mix_base": ParamSpec((len(_MIXES), D), pd, "uniform",
+                              (None, "embed"), init_scale=0.5),
+        # data-dependent mix LoRA: D -> 5*mix_lora -> 5*D
+        "mix_a": ParamSpec((D, len(_MIXES) * r.mix_lora), pd,
+                           "scaled_normal", ("embed", None)),
+        "mix_b": ParamSpec((len(_MIXES), r.mix_lora, D), pd,
+                           "scaled_normal", (None, None, "embed"),
+                           fan_in_dims=(1,)),
+        # projections
+        "wr": ParamSpec((D, D), pd, "scaled_normal", ("embed", "heads")),
+        "wk": ParamSpec((D, D), pd, "scaled_normal", ("embed", "heads")),
+        "wv": ParamSpec((D, D), pd, "scaled_normal", ("embed", "heads")),
+        "wg": ParamSpec((D, D), pd, "scaled_normal", ("embed", "heads")),
+        "wo": ParamSpec((D, D), pd, "scaled_normal", ("heads", "embed")),
+        # decay: w0 + tanh(x @ da) @ db   (per-channel)
+        "w0": ParamSpec((D,), jnp.float32, "uniform", ("embed",),
+                        init_scale=1.0),
+        "decay_a": ParamSpec((D, r.decay_lora), pd, "scaled_normal",
+                             ("embed", None)),
+        "decay_b": ParamSpec((r.decay_lora, D), pd, "scaled_normal",
+                             (None, "embed")),
+        # per-head bonus u
+        "u": ParamSpec((H, dh), jnp.float32, "uniform",
+                       ("heads", "head_dim"), init_scale=0.5),
+        "ln_out": ParamSpec((D,), pd, "ones", ("embed",)),
+        # channel-mix
+        "cm_mix_k": ParamSpec((D,), pd, "uniform", ("embed",),
+                              init_scale=0.5),
+        "cm_wk": ParamSpec((D, cfg.d_ff), pd, "scaled_normal",
+                           ("embed", "mlp")),
+        "cm_wv": ParamSpec((cfg.d_ff, D), pd, "scaled_normal",
+                           ("mlp", "embed")),
+    }
+    return spec
+
+
+def cache_spec(cfg: ModelConfig, batch: int):
+    H, dh = _dims(cfg)
+    return {
+        "shift_tm": jax.ShapeDtypeStruct((batch, cfg.d_model), cfg.dtype),
+        "shift_cm": jax.ShapeDtypeStruct((batch, cfg.d_model), cfg.dtype),
+        "state": jax.ShapeDtypeStruct((batch, H, dh, dh), jnp.float32),
+    }
+
+
+def _token_shift(x, prev):
+    """x: (B,S,D); prev: (B,D) last token of previous segment (or zeros).
+    Returns x shifted right by one along S."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _wkv_scan(r, k, v, w, u, s0, chunk: int, remat: bool):
+    """r/k/v: (B,S,H,dh); w: (B,S,H,dh) decays in (0,1); s0: (B,H,dh,dh).
+
+    Returns (y (B,S,H,dh), s_final).
+    """
+    B, S, H, dh = r.shape
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs                      # (B,H,dh)
+        # y_t = r @ (S + (u*k) v^T)
+        att = s + (u * kt)[..., :, None] * vt[..., None, :]
+        yt = jnp.einsum("bhk,bhkv->bhv", rt, att)
+        s_new = wt[..., :, None] * s + kt[..., :, None] * vt[..., None, :]
+        return s_new, yt
+
+    if S == 1:
+        s1, y = step(s0, (r[:, 0].astype(jnp.float32),
+                          k[:, 0].astype(jnp.float32),
+                          v[:, 0].astype(jnp.float32),
+                          w[:, 0].astype(jnp.float32)))
+        return y[:, None], s1
+
+    c = min(chunk, S)
+    while S % c:
+        c //= 2
+    nch = S // c
+
+    def seg(t):
+        return (t.astype(jnp.float32)
+                .reshape(B, nch, c, H, dh).swapaxes(0, 1))
+
+    rs, ks, vs, ws = seg(r), seg(k), seg(v), seg(w)
+
+    def inner(s, xs):
+        return step(s, xs)
+
+    def outer(s, xs):
+        rc, kc, vc, wc = xs                     # (B,c,H,dh)
+        s_new, yc = jax.lax.scan(
+            inner, s, (rc.swapaxes(0, 1), kc.swapaxes(0, 1),
+                       vc.swapaxes(0, 1), wc.swapaxes(0, 1)))
+        return s_new, yc.swapaxes(0, 1)         # (B,c,H,dh)
+
+    if remat:
+        outer = jax.checkpoint(outer)
+    s_final, y = jax.lax.scan(outer, s0, (rs, ks, vs, ws))
+    y = y.swapaxes(0, 1).reshape(B, S, H, dh)
+    return y, s_final
+
+
+def time_mix(params, cfg: ModelConfig, x, cache=None):
+    """x: (B,S,D) -> (y, new_cache_fields)."""
+    B, S, D = x.shape
+    H, dh = _dims(cfg)
+    r_cfg = cfg.rwkv
+
+    prev = (cache["shift_tm"] if cache is not None
+            else jnp.zeros((B, D), x.dtype))
+    xs = _token_shift(x, prev)
+    xx = xs - x
+    # data-dependent mixing: 5 mix vectors from a shared LoRA stack
+    xin = x + xx * params["mix_x"]
+    lora = jnp.tanh(jnp.einsum("bsd,dr->bsr", xin, params["mix_a"]))
+    lora = lora.reshape(B, S, len(_MIXES), r_cfg.mix_lora)
+    deltas = jnp.einsum("bsmr,mrd->bsmd", lora, params["mix_b"])
+    mixed = {}
+    for i, name in enumerate(_MIXES):
+        mu = params["mix_base"][i] + deltas[..., i, :]
+        mixed[name] = x + xx * mu
+
+    r = jnp.einsum("bsd,de->bse", mixed["r"], params["wr"])
+    k = jnp.einsum("bsd,de->bse", mixed["k"], params["wk"])
+    v = jnp.einsum("bsd,de->bse", mixed["v"], params["wv"])
+    g = jnp.einsum("bsd,de->bse", mixed["g"], params["wg"])
+
+    dec = (params["w0"] +
+           jnp.einsum("bsr,rd->bsd",
+                      jnp.tanh(jnp.einsum("bsd,dr->bsr", mixed["w"],
+                                          params["decay_a"])),
+                      params["decay_b"]).astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(dec))                   # (B,S,D) in (0,1)
+
+    def heads(t):
+        return t.reshape(B, S, H, dh)
+
+    y, s_final = _wkv_scan(heads(r), heads(k), heads(v), heads(w),
+                           params["u"],
+                           (cache["state"] if cache is not None
+                            else jnp.zeros((B, H, dh, dh), jnp.float32)),
+                           chunk=128, remat=(cfg.remat == "full"))
+    # per-head group norm
+    y32 = y.astype(jnp.float32)
+    mu = jnp.mean(y32, axis=-1, keepdims=True)
+    var = jnp.var(y32, axis=-1, keepdims=True)
+    y = ((y32 - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(B, S, D)
+    y = y * params["ln_out"].astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(g)
+    out = jnp.einsum("bse,ed->bsd", y, params["wo"])
+    new = None
+    if cache is not None:
+        new = {"shift_tm": x[:, -1, :].astype(cfg.dtype), "state": s_final}
+    return out, new
+
+
+def channel_mix(params, cfg: ModelConfig, x, cache=None):
+    B, S, D = x.shape
+    prev = (cache["shift_cm"] if cache is not None
+            else jnp.zeros((B, D), x.dtype))
+    xs = _token_shift(x, prev)
+    xk = x + (xs - x) * params["cm_mix_k"]
+    h = jnp.square(jax.nn.relu(
+        jnp.einsum("bsd,df->bsf", xk, params["cm_wk"])))
+    h = constrain(h, ("batch", "seq", "mlp"))
+    y = jnp.einsum("bsf,fd->bsd", h, params["cm_wv"])
+    new = ({"shift_cm": x[:, -1, :].astype(cfg.dtype)}
+           if cache is not None else None)
+    return y, new

@@ -1,0 +1,273 @@
+"""Layer stacks: heterogeneous block patterns lowered to a few lax.scans.
+
+``cfg.scan_groups()`` greedily factors the per-layer (mixer, ffn) pattern
+into ``(unit, repeats)`` groups — e.g. jamba's period-8 block scans as one
+8-layer unit × 4 repeats; deepseek-v3's ``3 dense + 58 moe`` becomes two
+groups. Parameters of a repeated unit are stacked on a leading ``layers``
+axis (never sharded) and the unit body runs under ``lax.scan``, keeping
+HLO size and compile time independent of depth.
+
+Caches (KV / SSM / RWKV state) mirror the group structure: leaf arrays of
+a repeated group carry the same leading ``reps`` axis and ride through the
+scan as ``xs``/``ys``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba as mamba_lib
+from repro.models import moe as moe_lib
+from repro.models import rwkv as rwkv_lib
+from repro.nn import ParamSpec, stack_tree
+from repro.nn import layers as L
+from repro.sharding import constrain
+
+
+# ------------------------------------------------------------------ specs
+
+def _norm_spec(cfg: ModelConfig):
+    pd = cfg.param_dtype
+    if cfg.norm_type == "layernorm":
+        return {"scale": ParamSpec((cfg.d_model,), pd, "ones", ("embed",)),
+                "bias": ParamSpec((cfg.d_model,), pd, "zeros", ("embed",))}
+    return {"scale": ParamSpec((cfg.d_model,), pd, "ones", ("embed",))}
+
+
+def _ffn_spec(cfg: ModelConfig):
+    D, F = cfg.d_model, cfg.d_ff
+    pd = cfg.param_dtype
+    if cfg.ffn_type == "gelu":
+        return {"w1": ParamSpec((D, F), pd, "scaled_normal",
+                                ("embed", "mlp")),
+                "b1": ParamSpec((F,), pd, "zeros", ("mlp",)),
+                "w2": ParamSpec((F, D), pd, "scaled_normal",
+                                ("mlp", "embed")),
+                "b2": ParamSpec((D,), pd, "zeros", ("embed",))}
+    return {"wg": ParamSpec((D, F), pd, "scaled_normal", ("embed", "mlp")),
+            "wu": ParamSpec((D, F), pd, "scaled_normal", ("embed", "mlp")),
+            "wd": ParamSpec((F, D), pd, "scaled_normal", ("mlp", "embed"))}
+
+
+def block_spec(cfg: ModelConfig, kind: Tuple[str, str]):
+    mixer, ffn = kind
+    spec: Dict[str, Any] = {"norm1": _norm_spec(cfg)}
+    if mixer == "attn":
+        spec["mixer"] = attn.gqa_spec(cfg)
+    elif mixer == "mla":
+        spec["mixer"] = attn.mla_spec(cfg)
+    elif mixer == "mamba":
+        spec["mixer"] = mamba_lib.mamba_spec(cfg)
+    elif mixer == "rwkv":
+        spec["mixer"] = rwkv_lib.rwkv_spec(cfg)
+    else:
+        raise ValueError(mixer)
+    spec["norm2"] = _norm_spec(cfg)
+    if mixer == "rwkv":
+        pass                       # channel-mix params live in the mixer spec
+    elif ffn == "moe":
+        spec["ffn"] = moe_lib.moe_spec(cfg)
+    else:
+        spec["ffn"] = _ffn_spec(cfg)
+    return spec
+
+
+def stack_spec(cfg: ModelConfig):
+    groups: Dict[str, Any] = {}
+    for gi, (unit, reps) in enumerate(cfg.scan_groups()):
+        g = {f"u{ui}": block_spec(cfg, kind)
+             for ui, kind in enumerate(unit)}
+        groups[f"g{gi}"] = stack_tree(g, reps) if reps > 1 else g
+    return groups
+
+
+# ------------------------------------------------------------------ caches
+
+def block_cache_spec(cfg: ModelConfig, kind: Tuple[str, str], batch: int,
+                     max_len: int):
+    mixer, _ = kind
+    kv_dt = cfg.kv_cache_dtype or cfg.dtype
+    if mixer == "attn":
+        KV, dh = cfg.n_kv_heads, cfg.d_head
+        return {"k": jax.ShapeDtypeStruct((batch, max_len, KV, dh),
+                                          kv_dt),
+                "v": jax.ShapeDtypeStruct((batch, max_len, KV, dh),
+                                          kv_dt)}
+    if mixer == "mla":
+        m = cfg.mla
+        return {"c_kv": jax.ShapeDtypeStruct((batch, max_len,
+                                              m.kv_lora_rank), kv_dt),
+                "k_rope": jax.ShapeDtypeStruct((batch, max_len,
+                                                m.qk_rope_dim), kv_dt)}
+    if mixer == "mamba":
+        return mamba_lib.cache_spec(cfg, batch)
+    if mixer == "rwkv":
+        return rwkv_lib.cache_spec(cfg, batch)
+    raise ValueError(mixer)
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int):
+    """Abstract cache tree matching stack_spec's group structure."""
+    def stack_sds(tree, n):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + tuple(s.shape), s.dtype),
+            tree)
+
+    groups: Dict[str, Any] = {}
+    for gi, (unit, reps) in enumerate(cfg.scan_groups()):
+        g = {f"u{ui}": block_cache_spec(cfg, kind, batch, max_len)
+             for ui, kind in enumerate(unit)}
+        groups[f"g{gi}"] = stack_sds(g, reps) if reps > 1 else g
+    return groups
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, max_len))
+
+
+def cache_axes(cfg: ModelConfig):
+    """Logical sharding axes per cache leaf (same tree structure)."""
+    def axes_for(shape_len, mixer, stacked):
+        lead = ("layers",) if stacked else ()
+        if mixer in ("attn",):
+            return lead + ("batch", None, "kv_heads", None)
+        if mixer == "mla":
+            return lead + ("batch", None, None)
+        if mixer == "mamba":
+            return {"conv": lead + ("batch", None, "mlp"),
+                    "ssm": lead + ("batch", "mlp", None)}
+        if mixer == "rwkv":
+            return {"shift_tm": lead + ("batch", None),
+                    "shift_cm": lead + ("batch", None),
+                    "state": lead + ("batch", "heads", None, None)}
+        raise ValueError(mixer)
+
+    groups: Dict[str, Any] = {}
+    for gi, (unit, reps) in enumerate(cfg.scan_groups()):
+        g: Dict[str, Any] = {}
+        for ui, (mixer, _) in enumerate(unit):
+            a = axes_for(None, mixer, reps > 1)
+            if mixer == "attn":
+                g[f"u{ui}"] = {"k": a, "v": a}
+            elif mixer == "mla":
+                g[f"u{ui}"] = {"c_kv": a, "k_rope": a}
+            else:
+                g[f"u{ui}"] = a
+        groups[f"g{gi}"] = g
+    return groups
+
+
+# ------------------------------------------------------------------ apply
+
+def _norm(params, cfg: ModelConfig, x):
+    if cfg.norm_type == "layernorm":
+        return L.layer_norm(x, params["scale"], params["bias"])
+    return L.rms_norm(x, params["scale"])
+
+
+def _ffn(params, cfg: ModelConfig, x):
+    if cfg.ffn_type == "gelu":
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, params["w1"])
+                        + params["b1"])
+        h = constrain(h, ("batch", "seq", "mlp"))
+        return jnp.einsum("bsf,fd->bsd", h, params["w2"]) + params["b2"]
+    g = jnp.einsum("bsd,df->bsf", x, params["wg"])
+    u = jnp.einsum("bsd,df->bsf", x, params["wu"])
+    h = jax.nn.silu(g) * u
+    h = constrain(h, ("batch", "seq", "mlp"))
+    return jnp.einsum("bsf,fd->bsd", h, params["wd"])
+
+
+def block_apply(params, cfg: ModelConfig, kind: Tuple[str, str], x,
+                positions, cache=None, cache_index=None):
+    """One block. Returns (x, aux, new_cache)."""
+    mixer, ffn = kind
+    h = _norm(params["norm1"], cfg, x)
+    if mixer == "attn":
+        y, new_cache = attn.gqa_apply(params["mixer"], cfg, h, positions,
+                                      cache, cache_index)
+    elif mixer == "mla":
+        if cache is not None and getattr(cfg, "mla_absorb", True):
+            # decode-optimized absorbed form (beyond-paper; see §Perf)
+            y, new_cache = attn.mla_apply_absorbed(
+                params["mixer"], cfg, h, positions, cache, cache_index)
+        else:
+            y, new_cache = attn.mla_apply(params["mixer"], cfg, h,
+                                          positions, cache, cache_index)
+    elif mixer == "mamba":
+        y, new_cache = mamba_lib.mamba_apply(params["mixer"], cfg, h, cache)
+    elif mixer == "rwkv":
+        y, tm_new = rwkv_lib.time_mix(params["mixer"], cfg, h, cache)
+        new_cache = dict(tm_new) if tm_new is not None else None
+    else:
+        raise ValueError(mixer)
+    x = x + y
+    aux = jnp.zeros((), jnp.float32)
+
+    h2 = _norm(params["norm2"], cfg, x)
+    if mixer == "rwkv":
+        y2, cm_new = rwkv_lib.channel_mix(params["mixer"], cfg, h2, cache)
+        if new_cache is not None and cm_new is not None:
+            new_cache.update(cm_new)
+    elif ffn == "moe":
+        y2, aux = moe_lib.moe_apply(params["ffn"], cfg, h2)
+    else:
+        y2 = _ffn(params["ffn"], cfg, h2)
+    x = x + y2
+    x = constrain(x, ("batch", "seq", "embed"))
+    return x, aux, new_cache
+
+
+def stack_apply(params, cfg: ModelConfig, x, positions, caches=None,
+                cache_index=None):
+    """Run all groups. Returns (x, aux_total, new_caches)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: Optional[Dict[str, Any]] = {} if caches is not None else None
+
+    for gi, (unit, reps) in enumerate(cfg.scan_groups()):
+        gp = params[f"g{gi}"]
+        gc = caches[f"g{gi}"] if caches is not None else None
+
+        if reps == 1:
+            ng: Dict[str, Any] = {}
+            for ui, kind in enumerate(unit):
+                bc = gc[f"u{ui}"] if gc is not None else None
+                fn = block_apply
+                if cfg.remat == "full" and gc is None:
+                    fn = jax.checkpoint(block_apply,
+                                        static_argnums=(1, 2))
+                x, aux, nbc = fn(gp[f"u{ui}"], cfg, kind, x, positions,
+                                 bc, cache_index)
+                aux_total = aux_total + aux
+                if ng is not None and nbc is not None:
+                    ng[f"u{ui}"] = nbc
+            if new_caches is not None:
+                new_caches[f"g{gi}"] = ng
+            continue
+
+        # repeated unit: scan over the stacked leading axis
+        def body(carry, xs):
+            xx, aux_acc = carry
+            p_slice, c_slice = xs
+            ng: Dict[str, Any] = {}
+            for ui, kind in enumerate(unit):
+                bc = c_slice[f"u{ui}"] if c_slice is not None else None
+                xx, aux, nbc = block_apply(p_slice[f"u{ui}"], cfg, kind,
+                                           xx, positions, bc, cache_index)
+                aux_acc = aux_acc + aux
+                if nbc is not None:
+                    ng[f"u{ui}"] = nbc
+            return (xx, aux_acc), (ng if ng else None)
+
+        if cfg.remat == "full" and gc is None:
+            body = jax.checkpoint(body)
+        (x, aux_total), ys = jax.lax.scan(
+            body, (x, aux_total), (gp, gc))
+        if new_caches is not None:
+            new_caches[f"g{gi}"] = ys
+    return x, aux_total, new_caches

@@ -1,0 +1,4 @@
+from repro.nn.spec import (ParamSpec, abstract_params, axes_tree,
+                           build_params, count_bytes, count_params,
+                           stack_tree, stacked)
+from repro.nn import layers, init

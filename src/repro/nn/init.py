@@ -1,0 +1,67 @@
+"""Initializer registry for ParamSpec leaves."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _fan_in(spec) -> int:
+    if spec.fan_in_dims is not None:
+        dims = spec.fan_in_dims
+    else:
+        # default: all but the last dim count as fan-in, skipping a leading
+        # "layers" stack axis.
+        start = 1 if (spec.axes and spec.axes[0] == "layers") else 0
+        dims = tuple(range(start, max(start, len(spec.shape) - 1)))
+    f = 1
+    for d in dims:
+        f *= int(spec.shape[d])
+    return max(f, 1)
+
+
+def normal(key, spec):
+    return (spec.init_scale *
+            jax.random.normal(key, spec.shape, spec.dtype))
+
+
+def scaled_normal(key, spec):
+    """LeCun-style 1/sqrt(fan_in) normal — default for dense kernels."""
+    std = float(spec.init_scale / np.sqrt(_fan_in(spec)))  # weak-typed
+    return std * jax.random.normal(key, spec.shape, spec.dtype)
+
+
+def embedding(key, spec):
+    return (spec.init_scale *
+            jax.random.normal(key, spec.shape, spec.dtype))
+
+
+def zeros(key, spec):
+    return jnp.zeros(spec.shape, spec.dtype)
+
+
+def ones(key, spec):
+    return jnp.ones(spec.shape, spec.dtype)
+
+
+def uniform(key, spec):
+    return spec.init_scale * jax.random.uniform(
+        key, spec.shape, spec.dtype, minval=-1.0, maxval=1.0)
+
+
+_REGISTRY = {
+    "normal": normal,
+    "scaled_normal": scaled_normal,
+    "embedding": embedding,
+    "zeros": zeros,
+    "ones": ones,
+    "uniform": uniform,
+}
+
+
+def get(name: str):
+    return _REGISTRY[name]
+
+
+def register(name: str, fn):
+    _REGISTRY[name] = fn

@@ -1,0 +1,104 @@
+"""Functional layer ops shared across model families."""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- norms
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------- rope
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    """Inverse frequencies, shape (head_dim // 2,). float32."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_cos_sin(positions, head_dim: int, theta: float = 10000.0):
+    """positions: (..., seq) int -> cos,sin (..., seq, head_dim//2)."""
+    inv = rope_freqs(head_dim, theta)
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., seq, heads, head_dim); cos/sin: (..., seq, head_dim//2).
+
+    Rotates pairs (x[..., :half], x[..., half:]) — the "NeoX"/llama layout.
+    """
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    # broadcast cos/sin over the heads axis
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    return jnp.concatenate(
+        [x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(dt)
+
+
+def mrope_cos_sin(positions, head_dim: int, sections: Sequence[int],
+                  theta: float = 10000.0):
+    """Multimodal RoPE (Qwen2-VL): positions (..., seq, 3) for (t, h, w).
+
+    ``sections`` gives the number of *frequency pairs* per modality axis,
+    summing to head_dim // 2. Each frequency slot takes its angle from the
+    position channel its section belongs to.
+    """
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    inv = rope_freqs(head_dim, theta)                       # (half,)
+    # section id per frequency slot -> which position channel drives it
+    sect_id = jnp.repeat(
+        jnp.arange(len(sections)), jnp.asarray(sections),
+        total_repeat_length=half)                           # (half,)
+    pos = positions.astype(jnp.float32)                     # (..., seq, 3)
+    pos_per_freq = jnp.take(pos, sect_id, axis=-1)          # (..., seq, half)
+    ang = pos_per_freq * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+# ---------------------------------------------------------------- misc
+
+def soft_cap(x, cap: float):
+    """tanh soft-capping of attention logits (grok-1 style)."""
+    return cap * jnp.tanh(x / cap)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """(..., d) @ gate/up (d, f) -> silu(g) * u @ down (f, d)."""
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def causal_mask(q_len: int, kv_len: int, q_offset=0):
+    """Boolean (q_len, kv_len) mask, True = attend. q_offset may be traced."""
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(kv_len)[None, :]
+    return k_pos <= q_pos
+
+
+def take_embedding(table, ids):
+    """Gather rows; ids int32 of any shape."""
+    return jnp.take(table, ids, axis=0)

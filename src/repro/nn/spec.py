@@ -1,0 +1,111 @@
+"""Parameter-spec substrate.
+
+No flax/haiku in this environment, and the dry-run needs abstract parameter
+trees (shapes + logical sharding axes) *without allocation*. So models here
+declare their parameters as a tree of :class:`ParamSpec` leaves; the same
+spec tree yields
+
+* ``build_params``    -> concrete arrays (for real training / smoke tests)
+* ``abstract_params`` -> jax.ShapeDtypeStruct tree (for .lower() dry-runs)
+* ``axes_tree``       -> logical-axis tuples (for NamedSharding resolution)
+
+Stacked (scan-over-layers) parameters carry a leading ``layers`` axis which is
+never sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn import init as init_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One parameter: shape, dtype, initializer and logical sharding axes."""
+
+    shape: tuple
+    dtype: Any = jnp.float32
+    init: str = "normal"          # name into repro.nn.init registry
+    axes: tuple = ()              # logical axis name (or None) per dim
+    init_scale: float = 1.0
+    fan_in_dims: Optional[tuple] = None  # dims counted as fan-in for scaled init
+
+    def __post_init__(self):
+        if self.axes and len(self.axes) != len(self.shape):
+            raise ValueError(
+                f"axes {self.axes} rank != shape {self.shape} rank")
+
+    def abstract(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(tuple(int(s) for s in self.shape),
+                                    self.dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _map_specs(fn: Callable[[ParamSpec], Any], tree):
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def abstract_params(spec_tree):
+    """ShapeDtypeStruct tree — used by the dry-run, never allocates."""
+    return _map_specs(lambda s: s.abstract(), spec_tree)
+
+
+def axes_tree(spec_tree):
+    """Tree of logical-axis tuples, same structure as the param tree."""
+    return _map_specs(lambda s: tuple(s.axes) if s.axes else
+                      tuple([None] * len(s.shape)), spec_tree)
+
+
+def build_params(spec_tree, key: jax.Array):
+    """Materialize a spec tree into concrete jnp arrays.
+
+    Keys are derived per-leaf from the leaf path so that adding/removing a
+    parameter does not reshuffle every other parameter's init stream.
+    """
+    import zlib
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(
+        spec_tree, is_leaf=is_spec)[0]
+    treedef = jax.tree_util.tree_structure(spec_tree, is_leaf=is_spec)
+    out = []
+    for path, spec in leaves_with_paths:
+        path_str = jax.tree_util.keystr(path)
+        # stable hash: Python's hash() is salted per process, which would
+        # make inits (and borderline numeric tests) non-reproducible
+        leaf_key = jax.random.fold_in(
+            key, np.uint32(zlib.crc32(path_str.encode()) & 0x7FFFFFFF))
+        fn = init_lib.get(spec.init)
+        out.append(fn(leaf_key, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def count_params(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_spec)
+    return int(sum(int(np.prod(s.shape)) for s in leaves))
+
+
+def count_bytes(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_spec)
+    return int(sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+                   for s in leaves))
+
+
+def stacked(spec: ParamSpec, n: int) -> ParamSpec:
+    """Add a leading scan-over-layers axis (never sharded)."""
+    return dataclasses.replace(
+        spec,
+        shape=(n,) + tuple(spec.shape),
+        axes=("layers",) + tuple(spec.axes if spec.axes
+                                 else [None] * len(spec.shape)),
+    )
+
+
+def stack_tree(tree, n: int):
+    return _map_specs(lambda s: stacked(s, n), tree)

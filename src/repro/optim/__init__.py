@@ -1,0 +1,2 @@
+from repro.optim.adam import Adam, AdamState, clip_by_global_norm, global_norm
+from repro.optim import schedule, grad_compress

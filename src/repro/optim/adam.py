@@ -1,0 +1,101 @@
+"""Adam/AdamW, written against plain pytrees (optax is not available here).
+
+Moments can be kept in a reduced dtype (``moment_dtype=bf16``) — the update
+math always runs in f32. Optimizer state is a pytree with the same structure
+as the params, so the sharding rules that apply to a parameter apply
+verbatim to its moments (ZeRO-1 falls out of the FSDP param rules).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array            # scalar int32
+    mu: Any                    # first moment, same tree as params
+    nu: Any                    # second moment, same tree as params
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    learning_rate: Any = 1e-3            # float or callable(step) -> lr
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0            # AdamW-style decoupled decay
+    moment_dtype: Optional[Any] = None   # None = param dtype
+    grad_clip_norm: Optional[float] = None
+
+    def init(self, params) -> AdamState:
+        def z(p):
+            dt = self.moment_dtype or p.dtype
+            return jnp.zeros(p.shape, dt)
+        return AdamState(step=jnp.zeros((), jnp.int32),
+                         mu=jax.tree.map(z, params),
+                         nu=jax.tree.map(z, params))
+
+    def init_abstract(self, abstract_params) -> AdamState:
+        """ShapeDtypeStruct state tree — for dry-run lowering."""
+        def z(p):
+            dt = self.moment_dtype or p.dtype
+            return jax.ShapeDtypeStruct(p.shape, dt)
+        return AdamState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                        mu=jax.tree.map(z, abstract_params),
+                        nu=jax.tree.map(z, abstract_params))
+
+    def _lr(self, step):
+        if callable(self.learning_rate):
+            return self.learning_rate(step)
+        return self.learning_rate
+
+    def update(self, grads, state: AdamState, params):
+        """Returns (new_params, new_state)."""
+        step = state.step + 1
+        if self.grad_clip_norm is not None:
+            grads = clip_by_global_norm(grads, self.grad_clip_norm)
+        b1, b2 = jnp.float32(self.b1), jnp.float32(self.b2)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+        lr = self._lr(step).astype(jnp.float32) if hasattr(
+            self._lr(step), "astype") else jnp.float32(self._lr(step))
+
+        def upd(p, g, m, n):
+            g32 = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g32
+            n32 = n.astype(jnp.float32) * b2 + (1 - b2) * jnp.square(g32)
+            mhat = m32 / c1
+            nhat = n32 / c2
+            delta = mhat / (jnp.sqrt(nhat) + self.eps)
+            if self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * delta
+            return (new_p.astype(p.dtype),
+                    m32.astype(m.dtype), n32.astype(n.dtype))
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_n = treedef.flatten_up_to(state.nu)
+        out = [upd(p, g, m, n) for p, g, m, n in
+               zip(flat_p, flat_g, flat_m, flat_n)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_n = treedef.unflatten([o[2] for o in out])
+        return new_p, AdamState(step=step, mu=new_m, nu=new_n)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), tree)

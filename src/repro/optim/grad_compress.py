@@ -1,0 +1,65 @@
+"""Gradient-compression hooks for the cross-pod all-reduce.
+
+Two distributed-optimization tricks used by the trainer:
+
+* ``bf16_compress`` — cast grads to bf16 before the data-parallel reduction
+  (GSPMD reduces in the tensor dtype, halving reduction bytes), restore f32
+  for the optimizer math.
+* ``Int8ErrorFeedback`` — symmetric per-tensor int8 quantization with an
+  error-feedback residual carried in the optimizer loop, so quantization
+  noise is unbiased over steps (1-bit-Adam-style, adapted to int8).
+
+Both are pure-pytree transforms, usable inside jit and independent of the
+mesh — the *reduction* itself stays a GSPMD collective; we only shrink what
+flows through it.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def bf16_compress(grads):
+    return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def bf16_decompress(grads):
+    return jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+
+class EFState(NamedTuple):
+    residual: Any   # same tree as grads, f32
+
+
+def ef_init(params) -> EFState:
+    return EFState(residual=jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def _quant_one(g, r):
+    x = g.astype(jnp.float32) + r
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, x - deq
+
+
+def ef_compress(grads, state: EFState):
+    """-> (int8 tree, scale tree, new EFState)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(state.residual)
+    qs, scales, resids = [], [], []
+    for g, r in zip(flat_g, flat_r):
+        q, s, res = _quant_one(g, r)
+        qs.append(q)
+        scales.append(s)
+        resids.append(res)
+    return (treedef.unflatten(qs), treedef.unflatten(scales),
+            EFState(residual=treedef.unflatten(resids)))
+
+
+def ef_decompress(q_tree, scale_tree):
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s,
+                        q_tree, scale_tree)

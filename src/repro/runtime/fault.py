@@ -1,0 +1,154 @@
+"""Fault-tolerance runtime: heartbeat, watchdog, preemption, stragglers.
+
+On a real multi-host deployment each host runs these around the train
+loop; the coordinator (or an external supervisor reading the heartbeat
+files) restarts dead hosts from the latest committed checkpoint. All
+pieces are plain-POSIX (files + signals + threads) so they behave the
+same under pytest as under a cluster supervisor.
+"""
+from __future__ import annotations
+
+import json
+import os
+import signal
+import threading
+import time
+from typing import Callable, List, Optional
+
+
+class Heartbeat:
+    """Daemon thread stamping ``<dir>/heartbeat_<host>`` every interval.
+
+    A supervisor (or Watchdog below) treats a stale stamp as a dead host
+    — the restart path is: kill job, resume from latest checkpoint.
+    """
+
+    def __init__(self, directory: str, host_id: int = 0,
+                 interval_s: float = 5.0):
+        os.makedirs(directory, exist_ok=True)
+        self.path = os.path.join(directory, f"heartbeat_{host_id}")
+        self.interval_s = interval_s
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.beats = 0
+
+    def _run(self):
+        while not self._stop.is_set():
+            self.beat()
+            self._stop.wait(self.interval_s)
+
+    def beat(self):
+        with open(self.path, "w") as f:
+            f.write(str(time.time()))
+        self.beats += 1
+
+    def start(self):
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="heartbeat")
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=2 * self.interval_s)
+
+
+class Watchdog:
+    """Checks heartbeat files; reports hosts whose stamp is stale."""
+
+    def __init__(self, directory: str, timeout_s: float = 30.0):
+        self.directory = directory
+        self.timeout_s = timeout_s
+
+    def dead_hosts(self) -> List[int]:
+        now = time.time()
+        dead = []
+        if not os.path.isdir(self.directory):
+            return dead
+        for name in os.listdir(self.directory):
+            if not name.startswith("heartbeat_"):
+                continue
+            host = int(name.split("_", 1)[1])
+            try:
+                with open(os.path.join(self.directory, name)) as f:
+                    stamp = float(f.read().strip() or 0)
+            except (OSError, ValueError):
+                stamp = 0.0
+            if now - stamp > self.timeout_s:
+                dead.append(host)
+        return sorted(dead)
+
+
+class PreemptionGuard:
+    """SIGTERM/SIGINT -> set a flag; the train loop checkpoints and exits.
+
+    Cloud TPU preemptions deliver SIGTERM with a grace window; the loop
+    polls ``should_stop`` each step and saves a *synchronous* checkpoint
+    before the window closes.
+    """
+
+    def __init__(self, signals=(signal.SIGTERM,)):
+        self._flag = threading.Event()
+        self._signals = signals
+        self._prev = {}
+
+    def __enter__(self):
+        for s in self._signals:
+            self._prev[s] = signal.signal(s, self._handler)
+        return self
+
+    def __exit__(self, *exc):
+        for s, prev in self._prev.items():
+            signal.signal(s, prev)
+        return False
+
+    def _handler(self, signum, frame):
+        self._flag.set()
+
+    def trigger(self):                     # for tests
+        self._flag.set()
+
+    @property
+    def should_stop(self) -> bool:
+        return self._flag.is_set()
+
+
+class StepTimer:
+    """Per-step wall times + straggler detection.
+
+    A step counts as a straggler when it exceeds ``threshold`` x the
+    trailing-median. On a real pod this catches slow hosts / data stalls;
+    mitigation hooks (skip-batch, re-shard) are the caller's policy — the
+    timer provides the signal and the log.
+    """
+
+    def __init__(self, window: int = 64, threshold: float = 2.0):
+        self.window = window
+        self.threshold = threshold
+        self.times: List[float] = []
+        self.stragglers: List[dict] = []
+        self._t0: Optional[float] = None
+        self._step = 0
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        dt = time.perf_counter() - self._t0
+        self.times.append(dt)
+        hist = self.times[-self.window:]
+        med = sorted(hist)[len(hist) // 2]
+        if len(hist) >= 8 and dt > self.threshold * med:
+            self.stragglers.append(
+                {"step": self._step, "seconds": dt, "median": med})
+        self._step += 1
+        return False
+
+    @property
+    def median(self) -> float:
+        if not self.times:
+            return 0.0
+        hist = self.times[-self.window:]
+        return sorted(hist)[len(hist) // 2]

@@ -1,0 +1,38 @@
+"""JSONL metrics logger (append-only, crash-safe line granularity)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, Optional
+
+
+class MetricsLogger:
+    def __init__(self, path: Optional[str] = None, echo: bool = True):
+        self.path = path
+        self.echo = echo
+        if path:
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            self._f = open(path, "a", buffering=1)
+        else:
+            self._f = None
+
+    def log(self, step: int, **values: Any):
+        rec: Dict[str, Any] = {"step": int(step), "time": time.time()}
+        for k, v in values.items():
+            try:
+                rec[k] = float(v)
+            except (TypeError, ValueError):
+                rec[k] = v
+        if self._f:
+            self._f.write(json.dumps(rec) + "\n")
+        if self.echo:
+            kv = " ".join(f"{k}={v:.5g}" if isinstance(v, float)
+                          else f"{k}={v}" for k, v in rec.items()
+                          if k not in ("time",))
+            print(kv, flush=True)
+        return rec
+
+    def close(self):
+        if self._f:
+            self._f.close()

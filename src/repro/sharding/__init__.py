@@ -1,0 +1,4 @@
+from repro.sharding.rules import (ACT_RULES, DEFAULT_RULES, DP_ONLY_RULES,
+                                  PARAM_RULES, RULE_VARIANTS, Rules,
+                                  SP_RULES, batch_sharding, constrain,
+                                  param_sharding, spec_for, use_mesh)

@@ -1,0 +1,15 @@
+import os
+
+# Smoke tests and benches see the REAL device count (1 CPU device); only
+# launch/dryrun.py flips the 512-device placeholder flag, pre-import.
+assert "--xla_force_host_platform_device_count" not in \
+    os.environ.get("XLA_FLAGS", ""), \
+    "dryrun XLA_FLAGS leaked into the test environment"
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,145 @@
+"""Per-architecture smoke tests: reduced same-family configs, one
+forward + one train step on CPU; output shapes + no NaNs. The FULL
+published configs are exercised only via the dry-run (ShapeDtypeStruct,
+no allocation) — see launch/dryrun.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import embeddings as emb
+from repro.models import lm
+from repro.optim import Adam
+
+
+def _batch(cfg, key, B=2, S=32):
+    if cfg.input_kind == "frames":
+        return {
+            "frames": jax.random.normal(key, (B, S, cfg.d_model),
+                                        cfg.dtype),
+            "labels": jnp.where(
+                jax.random.uniform(key, (B, S)) < 0.3,
+                jax.random.randint(key, (B, S), 0, cfg.vocab), -1),
+        }
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+    if cfg.input_kind == "tokens3d":
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None, :, None], (B, S, 3))
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = configs.get_smoke_config(arch)
+    key = jax.random.key(0)
+    params = lm.init_params(cfg, key)
+    batch = _batch(cfg, key)
+
+    h, aux, _ = lm.forward(params, cfg, batch)
+    B, S = (batch.get("tokens", batch.get("frames")).shape[:2])
+    assert h.shape == (B, S, cfg.d_model)
+    assert np.isfinite(np.asarray(h, np.float32)).all()
+
+    opt = Adam(learning_rate=1e-3)
+    step = jax.jit(lm.make_train_step(cfg, opt))
+    params2, _, m = step(params, opt.init(params), batch)
+    assert np.isfinite(float(m["loss"]))
+    # params actually changed
+    l0 = jax.tree.leaves(params)[0]
+    l1 = jax.tree.leaves(params2)[0]
+    assert not np.allclose(np.asarray(l0, np.float32),
+                           np.asarray(l1, np.float32))
+
+
+@pytest.mark.parametrize("arch", [a for a in configs.ARCH_IDS
+                                  if configs.get_config(a).causal])
+def test_decode_step(arch):
+    """Prefill + 3 greedy decode steps; logits finite, shapes right."""
+    cfg = configs.get_smoke_config(arch)
+    params = lm.init_params(cfg, jax.random.key(0))
+    key = jax.random.key(1)
+    B, S = 2, 16
+    prompt = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    out = lm.greedy_decode(params, cfg, prompt, n_steps=3, max_len=64)
+    assert out.shape == (B, 3)
+    assert (np.asarray(out) >= 0).all()
+    assert (np.asarray(out) < cfg.vocab).all()
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    """The full (published) configs carry the exact assigned dimensions."""
+    expected = {
+        "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+        "smollm-360m": (32, 960, 15, 5, 2560, 49152),
+        "deepseek-coder-33b": (62, 7168, 56, 8, 19200, 32256),
+        "qwen2-7b": (28, 3584, 28, 4, 18944, 152064),
+        "glm4-9b": (40, 4096, 32, 2, 13696, 151552),
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 18432, 129280),
+        "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+        "rwkv6-1.6b": (24, 2048, 32, 32, 7168, 65536),
+    }[arch]
+    cfg = configs.get_config(arch)
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab)
+    assert got == expected
+
+
+def test_param_counts_plausible():
+    """Published param counts within 20% for the big archs (sanity that
+    the architecture wiring matches the literature)."""
+    expect = {
+        "smollm-360m": 0.36e9,
+        "deepseek-coder-33b": 33e9,
+        "qwen2-7b": 7.6e9,
+        "glm4-9b": 9.4e9,
+        "qwen2-vl-72b": 72e9,
+        "deepseek-v3-671b": 671e9,
+        "grok-1-314b": 314e9,
+        "jamba-v0.1-52b": 52e9,
+        "rwkv6-1.6b": 1.6e9,
+    }
+    for arch, n in expect.items():
+        cfg = configs.get_config(arch)
+        got = lm.n_params(cfg)
+        assert abs(got - n) / n < 0.20, (arch, got, n)
+
+
+def test_moe_active_params():
+    cfg = configs.get_config("deepseek-v3-671b")
+    active = lm.n_active_params(cfg)
+    # published: ~37B activated
+    assert abs(active - 37e9) / 37e9 < 0.25, active
+
+
+def test_compressed_embedding_shrinks_params():
+    """The paper's technique on an LM vocab: embed+head params collapse."""
+    dense = configs.get_smoke_config("smollm-360m", vocab=49152)
+    compr = configs.get_smoke_config("smollm-360m", vocab=49152,
+                                     embedding="compressed")
+    nd = emb.count_embed_params(dense)
+    nc = emb.count_embed_params(compr)
+    assert nc < nd / 50, (nc, nd)
+
+
+def test_scan_groups_cover_all_layers():
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get_config(arch)
+        groups = cfg.scan_groups()
+        total = sum(len(unit) * reps for unit, reps in groups)
+        assert total == cfg.n_layers, (arch, groups)
+
+
+def test_jamba_layer_pattern():
+    cfg = configs.get_config("jamba-v0.1-52b")
+    kinds = cfg.layer_kinds()
+    # attention at index 4 of each period-8 block; MoE at odd layers
+    for i, (mixer, ffn) in enumerate(kinds):
+        assert mixer == ("attn" if i % 8 == 4 else "mamba")
+        assert ffn == ("moe" if i % 2 == 1 else "dense")
+    # one group of 8 x 4 reps
+    assert cfg.scan_groups()[0][1] == 4

@@ -1,0 +1,65 @@
+"""Classic Bloom filter: contract tests + kernel equivalence."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bloom
+
+
+def _build(keys, fpr=0.05):
+    params = bloom.params_for(len(keys), fpr)
+    bits = bloom.empty(params)
+    bloom.add(bits, keys, params)
+    return params, bits
+
+
+def test_no_false_negatives(rng):
+    keys = rng.integers(0, 1000, size=(5000, 4)).astype(np.int32)
+    params, bits = _build(keys)
+    ans = np.asarray(bloom.query(jnp.asarray(bits), jnp.asarray(keys),
+                                 params))
+    assert ans.all()
+
+
+def test_fpr_near_target(rng):
+    keys = rng.integers(0, 10**6, size=(20_000, 2)).astype(np.int32)
+    params, bits = _build(keys, fpr=0.05)
+    fresh = rng.integers(10**6, 2 * 10**6, size=(20_000, 2)).astype(np.int32)
+    ans = np.asarray(bloom.query(jnp.asarray(bits), jnp.asarray(fresh),
+                                 params))
+    fpr = ans.mean()
+    assert fpr < 0.10, fpr          # 2x headroom over the 0.05 target
+
+
+def test_sizing_formula():
+    p = bloom.params_for(5_000_000, 0.1)
+    # optimal sizing: m = -n ln p / ln^2 2 = 4.79 bits/key -> 2.86 MB.
+    # The paper reports 6.10 MB for its BF-0.1 artifact (~2.1x optimal,
+    # a library-default overhead — documented in EXPERIMENTS.md); we
+    # implement the textbook-optimal filter and verify the math.
+    assert abs(p.size_mb - 2.86) < 0.05, p.size_mb
+    assert p.n_hashes == 3
+    # paper's artifact must be no smaller than the optimum
+    assert 6.10 > p.size_mb
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(1, 500), seed=st.integers(0, 2**31 - 1))
+def test_property_inserted_always_found(n, seed):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 10**9, size=(n, 3)).astype(np.int32)
+    params, bits = _build(keys, fpr=0.01)
+    ans = np.asarray(bloom.query(jnp.asarray(bits), jnp.asarray(keys),
+                                 params))
+    assert ans.all()
+
+
+def test_hash_stability():
+    """Hash values must never change across versions (persisted filters)."""
+    ids = jnp.asarray([[1, 2, 3], [0, 0, 0], [65535, 1, 9]], jnp.int32)
+    h = np.asarray(bloom.hash_tuples(ids, seed=0xA5A5))
+    assert h.dtype == np.uint32
+    assert len(set(h.tolist())) == 3
+    h2 = np.asarray(bloom.hash_tuples(ids, seed=0xA5A5))
+    np.testing.assert_array_equal(h, h2)

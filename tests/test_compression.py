@@ -1,0 +1,110 @@
+"""The paper's core contribution: lossless divmod column compression."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import compression as comp
+
+
+def test_plan_column_uncompressed_below_theta():
+    plan = comp.plan_column(v=100, theta=1000, ns=2)
+    assert not plan.compressed
+    assert plan.input_dims == 100
+
+
+def test_plan_column_two_subcolumns():
+    # the paper's worked example (§3.2): 60000 values, ns=2 -> divisor 245
+    plan = comp.plan_column(v=60000, theta=3000, ns=2)
+    assert plan.compressed
+    assert plan.divisors == (245,)
+    # 60000 -> quotient card ceil(60000/245)=245, remainder card 245
+    assert plan.sub_cards == (245, 245)
+    # paper: "reduce the number of dimensions from 60000 to 489"
+    # (245 + 244 in the paper's counting; our +1-wildcard-slot convention
+    #  reproduces Table 1 exactly -- see core/memory.py)
+    assert plan.input_dims == 245 + 1 + 245 + 1
+
+
+def test_paper_example_value():
+    plan = comp.plan_column(v=60000, theta=3000, ns=2)
+    enc = comp._encode_column(jnp.asarray([5144]), plan)
+    # paper: x=5144 -> sv_q=20, sv_r=244 (quotient-first ordering)
+    assert int(enc[0][0]) == 20
+    assert int(enc[1][0]) == 244
+
+
+@pytest.mark.parametrize("ns", [2, 3, 4])
+@pytest.mark.parametrize("v", [7, 100, 10_000, 60_000, 1_000_000])
+def test_roundtrip_exhaustive_smallish(v, ns):
+    plan = comp.make_plan([v], theta=2, ns=ns)
+    n = min(v, 3000)
+    ids = np.linspace(0, v - 1, n).astype(np.int32).reshape(-1, 1)
+    enc = comp.encode_np(ids, plan)
+    dec = np.asarray(comp.decode(jnp.asarray(enc), plan))
+    np.testing.assert_array_equal(ids, dec)
+
+
+def test_roundtrip_multicolumn(rng):
+    cards = [5, 10001, 27, 1627, 694, 8, 1509]
+    plan = comp.make_plan(cards, theta=100, ns=2)
+    ids = np.stack([rng.integers(0, v, 500) for v in cards],
+                   axis=-1).astype(np.int32)
+    enc = comp.encode_np(ids, plan)
+    dec = np.asarray(comp.decode(jnp.asarray(enc), plan))
+    np.testing.assert_array_equal(ids, dec)
+    # jnp and np encoders agree
+    enc2 = np.asarray(comp.encode(jnp.asarray(ids), plan))
+    np.testing.assert_array_equal(enc, enc2)
+
+
+def test_wildcard_maps_to_dedicated_slot():
+    plan = comp.make_plan([60000], theta=3000, ns=2)
+    col = plan.columns[0]
+    enc = comp.encode_np(np.asarray([[comp.WILDCARD]], np.int32), plan)
+    assert tuple(enc[0]) == col.wildcard_ids
+    dec = np.asarray(comp.decode(jnp.asarray(enc), plan))
+    assert dec[0, 0] == comp.WILDCARD
+
+
+def test_input_dim_shrinks():
+    plan_c = comp.make_plan([60000], theta=3000, ns=2)
+    plan_u = comp.make_plan([60000], theta=10**9, ns=2)
+    assert plan_c.input_dim < plan_u.input_dim / 100
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=200, deadline=None)
+    @given(v=st.integers(2, 10_000_000),
+           ns=st.integers(2, 5),
+           xs=st.lists(st.integers(0, 10_000_000 - 1), min_size=1,
+                       max_size=20))
+    def test_property_lossless(v, ns, xs):
+        """forall v, ns, x < v: decode(encode(x)) == x (paper: 'lossless')."""
+        xs = [x % v for x in xs]
+        plan = comp.make_plan([v], theta=1, ns=ns)
+        ids = np.asarray(xs, np.int32).reshape(-1, 1)
+        enc = comp.encode_np(ids, plan)
+        # every subvalue is within its declared cardinality (wildcard slot
+        # aside) — the embedding-table row bound
+        col = plan.columns[0]
+        if col.compressed:
+            for j, card in enumerate(col.sub_cards):
+                assert (enc[:, j] <= card).all()
+        dec = np.asarray(comp.decode(jnp.asarray(enc), plan))
+        np.testing.assert_array_equal(ids, dec)
+
+    @settings(max_examples=100, deadline=None)
+    @given(v=st.integers(2, 1_000_000), ns=st.integers(2, 4))
+    def test_property_dim_bound(v, ns):
+        """input dims of a split column are O(ns * v^(1/ns)) + wildcards."""
+        plan = comp.plan_column(v, theta=1, ns=ns)
+        if not plan.compressed:
+            return
+        bound = ns * (int(np.ceil(v ** (1.0 / ns))) + 2) + ns
+        assert plan.input_dims <= bound

@@ -1,0 +1,116 @@
+"""Mesh + lowering-spec machinery testable WITHOUT 512 devices: spec
+construction, skip rules, HLO analysis, and a real lower+compile on a
+1-device mesh (structure identical to the production path)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro import configs
+from repro.configs.shapes import SHAPES, live_cells, skip_reason
+from repro.launch import hlo_analysis, specs as specs_lib
+from repro.launch.mesh import make_host_mesh
+from repro.sharding import rules as R
+
+
+def test_skip_rules():
+    hubert = configs.get_config("hubert-xlarge")
+    assert skip_reason(hubert, "decode_32k")
+    assert skip_reason(hubert, "long_500k")
+    assert live_cells(hubert) == ["train_4k", "prefill_32k"]
+
+    smollm = configs.get_config("smollm-360m")
+    assert skip_reason(smollm, "long_500k")        # full attention
+    assert len(live_cells(smollm)) == 3
+
+    rwkv = configs.get_config("rwkv6-1.6b")
+    assert skip_reason(rwkv, "long_500k") is None
+    jamba = configs.get_config("jamba-v0.1-52b")
+    assert len(live_cells(jamba)) == 4
+
+
+def test_total_live_cells():
+    """2 (encoder) + 7x3 (full attention) + 2x4 (ssm/hybrid) = 31."""
+    total = sum(len(live_cells(configs.get_config(a)))
+                for a in configs.ARCH_IDS)
+    assert total == 31
+
+
+def test_batch_specs_shapes():
+    cfg = configs.get_config("smollm-360m")
+    b = specs_lib.batch_specs(cfg, SHAPES["train_4k"])
+    assert b["tokens"].shape == (256, 4096)
+    assert b["labels"].shape == (256, 4096)
+    d = specs_lib.batch_specs(cfg, SHAPES["decode_32k"])
+    assert d["token"].shape == (128, 1)
+
+    vl = configs.get_config("qwen2-vl-72b")
+    bv = specs_lib.batch_specs(vl, SHAPES["train_4k"])
+    assert bv["positions"].shape == (256, 4096, 3)
+
+    au = configs.get_config("hubert-xlarge")
+    ba = specs_lib.batch_specs(au, SHAPES["train_4k"])
+    assert ba["frames"].shape == (256, 4096, 1280)
+
+
+def test_lowering_spec_smoke_mesh():
+    """Full lowering-spec path on a tiny config + 1-device mesh: proves
+    the jit(in_shardings).lower().compile() plumbing independent of the
+    512-device dry-run."""
+    cfg = configs.get_smoke_config("smollm-360m")
+    mesh = make_host_mesh((1, 1), ("data", "model"))
+    # shrink the cell to smoke size
+    import dataclasses
+    from repro.configs.shapes import ShapeCell
+    cell = ShapeCell("train_tiny", 64, 4, "train")
+    import repro.configs.shapes as shp
+    shp.SHAPES["train_tiny"] = cell
+    try:
+        ls = specs_lib.lowering_spec(cfg, "train_tiny", mesh)
+        with R.use_mesh(mesh):
+            compiled = jax.jit(
+                ls.fn, in_shardings=ls.in_shardings,
+                donate_argnums=ls.donate_argnums).lower(*ls.args).compile()
+        assert compiled.cost_analysis() is not None
+        res = hlo_analysis.analyze(compiled.as_text())
+        assert res["weighted_flops"] > 0
+    finally:
+        del shp.SHAPES["train_tiny"]
+
+
+def test_hlo_analysis_trip_counts():
+    """Scan flops must be multiplied by the trip count."""
+    def scanned(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        c, _ = jax.lax.scan(body, x, None, length=10)
+        return c
+    x = jax.ShapeDtypeStruct((128, 128), jnp.bfloat16)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.bfloat16)
+    compiled = jax.jit(scanned).lower(x, w).compile()
+    res = hlo_analysis.analyze(compiled.as_text())
+    assert res["weighted_flops"] == pytest.approx(10 * 2 * 128**3)
+    # raw cost_analysis counts the body once — our weighting fixes it
+    # (small slack: cost_analysis also counts tanh/convert elementwise)
+    assert compiled.cost_analysis()["flops"] == pytest.approx(2 * 128**3,
+                                                              rel=0.05)
+
+
+def test_hlo_type_bytes():
+    assert hlo_analysis._type_bytes("bf16[16,4096,960]{2,1,0}") == \
+        16 * 4096 * 960 * 2
+    assert hlo_analysis._type_bytes("(f32[8], s32[])") == 8 * 4 + 4
+
+
+def test_cache_shardings_build():
+    """Cache sharding trees resolve for every decode-capable arch on a
+    stand-in mesh with production axis names."""
+    devs = np.array(jax.devices() * 4)[:4].reshape(2, 2)
+    mesh = Mesh(devs, ("data", "model"))
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get_config(arch)
+        if not cfg.causal:
+            continue
+        sh = specs_lib.cache_shardings(cfg, SHAPES["decode_32k"], mesh)
+        assert len(jax.tree.leaves(sh)) > 0

@@ -1,0 +1,55 @@
+"""End-to-end existence index: the Bloom-filter contract under learning."""
+import numpy as np
+import pytest
+
+from repro.core import existence
+from repro.data import tuples
+
+
+@pytest.fixture(scope="module")
+def trained_index():
+    ds = tuples.synthesize([800, 400, 120], n_records=8000, seed=1)
+    idx = existence.fit(
+        ds, theta=300,
+        settings=existence.TrainSettings(steps=300, n_pos=8000,
+                                         n_neg=8000, seed=1))
+    return ds, idx
+
+
+def test_zero_false_negatives(trained_index):
+    """THE invariant: every indexed record answers True (model or fixup)."""
+    ds, idx = trained_index
+    ans = np.asarray(idx.query(ds.records))
+    assert ans.all()
+
+
+def test_accuracy_reasonable(trained_index):
+    ds, idx = trained_index
+    assert idx.train_log["accuracy"] > 0.70
+
+
+def test_fixup_filter_bounded(trained_index):
+    ds, idx = trained_index
+    # the fixup filter holds only residual FNs, far fewer than the records
+    assert idx.fixup_filter.n_false_negatives < len(ds.records)
+    assert idx.fixup_filter.size_mb < 1.0
+
+
+def test_compressed_smaller_than_uncompressed():
+    ds = tuples.synthesize([3000, 2500, 2000], n_records=4000, seed=2)
+    st = existence.TrainSettings(steps=60, n_pos=2000, n_neg=2000)
+    c = existence.fit(ds, theta=500, settings=st)
+    u = existence.fit(ds, theta=10**9, settings=st)
+    assert c.memory.nn_params < u.memory.nn_params / 3
+    # both still answer every indexed record
+    assert np.asarray(c.query(ds.records[:500])).all()
+    assert np.asarray(u.query(ds.records[:500])).all()
+
+
+def test_wildcard_queries(trained_index):
+    """(?, v2, v3) subset queries answer True for indexed combinations."""
+    ds, idx = trained_index
+    rows = ds.records[:200].copy()
+    rows[:, 0] = 0                              # wildcard the first column
+    scores = np.asarray(idx.scores(rows))
+    assert np.isfinite(scores).all()

@@ -1,0 +1,116 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bloom
+from repro.kernels.bloom_query import bloom_query, bloom_query_ref
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.qr_embed import qr_embed, qr_embed_ref
+
+
+# ------------------------------------------------------------- qr_embed
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-6),
+                                       (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("v,d,n", [
+    (60_000, 64, 1_000),
+    (49_152, 128, 4_096),
+    (151_321, 96, 777),          # non-multiple-of-block n
+    (1_000, 32, 64),
+])
+def test_qr_embed_allclose(rng, v, d, n, dtype, tol):
+    dv = int(np.ceil(np.sqrt(v)))
+    cq = -(-v // dv)
+    tq = jnp.asarray(rng.standard_normal((cq, d)), dtype)
+    tr = jnp.asarray(rng.standard_normal((dv, d)), dtype)
+    ids = jnp.asarray(rng.integers(0, v, size=(n,)), jnp.int32)
+    out = qr_embed(ids, tq, tr, divisor=dv)
+    ref = qr_embed_ref(ids, tq, tr, divisor=dv)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_qr_embed_nd_ids(rng):
+    v, d = 10_000, 16
+    dv = int(np.ceil(np.sqrt(v)))
+    tq = jnp.asarray(rng.standard_normal((-(-v // dv), d)), jnp.float32)
+    tr = jnp.asarray(rng.standard_normal((dv, d)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, v, size=(4, 7, 3)), jnp.int32)
+    out = qr_embed(ids, tq, tr, divisor=dv)
+    assert out.shape == (4, 7, 3, d)
+    ref = qr_embed_ref(ids.reshape(-1), tq, tr, divisor=dv)
+    np.testing.assert_allclose(np.asarray(out).reshape(-1, d),
+                               np.asarray(ref), rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------- bloom_query
+
+@pytest.mark.parametrize("n_keys,fpr,n_cols", [
+    (5_000, 0.1, 3), (50_000, 0.01, 7), (100, 0.05, 1),
+])
+def test_bloom_query_bit_exact(rng, n_keys, fpr, n_cols):
+    params = bloom.params_for(n_keys, fpr)
+    bits = bloom.empty(params)
+    keys = rng.integers(0, 10_000, size=(n_keys, n_cols)).astype(np.int32)
+    bloom.add(bits, keys, params)
+    n_pos = min(500, n_keys)
+    queries = np.concatenate(
+        [keys[:n_pos],
+         rng.integers(0, 10_000, size=(500, n_cols)).astype(np.int32)])
+    out = np.asarray(bloom_query(jnp.asarray(queries), jnp.asarray(bits),
+                                 params))
+    ref = np.asarray(bloom_query_ref(queries, bits,
+                                     n_hashes=params.n_hashes,
+                                     m_bits=params.m_bits))
+    np.testing.assert_array_equal(out, ref)
+    assert out[:n_pos].all()                    # no false negatives
+
+
+# ------------------------------------------------------ flash_attention
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 3e-2)])
+@pytest.mark.parametrize("B,Sq,H,KV,d,causal", [
+    (2, 256, 4, 2, 64, True),
+    (1, 384, 8, 8, 128, True),
+    (2, 200, 4, 1, 64, True),            # q/kv padding path
+    (1, 256, 4, 4, 64, False),           # bidirectional (encoder)
+    (1, 128, 15, 5, 64, True),           # smollm-style GQA groups
+])
+def test_flash_attention_allclose(rng, B, Sq, H, KV, d, causal, dtype,
+                                  tol):
+    q = jnp.asarray(rng.standard_normal((B, Sq, H, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, Sq, KV, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, Sq, KV, d)), dtype)
+    out = flash_attention(q, k, v, causal=causal)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_softcap(rng):
+    q = jnp.asarray(rng.standard_normal((1, 128, 2, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 128, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 128, 2, 64)), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, softcap=30.0)
+    ref = attention_ref(q, k, v, causal=True, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_matches_model_attend(rng):
+    """The kernel and the model's chunked-jnp attend agree."""
+    from repro.models.attention import attend
+    B, S, H, KV, d = 2, 256, 6, 2, 64
+    q = jnp.asarray(rng.standard_normal((B, S, H, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, d)), jnp.float32)
+    qp = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    kvp = jnp.arange(S, dtype=jnp.int32)
+    a = attend(q, k, v, qp, kvp, causal=True, chunk=64)
+    b = flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-5)

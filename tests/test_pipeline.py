@@ -1,0 +1,59 @@
+"""Pipeline parallelism: numerical equivalence vs the unpipelined stack.
+
+Needs >1 device, so the check runs in a subprocess with the
+placeholder-device flag (the main test process must keep the real
+1-device view — see conftest.py)."""
+import subprocess
+import sys
+
+import pytest
+
+from repro.sharding.pipeline import bubble_fraction, stage_split
+
+_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from repro.sharding.pipeline import pipeline_apply
+
+mesh = jax.make_mesh((4,), ("pipe",))
+n_layers, B, D = 8, 8, 16
+rng = np.random.default_rng(0)
+params = {"w": jnp.asarray(rng.standard_normal((n_layers, D, D)) * 0.2,
+                           jnp.float32),
+          "b": jnp.asarray(rng.standard_normal((n_layers, D)) * 0.1,
+                           jnp.float32)}
+x = jnp.asarray(rng.standard_normal((B, D)), jnp.float32)
+
+def layer_fn(p, x):
+    return jnp.tanh(x @ p["w"] + p["b"])
+
+# reference: plain sequential stack
+ref = x
+for i in range(n_layers):
+    ref = layer_fn({"w": params["w"][i], "b": params["b"][i]}, ref)
+
+out = pipeline_apply(params, layer_fn, x, mesh=mesh, n_micro=4)
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                           rtol=1e-5, atol=1e-5)
+print("PIPELINE_OK")
+"""
+
+
+def test_stage_split():
+    assert stage_split(8, 4) == [(0, 2), (2, 4), (4, 6), (6, 8)]
+    assert stage_split(7, 3) == [(0, 3), (3, 6), (6, 7)]
+
+
+def test_bubble_fraction():
+    assert bubble_fraction(4, 4) == pytest.approx(3 / 7)
+    assert bubble_fraction(32, 4) == pytest.approx(3 / 35)
+    assert bubble_fraction(1, 1) == 0.0
+
+
+def test_pipeline_matches_sequential():
+    res = subprocess.run(
+        [sys.executable, "-c", _SUBPROC],
+        capture_output=True, text=True, timeout=600,
+        env={**__import__("os").environ, "PYTHONPATH": "src"})
+    assert "PIPELINE_OK" in res.stdout, res.stderr[-2000:]

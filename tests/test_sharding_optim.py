@@ -1,0 +1,115 @@
+"""Sharding rule resolution + optimizer + gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec
+
+from repro.optim import Adam, grad_compress, schedule
+from repro.sharding import rules as R
+
+
+def _fake_mesh(shape=(4, 2), axes=("data", "model")):
+    devs = np.array(jax.devices() * int(np.prod(shape)))[
+        :int(np.prod(shape))].reshape(shape)
+    return Mesh(devs, axes)
+
+
+class TestRules:
+    def test_divisibility_drops_axis(self):
+        mesh = _fake_mesh()
+        # 15 heads % 2 != 0 -> model axis dropped
+        spec = R.spec_for((960, 15, 64), ("embed", "heads", "head_dim"),
+                          mesh, R.PARAM_RULES)
+        assert spec == PartitionSpec("data")
+
+    def test_vocab_to_model(self):
+        mesh = _fake_mesh()
+        spec = R.spec_for((49152, 960), ("vocab", "embed"), mesh,
+                          R.PARAM_RULES)
+        assert spec == PartitionSpec("model", "data")
+
+    def test_axis_used_once(self):
+        mesh = _fake_mesh()
+        # both dims prefer model; second dim must not reuse it
+        table = {"a": ("model",), "b": ("model",)}
+        spec = R.spec_for((8, 8), ("a", "b"), mesh, table)
+        assert spec == PartitionSpec("model")
+
+    def test_missing_mesh_axis_ignored(self):
+        mesh = _fake_mesh((2,), ("data",))
+        spec = R.spec_for((64, 64), ("embed", "mlp"), mesh, R.PARAM_RULES)
+        assert spec == PartitionSpec("data")
+
+    def test_sp_rules_shard_seq(self):
+        mesh = _fake_mesh()
+        spec = R.spec_for((8, 4096, 64), ("batch", "seq", "embed"), mesh,
+                          R.SP_RULES.act)
+        assert spec == PartitionSpec("data", "model")
+
+    def test_constrain_noop_without_mesh(self):
+        x = jnp.ones((4, 4))
+        y = R.constrain(x, ("batch", None))
+        assert y is x
+
+
+class TestAdam:
+    def test_convergence_quadratic(self):
+        opt = Adam(learning_rate=0.1)
+        params = {"w": jnp.asarray([3.0, -2.0])}
+        state = opt.init(params)
+        for _ in range(200):
+            grads = {"w": 2 * params["w"]}
+            params, state = opt.update(grads, state, params)
+        assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+    def test_moment_dtype_bf16(self):
+        opt = Adam(learning_rate=1e-3, moment_dtype=jnp.bfloat16)
+        params = {"w": jnp.ones((4,), jnp.float32)}
+        state = opt.init(params)
+        assert state.mu["w"].dtype == jnp.bfloat16
+        params2, state2 = opt.update({"w": jnp.ones((4,))}, state, params)
+        assert params2["w"].dtype == jnp.float32
+
+    def test_grad_clip(self):
+        from repro.optim import clip_by_global_norm, global_norm
+        g = {"a": jnp.full((100,), 10.0)}
+        clipped = clip_by_global_norm(g, 1.0)
+        assert float(global_norm(clipped)) <= 1.0 + 1e-4
+
+    def test_abstract_state_matches_concrete(self):
+        opt = Adam(learning_rate=1e-3, moment_dtype=jnp.bfloat16)
+        params = {"w": jnp.ones((4, 2))}
+        ab = opt.init_abstract(
+            {"w": jax.ShapeDtypeStruct((4, 2), jnp.float32)})
+        concrete = opt.init(params)
+        assert (ab.mu["w"].shape == concrete.mu["w"].shape and
+                ab.mu["w"].dtype == concrete.mu["w"].dtype)
+
+    def test_schedules(self):
+        fn = schedule.warmup_cosine(1.0, 10, 100)
+        assert float(fn(jnp.asarray(0))) == 0.0
+        assert float(fn(jnp.asarray(10))) == pytest.approx(1.0)
+        assert float(fn(jnp.asarray(100))) == pytest.approx(0.1, abs=1e-3)
+
+
+class TestGradCompression:
+    def test_bf16_roundtrip_small_error(self, rng):
+        g = {"w": jnp.asarray(rng.standard_normal(1000), jnp.float32)}
+        back = grad_compress.bf16_decompress(grad_compress.bf16_compress(g))
+        err = float(jnp.abs(back["w"] - g["w"]).max())
+        assert err < 0.01
+
+    def test_int8_error_feedback_unbiased(self, rng):
+        """Error feedback: accumulated quantization error stays bounded
+        and the sum of dequantized grads tracks the true sum."""
+        true = jnp.asarray(rng.standard_normal(500) * 0.1, jnp.float32)
+        state = grad_compress.ef_init({"w": true})
+        total_deq = jnp.zeros_like(true)
+        for _ in range(50):
+            q, s, state = grad_compress.ef_compress({"w": true}, state)
+            deq = grad_compress.ef_decompress(q, s)
+            total_deq = total_deq + deq["w"]
+        # after n steps, sum(deq) ~= n * true (error feedback corrects)
+        np.testing.assert_allclose(np.asarray(total_deq / 50),
+                                   np.asarray(true), atol=2e-3)

