@@ -1,0 +1,131 @@
+"""Filter-serving throughput: queries/sec vs batch size and filter count.
+
+Tracks the batched-query serving trajectory from the PR that introduced
+``repro.serve_filter``:
+
+* two tenants with DIFFERENT plan shapes registered concurrently (the
+  scheduler interleaves their dispatches),
+* queries/sec for each padding bucket (compile excluded by a warmup
+  dispatch per (tenant, bucket)),
+* the anti-baseline: a per-query Python loop over
+  ``ExistenceIndex.query`` — the fused jitted path must beat it by
+  >= 10x (asserted when run as a script).
+
+Usage: PYTHONPATH=src python benchmarks/serve_filter_bench.py
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import existence
+from repro.data import tuples
+from repro.serve_filter import FilterServer
+
+BUCKETS = (64, 256, 1024)
+N_QUERIES = 4096            # per tenant per bucket measurement
+
+
+def fit_tenants(steps: int = 60) -> Dict[str, tuple]:
+    """Two small fitted indexes with distinct plan shapes."""
+    st = existence.TrainSettings(steps=steps, n_pos=4000, n_neg=4000)
+    out = {}
+    for tenant, cards, theta, seed in (
+            ("airline-ish", [900, 700, 300, 120], 250, 11),
+            ("dmv-ish", [50, 1200, 40, 400], 300, 12)):
+        ds = tuples.synthesize(cards, n_records=6000, seed=seed)
+        out[tenant] = (ds, existence.fit(ds, theta=theta, settings=st))
+    return out
+
+
+def _query_pool(ds: tuples.TupleDataset, n: int, seed: int) -> np.ndarray:
+    """Half indexed positives, half random probes."""
+    rng = np.random.default_rng(seed)
+    pos = ds.records[rng.integers(0, len(ds.records), n // 2)]
+    neg = np.stack([rng.integers(1, v, n - n // 2) for v in ds.cards],
+                   axis=-1).astype(np.int32)
+    return np.concatenate([pos, neg], axis=0)
+
+
+def bench_served(tenants: Dict[str, tuple], bucket: int,
+                 n_queries: int = N_QUERIES) -> dict:
+    """QPS through the full server at one request batch size."""
+    srv = FilterServer(buckets=BUCKETS)
+    for name, (_, idx) in tenants.items():
+        srv.register(name, idx)
+    pools = {name: _query_pool(ds, n_queries, seed=1)
+             for name, (ds, _) in tenants.items()}
+
+    # warmup: compile each tenant's (plan-shape, bucket) program
+    for name, pool in pools.items():
+        srv.submit(name, pool[:bucket])
+    srv.run_until_drained()
+
+    t0 = time.perf_counter()
+    for start in range(0, n_queries, bucket):
+        for name, pool in pools.items():
+            srv.submit(name, pool[start:start + bucket])
+    srv.run_until_drained()
+    dt = time.perf_counter() - t0
+
+    total = len(tenants) * n_queries
+    snap = srv.stats_snapshot()
+    return {
+        "bucket": bucket,
+        "filters": len(tenants),
+        "queries": total,
+        "qps": total / dt,
+        "us_per_query": dt / total * 1e6,
+        "batch_occupancy": round(snap["batch_occupancy"], 3),
+        "batch_p50_ms": round(snap["batch_p50_ms"], 3),
+    }
+
+
+def bench_python_loop(tenants: Dict[str, tuple], n: int = 64) -> dict:
+    """The anti-baseline: one eager ExistenceIndex.query per row."""
+    per_query = []
+    for name, (ds, idx) in tenants.items():
+        pool = _query_pool(ds, n, seed=2)
+        idx.query(pool[:1])                       # warmup dispatch
+        t0 = time.perf_counter()
+        for row in pool:
+            np.asarray(idx.query(row[None, :]))
+        per_query.append((time.perf_counter() - t0) / len(pool))
+    mean_s = float(np.mean(per_query))
+    return {"qps": 1.0 / mean_s, "us_per_query": mean_s * 1e6}
+
+
+def run() -> List[dict]:
+    tenants = fit_tenants()
+    rows = [bench_served(tenants, b) for b in BUCKETS]
+    base = bench_python_loop(tenants)
+    for r in rows:
+        r["speedup_vs_python_loop"] = round(base["us_per_query"] /
+                                            r["us_per_query"], 1)
+    rows.append({"bucket": 1, "filters": len(tenants),
+                 "qps": base["qps"], "us_per_query": base["us_per_query"],
+                 "note": "per-query Python loop (baseline)"})
+    return rows
+
+
+def main():
+    rows = run()
+    hdr = f"{'bucket':>7} {'filters':>7} {'qps':>12} {'us/query':>10} " \
+          f"{'occupancy':>9} {'speedup':>8}"
+    print(hdr)
+    for r in rows:
+        print(f"{r['bucket']:>7} {r['filters']:>7} {r['qps']:>12.0f} "
+              f"{r['us_per_query']:>10.1f} "
+              f"{r.get('batch_occupancy', ''):>9} "
+              f"{r.get('speedup_vs_python_loop', ''):>8}"
+              + ("   " + r["note"] if "note" in r else ""))
+    best = max(r.get("speedup_vs_python_loop", 0) for r in rows)
+    assert best >= 10, f"fused path only {best}x over the Python loop"
+    print(f"\nfused path beats the per-query loop by {best}x at best")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -4,19 +4,28 @@
 builds the fixup filter from residual false negatives, and exposes
 ``query`` with the Bloom-filter contract: **no false negatives** on the
 indexed positives (property-tested in tests/test_existence.py).
+
+The query pipeline itself is the pure function :func:`query_stages` —
+``encode -> embed -> MLP -> tau threshold -> fixup Bloom probe`` in one
+jittable program — which the serving subsystem (``repro.serve_filter``)
+compiles per (plan-shape, batch-bucket). A fitted index round-trips
+through ``checkpoint.manager`` via :func:`save_index` / :func:`load_index`
+(arrays in the npz payload, plan/config/tau in the JSON meta).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import compression as comp, fixup, lmbf, memory
+from repro.checkpoint import manager as ckpt
+from repro.core import bloom, compression as comp, fixup, lmbf, memory
 from repro.data import tuples as tuples_lib
+from repro.nn import abstract_params
 from repro.optim import Adam
 
 
@@ -33,6 +42,33 @@ class TrainSettings:
     n_neg: int = 20_000
 
 
+def query_stages(params, cfg: lmbf.LMBFConfig, tau, fixup_bits,
+                 fixup_params: bloom.BloomParams, raw_ids, *,
+                 probe_fn=None):
+    """The whole query pipeline as ONE jittable program.
+
+    ``compression.encode -> embedding gather -> MLP -> tau threshold ->
+    fixup Bloom probe`` with no host round-trips between stages. ``cfg``
+    and ``fixup_params`` are hashable (frozen dataclasses) and must be
+    static under ``jax.jit``; ``tau`` may be traced so filters sharing a
+    plan shape share one compiled program. ``probe_fn(bits, ids)``
+    overrides the fixup probe (the serving subsystem injects the
+    ``kernels/bloom_query`` Pallas kernel here).
+
+    Returns ``(answers, model_yes, backup_yes)`` — the per-stage booleans
+    feed the serving subsystem's stage-FPR counters.
+    """
+    raw_ids = jnp.asarray(raw_ids, jnp.int32)
+    enc = comp.encode(raw_ids, cfg.plan)
+    s = lmbf.predict(params, cfg, enc)
+    model_yes = s >= tau
+    if probe_fn is None:
+        backup_yes = bloom.query(fixup_bits, raw_ids, fixup_params)
+    else:
+        backup_yes = probe_fn(fixup_bits, raw_ids)
+    return model_yes | backup_yes, model_yes, backup_yes
+
+
 @dataclasses.dataclass
 class ExistenceIndex:
     cfg: lmbf.LMBFConfig
@@ -47,10 +83,11 @@ class ExistenceIndex:
 
     def query(self, raw_ids) -> jax.Array:
         """(n, n_cols) raw ids -> (n,) bool membership answers."""
-        s = self.scores(raw_ids)
-        model_yes = s >= self.tau
-        backup_yes = self.fixup_filter.query(jnp.asarray(raw_ids, jnp.int32))
-        return model_yes | backup_yes
+        ans, _, _ = query_stages(
+            self.params, self.cfg, self.tau,
+            jnp.asarray(self.fixup_filter.bits),
+            self.fixup_filter.params, raw_ids)
+        return ans
 
     @property
     def memory(self) -> memory.ModelMemory:
@@ -120,3 +157,85 @@ def fit(ds: tuples_lib.TupleDataset, theta: int, ns: int = 2,
                    "accuracy": acc,
                    "fn_count": fx.n_false_negatives,
                    "steps": st.steps})
+
+
+# ------------------------------------------------------- (de)serialization
+
+def _plan_to_json(plan: comp.CompressionPlan) -> Dict:
+    return {
+        "theta": plan.theta, "ns": plan.ns,
+        "columns": [{"v": c.v, "ns": c.ns,
+                     "divisors": list(c.divisors),
+                     "sub_cards": list(c.sub_cards)}
+                    for c in plan.columns],
+    }
+
+
+def _plan_from_json(d: Dict) -> comp.CompressionPlan:
+    cols = tuple(comp.ColumnPlan(
+        v=int(c["v"]), ns=int(c["ns"]),
+        divisors=tuple(int(x) for x in c["divisors"]),
+        sub_cards=tuple(int(x) for x in c["sub_cards"]))
+        for c in d["columns"])
+    return comp.CompressionPlan(columns=cols, theta=int(d["theta"]),
+                                ns=int(d["ns"]))
+
+
+def index_meta(idx: ExistenceIndex) -> Dict:
+    """JSON-safe description of everything but the arrays."""
+    return {
+        "kind": "existence_index_v1",
+        "plan": _plan_to_json(idx.cfg.plan),
+        "hidden": list(idx.cfg.hidden),
+        "onehot_max": idx.cfg.onehot_max,
+        "dtype": str(jnp.dtype(idx.cfg.dtype)),
+        "tau": float(idx.tau),
+        "fixup": {"m_bits": idx.fixup_filter.params.m_bits,
+                  "n_hashes": idx.fixup_filter.params.n_hashes,
+                  "n_false_negatives": idx.fixup_filter.n_false_negatives},
+        "train_log": idx.train_log,
+    }
+
+
+def config_from_meta(meta: Dict) -> lmbf.LMBFConfig:
+    return lmbf.LMBFConfig(
+        plan=_plan_from_json(meta["plan"]),
+        hidden=tuple(int(h) for h in meta["hidden"]),
+        onehot_max=int(meta["onehot_max"]),
+        dtype=jnp.dtype(meta["dtype"]))
+
+
+def save_index(directory: str, idx: ExistenceIndex, *, step: int = 0,
+               keep: int = 3) -> None:
+    """Persist a fitted index through the checkpoint manager (atomic,
+    keep-N). Arrays (model params + fixup bitset) land in the npz
+    payload; the plan/config/tau ride in the JSON meta."""
+    tree = {"params": idx.params,
+            "fixup_bits": np.asarray(idx.fixup_filter.bits)}
+    ckpt.save(directory, step, tree, extra=index_meta(idx), keep=keep)
+
+
+def load_index(directory: str, step: Optional[int] = None) -> ExistenceIndex:
+    """Rebuild a fitted :class:`ExistenceIndex` written by
+    :func:`save_index`."""
+    if step is None:
+        step = ckpt.latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    meta = ckpt.read_meta(directory, step)["extra"]
+    if meta.get("kind") != "existence_index_v1":
+        raise ValueError(f"{directory} step {step} is not an existence "
+                         f"index checkpoint: {meta.get('kind')!r}")
+    cfg = config_from_meta(meta)
+    bp = bloom.BloomParams(m_bits=int(meta["fixup"]["m_bits"]),
+                           n_hashes=int(meta["fixup"]["n_hashes"]))
+    abstract = {
+        "params": abstract_params(lmbf.params_spec(cfg)),
+        "fixup_bits": jax.ShapeDtypeStruct((bp.n_words,), jnp.uint32),
+    }
+    tree = ckpt.restore(directory, step, abstract)
+    fx = fixup.FixupFilter(
+        params=bp, bits=np.asarray(tree["fixup_bits"]),
+        n_false_negatives=int(meta["fixup"]["n_false_negatives"]))
+    return ExistenceIndex(cfg=cfg, params=tree["params"], fixup_filter=fx,
+                          tau=float(meta["tau"]), train_log=meta["train_log"])

@@ -41,6 +41,12 @@ class LMBFConfig:
     onehot_max: int = 0                  # 0 disables the one-hot path
     dtype: object = jnp.float32
 
+    def __post_init__(self):
+        # canonicalize so configs built from a checkpoint (np.dtype) and
+        # from code (jnp.float32 scalar type) hash identically — the
+        # serving fused-path cache keys on this config
+        object.__setattr__(self, "dtype", jnp.dtype(self.dtype))
+
     @property
     def column_encodings(self):
         """[(rows, embed_dim_or_None)] per subcolumn; None = one-hot."""

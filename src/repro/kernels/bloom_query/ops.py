@@ -1,17 +1,36 @@
 """Public wrapper for the VMEM Bloom probe kernel."""
 from __future__ import annotations
 
+from typing import Optional
+
+import jax
+
 from repro.core import bloom
 from repro.kernels.bloom_query.bloom_query import bloom_query_call
 
 
+def default_interpret() -> bool:
+    """Pallas interpret mode unless running on TPU.
+
+    The serving fused path dispatches here without caring about the
+    platform: on CPU (and GPU — this kernel's whole-bitset BlockSpec is
+    TPU-VMEM-shaped and unvalidated under the Triton lowering) the
+    kernel runs interpreted, bit-exact; on TPU it compiles to the
+    VMEM-resident probe.
+    """
+    return jax.default_backend() != "tpu"
+
+
 def bloom_query(ids, bits, params: bloom.BloomParams, *,
-                block_n: int = 2048, interpret: bool = True):
+                block_n: int = 2048, interpret: Optional[bool] = None):
     """Batched membership probe against a packed Bloom bitset.
 
     Drop-in replacement for ``core.bloom.query`` (same hash family) with
     the bitset VMEM-pinned; validated bit-exact in tests.
+    ``interpret=None`` auto-selects via :func:`default_interpret`.
     """
+    if interpret is None:
+        interpret = default_interpret()
     return bloom_query_call(ids, bits, n_hashes=params.n_hashes,
                             m_bits=params.m_bits, block_n=block_n,
                             interpret=interpret)

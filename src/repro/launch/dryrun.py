@@ -78,7 +78,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
         t_compile = time.perf_counter() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = hlo_analysis.cost_analysis_dict(compiled)
     txt = compiled.as_text()
     if save_hlo:
         with open(save_hlo, "w") as f:

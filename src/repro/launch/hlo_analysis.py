@@ -46,7 +46,7 @@ _COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
 _ATTR_COMP_RE = re.compile(
     r"(?:condition|body|to_apply|calls)=%?([\w.\-]+)")
 _BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
-_TRIP_RE = re.compile(r'known_trip_count..:..n.:.(\d+)')
+_TRIP_RE = re.compile(r'known_trip_count\D*(\d+)')
 _CONST_RE = re.compile(r"\bs(?:8|16|32|64)\[\]\s+constant\((\d+)\)")
 _CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _BDIMS_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
@@ -54,6 +54,36 @@ _BDIMS_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
 _SKIP_BYTES_OPS = {"parameter", "tuple", "get-tuple-element", "constant",
                    "bitcast", "after-all", "opt-barrier", "partition-id",
                    "replica-id", "iota"}
+
+_PREFIXED_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _operand_names(rest: str) -> List[str]:
+    """Instruction names referenced in an operand list.
+
+    Newer XLA prints each operand with its full type
+    (``dot(f32[128,128]{1,0} %convert.11, ...)``); older dumps print bare
+    ``%``-less names. Prefer the ``%``-prefixed form, which is unambiguous,
+    and fall back to every token otherwise (lookups are filtered against
+    the known-instruction table by all callers).
+    """
+    args = rest.split("),")[0]
+    names = _PREFIXED_OPERAND_RE.findall(args)
+    if names:
+        return names
+    return re.findall(r"([\w.\-]+)", args)
+
+
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``Compiled.cost_analysis()`` normalized across JAX versions.
+
+    Older JAX returns a one-element list of per-program dicts; newer JAX
+    returns the dict directly. Callers always want the dict.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
 
 
 def _type_bytes(type_str: str) -> int:
@@ -122,7 +152,7 @@ def _dot_flops(instr: Instr, sizes_of: Dict[str, str]) -> float:
     for d in rdims:
         out_elems *= d
     # contracted size from lhs operand type + contracting dims
-    ops = re.findall(r"%?([\w.\-]+)", instr.rest.split("),")[0])
+    ops = [o for o in _operand_names(instr.rest) if o in sizes_of]
     cdims = _CDIMS_RE.search(instr.line)
     k = 1
     if ops and cdims is not None:
@@ -210,8 +240,7 @@ def analyze(hlo_text: str) -> Dict[str, Any]:
             if it.op.endswith("-done"):
                 continue
             if base in COLLECTIVES:
-                ops = re.findall(r"%?([\w.\-]+)",
-                                 it.rest.split("),")[0])
+                ops = _operand_names(it.rest)
                 opb = sum(_type_bytes(type_of.get(o, ""))
                           for o in ops if o in type_of)
                 per_kind[base]["count"] += mult.get(cname, 1.0)
@@ -222,7 +251,7 @@ def analyze(hlo_text: str) -> Dict[str, Any]:
                 continue                      # bytes: call site counts
             if it.op in _SKIP_BYTES_OPS:
                 continue
-            ops = re.findall(r"%?([\w.\-]+)", it.rest.split("),")[0])
+            ops = _operand_names(it.rest)
             opb = sum(_type_bytes(type_of.get(o, ""))
                       for o in ops if o in type_of)
             bytes_accessed += (opb + _type_bytes(it.type_str)) * \

@@ -1,3 +1,3 @@
 from repro.runtime.fault import (Heartbeat, PreemptionGuard, StepTimer,
                                  Watchdog)
-from repro.runtime.metrics import MetricsLogger
+from repro.runtime.metrics import LatencyWindow, MetricsLogger

@@ -1,6 +1,8 @@
-"""JSONL metrics logger (append-only, crash-safe line granularity)."""
+"""JSONL metrics logger (append-only, crash-safe line granularity) and
+small reusable measurement primitives (latency window with percentiles)."""
 from __future__ import annotations
 
+import collections
 import json
 import os
 import time
@@ -36,3 +38,35 @@ class MetricsLogger:
     def close(self):
         if self._f:
             self._f.close()
+
+
+class LatencyWindow:
+    """Bounded sliding window of durations with percentile readout.
+
+    O(1) record; percentile sorts the window on demand (the window is
+    small — serving stats snapshots are off the hot path).
+    """
+
+    def __init__(self, maxlen: int = 4096):
+        self._buf: collections.deque = collections.deque(maxlen=maxlen)
+        self.count = 0
+
+    def record(self, seconds: float):
+        self._buf.append(float(seconds))
+        self.count += 1
+
+    def percentile(self, q: float) -> float:
+        """q in [0, 100]; 0.0 when empty (nearest-rank method)."""
+        if not self._buf:
+            return 0.0
+        data = sorted(self._buf)
+        rank = min(len(data) - 1, max(0, int(round(
+            q / 100.0 * (len(data) - 1)))))
+        return data[rank]
+
+    def summary(self, prefix: str = "") -> Dict[str, float]:
+        return {
+            f"{prefix}p50_ms": self.percentile(50) * 1e3,
+            f"{prefix}p99_ms": self.percentile(99) * 1e3,
+            f"{prefix}max_ms": (max(self._buf) * 1e3 if self._buf else 0.0),
+        }

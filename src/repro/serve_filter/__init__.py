@@ -1,0 +1,60 @@
+"""Filter-serving subsystem: multi-tenant batched membership queries.
+
+The paper's C-LMBF pays off "when considering a vast amount of data" —
+i.e. as a *service* answering membership queries at high QPS, not a
+one-shot ``ExistenceIndex.query``. This package is that service:
+
+Module map
+==========
+
+``registry``
+    :class:`FilterRegistry` — loads/owns many fitted ``ExistenceIndex``
+    instances keyed by tenant/dataset id. Per-filter memory accounting
+    (model weights via ``core/memory.py`` + packed fixup bitset), an
+    optional total budget with LRU eviction, and checkpoint hydration
+    (``save``/``load`` through ``checkpoint/manager.py``).
+
+``scheduler``
+    :class:`QueryScheduler` — admission queue + micro-batching with
+    padding buckets (the continuous-batching pattern of
+    ``launch/serve.py`` adapted from token-steps to one-shot queries).
+    Coalesces each tenant's waiting rows into one dispatch, padded to a
+    fixed bucket so heterogeneous tenants hit pre-compiled fixed-shape
+    programs.
+
+``fused``
+    The fused query path — ``compression.encode -> embedding gather ->
+    MLP -> tau threshold -> fixup Bloom probe`` traced as ONE XLA
+    program (via ``core.existence.query_stages``), compiled once per
+    (plan-shape, bucket) and shared across tenants with equal shapes.
+    Dispatches the fixup probe to the ``kernels/bloom_query`` Pallas
+    kernel (VMEM-resident bitset) when requested; pure-JAX fallback
+    otherwise, bit-identical.
+
+``stats``
+    :class:`ServeStats` — QPS, batch occupancy, p50/p99 latency
+    (``runtime.LatencyWindow``), per-stage positive counters (model
+    yes-rate at tau / fixup hit rate / composite), feeding
+    ``runtime.MetricsLogger``'s JSONL stream.
+
+``server``
+    :class:`FilterServer` — the facade wiring the four together.
+
+Entry points
+============
+
+* demo:      ``PYTHONPATH=src python examples/serve_filter.py``
+* benchmark: ``PYTHONPATH=src python benchmarks/serve_filter_bench.py``
+* tests:     ``tests/test_serve_filter.py`` (served answers are
+  property-tested bit-identical to direct ``ExistenceIndex.query`` —
+  the no-false-negative contract survives batching/padding).
+
+Scale work still open (see ROADMAP): sharded registry across hosts,
+async host-side pipeline (overlap pad/scatter with device compute).
+"""
+from repro.serve_filter.fused import fused_query_fn
+from repro.serve_filter.registry import FilterEntry, FilterRegistry
+from repro.serve_filter.scheduler import (DEFAULT_BUCKETS, QueryRequest,
+                                          QueryScheduler, bucket_for)
+from repro.serve_filter.server import FilterServer
+from repro.serve_filter.stats import ServeStats

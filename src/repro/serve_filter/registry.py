@@ -1,0 +1,135 @@
+"""Multi-tenant filter registry: owns fitted indexes + their budgets.
+
+Each tenant/dataset id maps to a :class:`FilterEntry` bundling the
+fitted ``ExistenceIndex``, its device-resident fixup bitset, the shared
+fused query callable, and per-filter memory accounting (model weights
+via ``core/memory.py`` + packed bitset bytes). A registry optionally
+enforces a total memory budget with LRU eviction, and round-trips
+filters through ``checkpoint/manager.py`` (``save``/``load``) so a
+serving process can hydrate tenants from disk.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import os
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import existence, memory
+from repro.serve_filter import fused as fused_lib
+
+
+@dataclasses.dataclass
+class FilterEntry:
+    tenant: str
+    index: existence.ExistenceIndex
+    fused: Callable                 # jitted (params, bits, tau, ids) -> ...
+    bits: jax.Array                 # device-resident packed bitset
+    model_mb: float
+    fixup_mb: float
+    last_used: int = 0              # registry LRU clock tick
+    n_queries: int = 0
+
+    @property
+    def total_mb(self) -> float:
+        return self.model_mb + self.fixup_mb
+
+    @property
+    def n_cols(self) -> int:
+        return self.index.cfg.plan.n_columns
+
+
+class FilterRegistry:
+    """Loads/owns multiple fitted indexes keyed by tenant id.
+
+    ``budget_mb`` bounds the summed per-filter memory (weights + packed
+    fixup bitset); registering past the budget evicts least-recently-used
+    tenants first. ``use_kernel`` selects the Pallas fixup probe for all
+    tenants' fused callables.
+    """
+
+    def __init__(self, budget_mb: Optional[float] = None, *,
+                 use_kernel: bool = False,
+                 interpret: Optional[bool] = None,
+                 block_n: int = 2048):
+        self.budget_mb = budget_mb
+        self.use_kernel = use_kernel
+        self.interpret = interpret
+        self.block_n = block_n
+        self._entries: Dict[str, FilterEntry] = {}
+        self._clock = itertools.count(1)
+        self.evictions: List[str] = []
+
+    # ------------------------------------------------------------ access
+    def __contains__(self, tenant: str) -> bool:
+        return tenant in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def tenants(self) -> List[str]:
+        return list(self._entries)
+
+    @property
+    def total_mb(self) -> float:
+        return sum(e.total_mb for e in self._entries.values())
+
+    def get(self, tenant: str) -> FilterEntry:
+        """Fetch + touch (bumps LRU recency)."""
+        entry = self._entries[tenant]
+        entry.last_used = next(self._clock)
+        return entry
+
+    # ---------------------------------------------------------- mutation
+    def register(self, tenant: str, index: existence.ExistenceIndex
+                 ) -> FilterEntry:
+        """Admit a fitted index; evicts LRU tenants if over budget."""
+        mem = memory.accounting(index.cfg)
+        entry = FilterEntry(
+            tenant=tenant,
+            index=index,
+            fused=fused_lib.fused_query_fn(
+                index.cfg, index.fixup_filter.params,
+                use_kernel=self.use_kernel, interpret=self.interpret,
+                block_n=self.block_n),
+            bits=jnp.asarray(index.fixup_filter.bits),
+            model_mb=mem.weights_mb,
+            fixup_mb=index.fixup_filter.size_mb,
+            last_used=next(self._clock))
+        self._entries[tenant] = entry
+        self._enforce_budget(keep=tenant)
+        return entry
+
+    def evict(self, tenant: str) -> None:
+        if tenant in self._entries:
+            del self._entries[tenant]
+            self.evictions.append(tenant)
+
+    def _enforce_budget(self, keep: str) -> None:
+        if self.budget_mb is None:
+            return
+        while self.total_mb > self.budget_mb and len(self._entries) > 1:
+            victim = min(
+                (e for t, e in self._entries.items() if t != keep),
+                key=lambda e: e.last_used, default=None)
+            if victim is None:
+                return
+            self.evict(victim.tenant)
+
+    # ------------------------------------------------------- persistence
+    def save(self, tenant: str, directory: str, *, step: int = 0) -> str:
+        """Write a tenant's filter under ``directory/<tenant>``."""
+        path = os.path.join(directory, tenant)
+        existence.save_index(path, self._entries[tenant].index, step=step)
+        return path
+
+    def load(self, tenant: str, directory: str,
+             step: Optional[int] = None) -> FilterEntry:
+        """Hydrate a tenant from ``directory/<tenant>`` and register it."""
+        idx = existence.load_index(os.path.join(directory, tenant),
+                                   step=step)
+        return self.register(tenant, idx)

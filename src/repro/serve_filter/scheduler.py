@@ -1,0 +1,209 @@
+"""Micro-batching scheduler: admission queue + padding buckets.
+
+The continuous-batching pattern from ``launch/serve.py`` adapted from
+token-steps to one-shot membership queries: requests (a tenant id + a
+block of raw-id rows) enter a FIFO admission queue; each ``step()``
+drains the oldest tenant's waiting rows into ONE fused dispatch, padded
+up to a fixed bucket size so every dispatch hits a pre-compiled
+(plan-shape, bucket) XLA program instead of triggering a fresh trace
+per request shape. Padding rows are all-wildcard and sliced off before
+answers are scattered back to their requests.
+
+Bucket policy: the smallest bucket that fits the coalesced rows; rows
+beyond the largest bucket stay queued for the next step (bounded
+per-dispatch latency). Occupancy (valid/padded) is tracked per batch by
+``ServeStats`` — the classic throughput-vs-padding trade.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+import time
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serve_filter.registry import FilterRegistry
+from repro.serve_filter.stats import ServeStats
+
+DEFAULT_BUCKETS = (64, 256, 1024, 4096)
+
+
+def bucket_for(n: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket >= n (n must not exceed the largest bucket)."""
+    for b in buckets:
+        if n <= b:
+            return b
+    raise ValueError(f"batch of {n} exceeds largest bucket {buckets[-1]}")
+
+
+@dataclasses.dataclass
+class QueryRequest:
+    rid: int
+    tenant: str
+    ids: np.ndarray                       # (n, n_cols) int32 raw ids
+    t_submit: float
+    answers: Optional[np.ndarray] = None  # (n,) bool when done
+    model_yes: Optional[np.ndarray] = None
+    backup_yes: Optional[np.ndarray] = None
+    t_done: Optional[float] = None
+    error: Optional[str] = None           # set when failed (e.g. eviction)
+
+    @property
+    def done(self) -> bool:
+        """Fully answered (or failed) — NOT merely partially scattered:
+        a multi-dispatch request stays pending until its last rows land.
+        """
+        return self.t_done is not None
+
+    @property
+    def latency_s(self) -> float:
+        assert self.t_done is not None
+        return self.t_done - self.t_submit
+
+
+class QueryScheduler:
+    def __init__(self, registry: FilterRegistry,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 stats: Optional[ServeStats] = None,
+                 clock=time.perf_counter):
+        self.registry = registry
+        self.buckets = tuple(sorted(int(b) for b in buckets))
+        self.stats = stats or ServeStats()
+        self._clock = clock
+        self._rid = itertools.count()
+        # per-tenant FIFO of (request, row offset already answered)
+        self._queues: Dict[str, Deque[Tuple[QueryRequest, int]]] = \
+            collections.defaultdict(collections.deque)
+        self._order: Deque[str] = collections.deque()   # tenant arrival order
+
+    # ------------------------------------------------------------ intake
+    def submit(self, tenant: str, ids: np.ndarray) -> QueryRequest:
+        """Admit one request; rows may exceed the largest bucket (they
+        will be answered across several dispatches)."""
+        if tenant not in self.registry:
+            raise KeyError(f"unknown tenant {tenant!r}")
+        ids = np.asarray(ids, np.int32)
+        if ids.ndim == 1:
+            ids = ids[None, :]
+        want = self.registry.get(tenant).n_cols
+        if ids.shape[-1] != want:
+            raise ValueError(
+                f"tenant {tenant!r} expects {want} columns, "
+                f"got {ids.shape[-1]}")
+        req = QueryRequest(rid=next(self._rid), tenant=tenant, ids=ids,
+                           t_submit=self._clock())
+        if ids.shape[0] == 0:             # trivially complete, never queued
+            req.answers = np.zeros(0, bool)
+            req.model_yes = np.zeros(0, bool)
+            req.backup_yes = np.zeros(0, bool)
+            req.t_done = req.t_submit
+            return req
+        self._queues[tenant].append((req, 0))
+        if tenant not in self._order:
+            self._order.append(tenant)
+        return req
+
+    @property
+    def pending_rows(self) -> int:
+        return sum(req.ids.shape[0] - off
+                   for q in self._queues.values() for req, off in q)
+
+    # ---------------------------------------------------------- dispatch
+    def step(self) -> bool:
+        """One fused dispatch for the longest-waiting tenant.
+
+        Coalesces that tenant's queued rows up to the largest bucket,
+        pads to the smallest fitting bucket, runs the fused program,
+        scatters answers back, completes fully-answered requests.
+        Returns False when nothing is queued.
+        """
+        tenant = self._next_tenant()
+        if tenant is None:
+            return False
+        queue = self._queues[tenant]
+        entry = self.registry.get(tenant)
+        cap = self.buckets[-1]
+
+        # coalesce rows from the head of the queue
+        take: List[Tuple[QueryRequest, int, int]] = []  # (req, off, n)
+        n_total = 0
+        for req, off in queue:
+            n = min(req.ids.shape[0] - off, cap - n_total)
+            if n <= 0:
+                break
+            take.append((req, off, n))
+            n_total += n
+
+        bucket = bucket_for(n_total, self.buckets)
+        batch = np.zeros((bucket, entry.n_cols), np.int32)  # pad = wildcard
+        pos = 0
+        for req, off, n in take:
+            batch[pos:pos + n] = req.ids[off:off + n]
+            pos += n
+
+        t0 = self._clock()
+        ans_d, model_d, backup_d = entry.fused(
+            entry.index.params, entry.bits, entry.index.tau, batch)
+        ans = np.asarray(ans_d)[:n_total]
+        model = np.asarray(model_d)[:n_total]
+        backup = np.asarray(backup_d)[:n_total]
+        latency = self._clock() - t0
+        entry.n_queries += n_total
+
+        # scatter back + retire finished requests
+        pos = 0
+        for req, off, n in take:
+            if req.answers is None:
+                m = req.ids.shape[0]
+                req.answers = np.zeros(m, bool)
+                req.model_yes = np.zeros(m, bool)
+                req.backup_yes = np.zeros(m, bool)
+            req.answers[off:off + n] = ans[pos:pos + n]
+            req.model_yes[off:off + n] = model[pos:pos + n]
+            req.backup_yes[off:off + n] = backup[pos:pos + n]
+            pos += n
+            new_off = off + n
+            assert queue[0][0] is req
+            if new_off >= req.ids.shape[0]:
+                queue.popleft()
+                req.t_done = self._clock()
+                self.stats.record_request(req.latency_s)
+            else:
+                queue[0] = (req, new_off)
+
+        if not queue:
+            del self._queues[tenant]
+        self.stats.record_batch(tenant, n_total, bucket, latency,
+                                ans, model, backup)
+        return True
+
+    def _next_tenant(self) -> Optional[str]:
+        while self._order:
+            tenant = self._order[0]
+            if not self._queues.get(tenant):
+                self._order.popleft()
+                continue
+            if tenant not in self.registry:
+                self._fail_tenant(tenant, f"tenant {tenant!r} evicted "
+                                  "with requests queued")
+                self._order.popleft()
+                continue
+            # rotate so tenants with sustained load share dispatches
+            self._order.rotate(-1)
+            return tenant
+        return None
+
+    def _fail_tenant(self, tenant: str, reason: str) -> None:
+        """Retire a tenant's queued requests with an error (their owner
+        sees ``req.done`` with ``req.error`` set instead of answers)."""
+        for req, _ in self._queues.pop(tenant, ()):
+            req.error = reason
+            req.t_done = self._clock()
+
+    def run_until_drained(self, max_steps: int = 100_000) -> int:
+        steps = 0
+        while steps < max_steps and self.step():
+            steps += 1
+        return steps

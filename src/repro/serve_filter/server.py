@@ -1,0 +1,89 @@
+"""Top-level filter server: registry + scheduler + stats in one object.
+
+``FilterServer`` is the serving-subsystem facade: register (or hydrate
+from checkpoint) fitted indexes per tenant, submit query blocks, drive
+``step()``/``run_until_drained()``, and read the metrics surface. The
+synchronous convenience ``query()`` is the one-shot path used by tests
+and notebooks; production callers submit and drain in their own loop
+(mirroring ``launch/serve.py``).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.core import existence
+from repro.runtime.metrics import MetricsLogger
+from repro.serve_filter import fused as fused_lib
+from repro.serve_filter.registry import FilterEntry, FilterRegistry
+from repro.serve_filter.scheduler import (DEFAULT_BUCKETS, QueryRequest,
+                                          QueryScheduler)
+from repro.serve_filter.stats import ServeStats
+
+
+class FilterServer:
+    def __init__(self, *, budget_mb: Optional[float] = None,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 use_kernel: bool = False,
+                 interpret: Optional[bool] = None,
+                 block_n: int = 2048,
+                 metrics_path: Optional[str] = None,
+                 metrics_echo: bool = False):
+        self.registry = FilterRegistry(budget_mb, use_kernel=use_kernel,
+                                       interpret=interpret, block_n=block_n)
+        self.stats = ServeStats()
+        self.scheduler = QueryScheduler(self.registry, buckets=buckets,
+                                        stats=self.stats)
+        self.metrics = (MetricsLogger(metrics_path, echo=metrics_echo)
+                        if (metrics_path or metrics_echo) else None)
+        self._log_step = 0
+
+    # ----------------------------------------------------------- tenants
+    def register(self, tenant: str, index: existence.ExistenceIndex
+                 ) -> FilterEntry:
+        return self.registry.register(tenant, index)
+
+    def load(self, tenant: str, directory: str,
+             step: Optional[int] = None) -> FilterEntry:
+        return self.registry.load(tenant, directory, step=step)
+
+    def save(self, tenant: str, directory: str, *, step: int = 0) -> str:
+        return self.registry.save(tenant, directory, step=step)
+
+    def evict(self, tenant: str) -> None:
+        self.registry.evict(tenant)
+
+    # ------------------------------------------------------------ queries
+    def submit(self, tenant: str, ids: np.ndarray) -> QueryRequest:
+        return self.scheduler.submit(tenant, ids)
+
+    def step(self) -> bool:
+        return self.scheduler.step()
+
+    def run_until_drained(self, max_steps: int = 100_000) -> int:
+        n = self.scheduler.run_until_drained(max_steps)
+        if self.metrics is not None:
+            self._log_step += 1
+            self.stats.log_to(self.metrics, self._log_step)
+        return n
+
+    def query(self, tenant: str, ids: np.ndarray) -> np.ndarray:
+        """Synchronous convenience: submit one block, drain, return
+        (n,) bool answers."""
+        req = self.submit(tenant, ids)
+        self.run_until_drained()
+        if req.error is not None:
+            raise RuntimeError(req.error)
+        if not req.done:
+            raise RuntimeError("scheduler drained without answering")
+        return req.answers
+
+    # ------------------------------------------------------------ readout
+    def stats_snapshot(self) -> Dict[str, float]:
+        snap = self.stats.snapshot()
+        snap["registered_filters"] = float(len(self.registry))
+        snap["registry_mb"] = self.registry.total_mb
+        snap["compiled_programs"] = float(
+            fused_lib.compiled_program_count())
+        return snap

@@ -1,0 +1,90 @@
+"""Serving metrics: QPS, batch occupancy, latency percentiles, stage FPRs.
+
+``ServeStats`` is the single metrics surface for the filter server.
+Batch-level facts are recorded on the dispatch path (cheap Python
+counters + a bounded latency window from ``runtime/metrics.py``);
+``snapshot()`` condenses them into a flat dict that feeds
+``runtime.MetricsLogger`` unchanged (floats only), so serving metrics
+land in the same JSONL stream as training metrics.
+
+Per-stage positive counters let operators read the composite-FPR
+decomposition the paper's §3.3 analysis predicts: ``model_pos_rate`` is
+the learned model's yes-rate at tau, ``fixup_hit_rate`` the backup
+Bloom filter's, and ``positive_rate`` their union.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.runtime.metrics import LatencyWindow, MetricsLogger
+
+
+@dataclasses.dataclass
+class _Counters:
+    queries: int = 0            # valid (non-padding) rows answered
+    batches: int = 0            # fused dispatches
+    padded_rows: int = 0        # total rows incl. padding
+    requests: int = 0
+    model_pos: int = 0
+    fixup_pos: int = 0
+    final_pos: int = 0
+
+
+class ServeStats:
+    def __init__(self, latency_maxlen: int = 4096,
+                 clock=time.perf_counter):
+        self._clock = clock
+        self.t_start = clock()
+        self.totals = _Counters()
+        self.batch_latency = LatencyWindow(latency_maxlen)
+        self.request_latency = LatencyWindow(latency_maxlen)
+        self.per_tenant: Dict[str, int] = {}
+        self.last_bucket: Optional[int] = None
+
+    # ---------------------------------------------------------- recording
+    def record_batch(self, tenant: str, n_valid: int, bucket: int,
+                     latency_s: float, answers: np.ndarray,
+                     model_yes: np.ndarray, backup_yes: np.ndarray):
+        """One fused dispatch. Stage arrays are the VALID slice only."""
+        t = self.totals
+        t.queries += int(n_valid)
+        t.batches += 1
+        t.padded_rows += int(bucket)
+        t.model_pos += int(np.asarray(model_yes).sum())
+        t.fixup_pos += int(np.asarray(backup_yes).sum())
+        t.final_pos += int(np.asarray(answers).sum())
+        self.batch_latency.record(latency_s)
+        self.per_tenant[tenant] = self.per_tenant.get(tenant, 0) + \
+            int(n_valid)
+        self.last_bucket = int(bucket)
+
+    def record_request(self, latency_s: float):
+        self.totals.requests += 1
+        self.request_latency.record(latency_s)
+
+    # ----------------------------------------------------------- readout
+    def snapshot(self) -> Dict[str, float]:
+        t = self.totals
+        elapsed = max(self._clock() - self.t_start, 1e-9)
+        q = max(t.queries, 1)
+        out = {
+            "queries": float(t.queries),
+            "batches": float(t.batches),
+            "qps": t.queries / elapsed,
+            "batch_occupancy": (t.queries / t.padded_rows
+                                if t.padded_rows else 0.0),
+            "model_pos_rate": t.model_pos / q,
+            "fixup_hit_rate": t.fixup_pos / q,
+            "positive_rate": t.final_pos / q,
+            "tenants_served": float(len(self.per_tenant)),
+        }
+        out.update(self.batch_latency.summary("batch_"))
+        out.update(self.request_latency.summary("request_"))
+        return out
+
+    def log_to(self, logger: MetricsLogger, step: int = 0) -> Dict:
+        return logger.log(step, **self.snapshot())

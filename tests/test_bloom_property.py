@@ -1,0 +1,32 @@
+"""Hypothesis property tests for the classic Bloom filter.
+
+Kept separate from test_bloom.py so a missing ``hypothesis`` install
+skips ONLY these tests instead of erroring the whole module at
+collection time.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bloom
+
+
+def _build(keys, fpr=0.05):
+    params = bloom.params_for(len(keys), fpr)
+    bits = bloom.empty(params)
+    bloom.add(bits, keys, params)
+    return params, bits
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(1, 500), seed=st.integers(0, 2**31 - 1))
+def test_property_inserted_always_found(n, seed):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 10**9, size=(n, 3)).astype(np.int32)
+    params, bits = _build(keys, fpr=0.01)
+    ans = np.asarray(bloom.query(jnp.asarray(bits), jnp.asarray(keys),
+                                 params))
+    assert ans.all()

@@ -4,6 +4,8 @@ mesh metadata). Runs in a subprocess to get 8 placeholder devices."""
 import subprocess
 import sys
 
+import pytest
+
 _SUBPROC = r"""
 import os, tempfile
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -33,6 +35,7 @@ print("RESHARD_OK")
 """
 
 
+@pytest.mark.slow
 def test_reshard_across_meshes():
     res = subprocess.run(
         [sys.executable, "-c", _SUBPROC],

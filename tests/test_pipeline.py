@@ -51,6 +51,7 @@ def test_bubble_fraction():
     assert bubble_fraction(1, 1) == 0.0
 
 
+@pytest.mark.slow
 def test_pipeline_matches_sequential():
     res = subprocess.run(
         [sys.executable, "-c", _SUBPROC],

@@ -1,0 +1,236 @@
+"""Filter-serving subsystem: registry, scheduler, fused-path contracts.
+
+The load-bearing test is the end-to-end property: answers served
+through batching + padding + the fused program are BIT-IDENTICAL to
+direct ``ExistenceIndex.query`` — in particular, zero false negatives
+on indexed positives survive the serving path.
+"""
+import numpy as np
+import pytest
+
+from repro.core import existence
+from repro.data import tuples
+from repro.serve_filter import (FilterRegistry, FilterServer, ServeStats,
+                                bucket_for)
+from repro.serve_filter.scheduler import QueryScheduler
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    """Two tenants with different plan shapes (cheap fits)."""
+    st = existence.TrainSettings(steps=25, n_pos=1200, n_neg=1200)
+    ds_a = tuples.synthesize([300, 200, 80], n_records=1500, seed=3)
+    ds_b = tuples.synthesize([500, 150], n_records=1200, seed=4)
+    return {"a": (ds_a, existence.fit(ds_a, theta=100, settings=st)),
+            "b": (ds_b, existence.fit(ds_b, theta=120, settings=st))}
+
+
+def _corpus(ds, n, seed):
+    rng = np.random.default_rng(seed)
+    pos = ds.records[rng.integers(0, len(ds.records), n // 2)]
+    neg = np.stack([rng.integers(1, v, n - n // 2) for v in ds.cards],
+                   axis=-1).astype(np.int32)
+    return np.concatenate([pos, neg]), n // 2      # (ids, n_positives)
+
+
+# ---------------------------------------------------------------- registry
+
+def test_registry_register_get_evict(fitted):
+    _, idx = fitted["a"]
+    reg = FilterRegistry()
+    reg.register("t1", idx)
+    assert "t1" in reg and len(reg) == 1
+    assert reg.total_mb == pytest.approx(idx.total_mb)
+    assert reg.get("t1").index is idx
+    reg.evict("t1")
+    assert "t1" not in reg
+    with pytest.raises(KeyError):
+        reg.get("t1")
+
+
+def test_registry_budget_lru(fitted):
+    _, idx = fitted["a"]
+    mb = idx.total_mb
+    reg = FilterRegistry(budget_mb=2.5 * mb)
+    reg.register("t1", idx)
+    reg.register("t2", idx)
+    reg.get("t1")                   # touch t1 -> t2 becomes LRU
+    reg.register("t3", idx)         # over budget: t2 must go
+    assert set(reg.tenants) == {"t1", "t3"}
+    assert reg.evictions == ["t2"]
+    # a filter over budget on its own is still admitted (can't serve
+    # otherwise) — budget evicts down to the newest entry at worst
+    reg2 = FilterRegistry(budget_mb=mb / 2)
+    reg2.register("only", idx)
+    assert "only" in reg2
+
+
+def test_registry_checkpoint_roundtrip(fitted, tmp_path):
+    ds, idx = fitted["a"]
+    reg = FilterRegistry()
+    live = reg.register("t1", idx)
+    reg.save("t1", str(tmp_path))
+    reg2 = FilterRegistry()
+    entry = reg2.load("t1", str(tmp_path))
+    got = np.asarray(entry.index.query(ds.records[:256]))
+    want = np.asarray(idx.query(ds.records[:256]))
+    np.testing.assert_array_equal(got, want)
+    # a hydrated tenant must share the live tenant's fused callable
+    # (config hashes must agree across the fit and checkpoint paths)
+    assert hash(entry.index.cfg) == hash(idx.cfg)
+    assert entry.fused is live.fused
+
+
+# --------------------------------------------------------------- scheduler
+
+def test_bucket_for():
+    assert bucket_for(1, (64, 256)) == 64
+    assert bucket_for(64, (64, 256)) == 64
+    assert bucket_for(65, (64, 256)) == 256
+    with pytest.raises(ValueError):
+        bucket_for(257, (64, 256))
+
+
+def test_scheduler_bucket_assignment(fitted):
+    ds, idx = fitted["a"]
+    reg = FilterRegistry()
+    reg.register("t", idx)
+    stats = ServeStats()
+    sched = QueryScheduler(reg, buckets=(16, 64), stats=stats)
+
+    sched.submit("t", ds.records[:10])      # 10 -> bucket 16
+    assert sched.step()
+    assert stats.last_bucket == 16
+
+    sched.submit("t", ds.records[:30])      # 30 -> bucket 64
+    assert sched.step()
+    assert stats.last_bucket == 64
+
+    # two requests coalesce into one dispatch (12 + 20 -> bucket 64)
+    sched.submit("t", ds.records[:12])
+    sched.submit("t", ds.records[12:32])
+    assert sched.step()
+    assert stats.last_bucket == 64
+    assert not sched.step()                 # drained in ONE dispatch
+
+    # oversized request splits across dispatches, none above the cap
+    req = sched.submit("t", ds.records[:100])
+    n = sched.run_until_drained()
+    assert n == 2 and req.done              # 64 + 36
+    assert stats.totals.queries == 10 + 30 + 32 + 100
+
+
+def test_multi_dispatch_request_not_done_early(fitted):
+    """A request spanning several dispatches must not report done (and
+    expose zero-filled answers) after the first scatter."""
+    ds, idx = fitted["a"]
+    reg = FilterRegistry()
+    reg.register("t", idx)
+    sched = QueryScheduler(reg, buckets=(16,))
+    req = sched.submit("t", ds.records[:40])    # 3 dispatches of <=16
+    assert sched.step()
+    assert not req.done
+    sched.run_until_drained()
+    assert req.done and req.answers.all()
+
+
+def test_zero_row_request_completes_immediately(fitted):
+    ds, idx = fitted["a"]
+    reg = FilterRegistry()
+    reg.register("t", idx)
+    sched = QueryScheduler(reg, buckets=(16,))
+    req = sched.submit("t", np.empty((0, ds.n_cols), np.int32))
+    assert req.done and req.answers.shape == (0,)
+    assert sched.run_until_drained() == 0       # nothing dispatched
+
+
+def test_eviction_fails_queued_requests_cleanly(fitted):
+    """Budget-eviction while a tenant has queued work must fail those
+    requests with an error, not wedge the scheduler."""
+    ds, idx = fitted["a"]
+    reg = FilterRegistry(budget_mb=1.5 * idx.total_mb)
+    reg.register("t1", idx)
+    sched = QueryScheduler(reg, buckets=(16,))
+    orphan = sched.submit("t1", ds.records[:8])
+    reg.register("t2", idx)                     # evicts t1 (LRU)
+    assert "t1" not in reg
+    live = sched.submit("t2", ds.records[:8])
+    sched.run_until_drained()
+    assert orphan.done and orphan.error is not None
+    assert orphan.answers is None
+    assert live.done and live.error is None and live.answers.all()
+
+
+def test_scheduler_rejects_bad_submissions(fitted):
+    ds, idx = fitted["a"]
+    reg = FilterRegistry()
+    reg.register("t", idx)
+    sched = QueryScheduler(reg)
+    with pytest.raises(KeyError):
+        sched.submit("nope", ds.records[:4])
+    with pytest.raises(ValueError):
+        sched.submit("t", ds.records[:4, :2])   # wrong column count
+
+
+# ------------------------------------------------------------- end-to-end
+
+def test_served_matches_direct_property(fitted):
+    """Served answers == direct ExistenceIndex.query, bit-identical,
+    across interleaved tenants, coalescing, and padding; zero false
+    negatives on indexed positives."""
+    srv = FilterServer(buckets=(32, 128))
+    for name, (_, idx) in fitted.items():
+        srv.register(name, idx)
+
+    reqs = {"a": [], "b": []}
+    corpora = {}
+    for name, (ds, _) in fitted.items():
+        ids, n_pos = _corpus(ds, 300, seed=7)
+        corpora[name] = (ids, n_pos)
+    # interleave odd-sized requests from both tenants
+    for start, size in [(0, 37), (37, 111), (148, 152)]:
+        for name in ("a", "b"):
+            reqs[name].append(srv.submit(
+                name, corpora[name][0][start:start + size]))
+    srv.run_until_drained()
+
+    for name, (ds, idx) in fitted.items():
+        ids, n_pos = corpora[name]
+        got = np.concatenate([r.answers for r in reqs[name]])
+        want = np.asarray(idx.query(ids))
+        np.testing.assert_array_equal(got, want)
+        assert got[:n_pos].all(), "false negative on an indexed positive"
+
+    snap = srv.stats_snapshot()
+    assert snap["queries"] == 600
+    assert 0 < snap["batch_occupancy"] <= 1
+    assert snap["positive_rate"] >= snap["model_pos_rate"]
+    assert snap["positive_rate"] >= snap["fixup_hit_rate"]
+
+
+def test_kernel_probe_path_bit_identical(fitted):
+    """use_kernel=True (Pallas fixup probe, interpret on CPU) must not
+    change a single answer bit."""
+    ds, idx = fitted["a"]
+    ids, _ = _corpus(ds, 200, seed=9)
+    srv_ref = FilterServer(buckets=(64, 256))
+    srv_ref.register("t", idx)
+    srv_ker = FilterServer(buckets=(64, 256), use_kernel=True, block_n=64)
+    srv_ker.register("t", idx)
+    np.testing.assert_array_equal(srv_ref.query("t", ids),
+                                  srv_ker.query("t", ids))
+
+
+def test_stats_latency_and_metrics_feed(fitted, tmp_path):
+    ds, idx = fitted["a"]
+    path = str(tmp_path / "serve.jsonl")
+    srv = FilterServer(buckets=(64,), metrics_path=path)
+    srv.register("t", idx)
+    srv.query("t", ds.records[:50])
+    snap = srv.stats_snapshot()
+    assert snap["batch_p50_ms"] > 0
+    assert snap["request_p99_ms"] >= snap["request_p50_ms"] > 0
+    import json
+    with open(path) as f:
+        rec = json.loads(f.readline())
+    assert rec["queries"] == 50.0
