@@ -1,31 +1,82 @@
-"""Filter-serving throughput: queries/sec vs batch size and filter count.
+"""Filter-serving throughput: queries/sec vs batch size, executor, dispatch.
 
-Tracks the batched-query serving trajectory from the PR that introduced
-``repro.serve_filter``:
+Tracks the batched-query serving trajectory of ``repro.serve_filter``:
 
 * two tenants with DIFFERENT plan shapes registered concurrently (the
-  scheduler interleaves their dispatches),
+  scheduler interleaves their dispatches round-robin),
 * queries/sec for each padding bucket (compile excluded by a warmup
   dispatch per (tenant, bucket)),
+* ``--executor sharded`` runs the same workload through the
+  ``ShardedExecutor`` on a forced-multi-device CPU mesh (``--shards``),
+* ``--async-dispatch`` double-buffers dispatches so host padding
+  overlaps device compute,
 * the anti-baseline: a per-query Python loop over
   ``ExistenceIndex.query`` — the fused jitted path must beat it by
   >= 10x (asserted when run as a script).
 
+Every scripted run appends one entry per bucket (q/s, occupancy, p99)
+to ``BENCH_serve_filter.json`` next to the repo root, so the perf
+trajectory across PRs is recorded, not anecdotal.
+
 Usage: PYTHONPATH=src python benchmarks/serve_filter_bench.py
+           [--executor {local,sharded}] [--shards N] [--async-dispatch]
+           [--json-out PATH]
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import sys
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
-import numpy as np
+_DEFAULT_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_serve_filter.json")
 
-from repro.core import existence
-from repro.data import tuples
-from repro.serve_filter import FilterServer
+
+def make_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--executor", choices=("local", "sharded"),
+                    default="local")
+    ap.add_argument("--shards", type=int, default=2,
+                    help="CPU mesh size for --executor sharded")
+    ap.add_argument("--async-dispatch", action="store_true",
+                    help="double-buffered dispatch (overlap pad/compute)")
+    ap.add_argument("--steps", type=int, default=60,
+                    help="training steps per tenant fit")
+    ap.add_argument("--json-out", default=_DEFAULT_JSON,
+                    help="append results here ('' disables)")
+    return ap
+
+
+_ARGS = (make_parser().parse_args() if __name__ == "__main__"
+         else make_parser().parse_args([]))
+if _ARGS.executor == "sharded":
+    # must flip the placeholder-device flag BEFORE jax import
+    os.environ.setdefault(
+        "XLA_FLAGS",
+        f"--xla_force_host_platform_device_count={_ARGS.shards}")
+
+import numpy as np                                    # noqa: E402
+
+from repro.core import existence                      # noqa: E402
+from repro.data import tuples                         # noqa: E402
+from repro.serve_filter import FilterServer           # noqa: E402
 
 BUCKETS = (64, 256, 1024)
 N_QUERIES = 4096            # per tenant per bucket measurement
+
+
+def _serve_mesh(executor: str, shards: int):
+    if executor != "sharded":
+        return None
+    import jax
+    if len(jax.devices()) < shards:
+        raise SystemExit(
+            f"--executor sharded needs {shards} devices but found "
+            f"{len(jax.devices())}; XLA_FLAGS was set too late?")
+    return jax.make_mesh((shards,), ("data",))
 
 
 def fit_tenants(steps: int = 60) -> Dict[str, tuple]:
@@ -50,9 +101,11 @@ def _query_pool(ds: tuples.TupleDataset, n: int, seed: int) -> np.ndarray:
 
 
 def bench_served(tenants: Dict[str, tuple], bucket: int,
-                 n_queries: int = N_QUERIES) -> dict:
+                 n_queries: int = N_QUERIES, *, mesh=None,
+                 async_dispatch: bool = False) -> dict:
     """QPS through the full server at one request batch size."""
-    srv = FilterServer(buckets=BUCKETS)
+    srv = FilterServer(buckets=BUCKETS, mesh=mesh,
+                       async_dispatch=async_dispatch)
     for name, (_, idx) in tenants.items():
         srv.register(name, idx)
     pools = {name: _query_pool(ds, n_queries, seed=1)
@@ -80,6 +133,8 @@ def bench_served(tenants: Dict[str, tuple], bucket: int,
         "us_per_query": dt / total * 1e6,
         "batch_occupancy": round(snap["batch_occupancy"], 3),
         "batch_p50_ms": round(snap["batch_p50_ms"], 3),
+        "batch_p99_ms": round(snap["batch_p99_ms"], 3),
+        "overlapped_batches": int(snap["overlapped_batches"]),
     }
 
 
@@ -97,23 +152,51 @@ def bench_python_loop(tenants: Dict[str, tuple], n: int = 64) -> dict:
     return {"qps": 1.0 / mean_s, "us_per_query": mean_s * 1e6}
 
 
-def run() -> List[dict]:
-    tenants = fit_tenants()
-    rows = [bench_served(tenants, b) for b in BUCKETS]
+def run(*, executor: str = "local", shards: int = 2,
+        async_dispatch: bool = False, steps: int = 60) -> List[dict]:
+    mesh = _serve_mesh(executor, shards)
+    tenants = fit_tenants(steps)
+    rows = [bench_served(tenants, b, mesh=mesh,
+                         async_dispatch=async_dispatch) for b in BUCKETS]
     base = bench_python_loop(tenants)
     for r in rows:
+        r["executor"] = executor
+        r["async_dispatch"] = async_dispatch
+        if executor == "sharded":
+            r["shards"] = shards
         r["speedup_vs_python_loop"] = round(base["us_per_query"] /
                                             r["us_per_query"], 1)
     rows.append({"bucket": 1, "filters": len(tenants),
                  "qps": base["qps"], "us_per_query": base["us_per_query"],
+                 "executor": "python_loop",
                  "note": "per-query Python loop (baseline)"})
     return rows
 
 
+def record(rows: List[dict], path: Optional[str]) -> None:
+    """Append this run's rows to the JSONL-ish trajectory file."""
+    if not path:
+        return
+    history = []
+    if os.path.exists(path):
+        with open(path) as f:
+            history = json.load(f)
+    history.append({
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "argv": sys.argv[1:],
+        "rows": rows,
+    })
+    with open(path, "w") as f:
+        json.dump(history, f, indent=1)
+    print(f"recorded {len(rows)} rows -> {path}")
+
+
 def main():
-    rows = run()
+    rows = run(executor=_ARGS.executor, shards=_ARGS.shards,
+               async_dispatch=_ARGS.async_dispatch, steps=_ARGS.steps)
     hdr = f"{'bucket':>7} {'filters':>7} {'qps':>12} {'us/query':>10} " \
           f"{'occupancy':>9} {'speedup':>8}"
+    print(f"executor={_ARGS.executor} async={_ARGS.async_dispatch}")
     print(hdr)
     for r in rows:
         print(f"{r['bucket']:>7} {r['filters']:>7} {r['qps']:>12.0f} "
@@ -124,6 +207,7 @@ def main():
     best = max(r.get("speedup_vs_python_loop", 0) for r in rows)
     assert best >= 10, f"fused path only {best}x over the Python loop"
     print(f"\nfused path beats the per-query loop by {best}x at best")
+    record(rows, _ARGS.json_out)
     return rows
 
 

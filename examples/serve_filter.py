@@ -1,31 +1,72 @@
-"""Filter-serving demo: two tenants, checkpoint hydration, live stats.
+"""Filter-serving demo: sharded tenants, async dispatch, checkpoint hydration.
 
 Fits a C-LMBF existence index for two tenants with different schemas,
 persists one through the checkpoint manager and hydrates it back (the
-production cold-start path), then serves an interleaved query stream
-through the batched fused path and prints the metrics surface.
+production cold-start path — on a sharded registry the tables/bitset
+land directly on their shard slices), then serves an interleaved query
+stream through the batched fused path and prints the metrics surface.
+
+By default the demo runs the full mesh-scalable pipeline on a forced
+2-device CPU mesh (``--shards``): the planner assigns every tenant a
+sharded placement, the ``ShardedExecutor`` splits embedding tables
+row-wise and the fixup bitset word-wise over the mesh axis, and the
+scheduler double-buffers dispatches (``--async-dispatch`` is on by
+default; ``--sync`` restores the serial loop). ``--shards 1`` falls
+back to the single-device ``LocalExecutor`` path — answers are
+bit-identical either way.
 
 Usage: PYTHONPATH=src python examples/serve_filter.py
+           [--shards N] [--sync] [--use-kernel]
 """
 from __future__ import annotations
 
 import argparse
+import os
 import tempfile
 
-import numpy as np
 
-from repro.core import existence
-from repro.data import tuples
-from repro.serve_filter import FilterServer
-
-
-def main(argv=None):
+def make_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=120)
     ap.add_argument("--queries", type=int, default=2048)
+    ap.add_argument("--shards", type=int, default=2,
+                    help="CPU mesh size (1 = local placement)")
+    ap.add_argument("--sync", action="store_true",
+                    help="disable async double-buffered dispatch")
     ap.add_argument("--use-kernel", action="store_true",
                     help="probe the fixup filter via the Pallas kernel")
-    args = ap.parse_args(argv)
+    return ap
+
+
+# the placeholder-device flag must be set BEFORE jax is imported —
+# and ONLY when running as a script (importing this module must not
+# mutate the host process' device view)
+_ARGS = (make_parser().parse_args() if __name__ == "__main__"
+         else make_parser().parse_args([]))
+if __name__ == "__main__" and _ARGS.shards > 1:
+    os.environ.setdefault(
+        "XLA_FLAGS",
+        f"--xla_force_host_platform_device_count={_ARGS.shards}")
+
+import numpy as np                                    # noqa: E402
+
+from repro.core import existence                      # noqa: E402
+from repro.data import tuples                         # noqa: E402
+from repro.serve_filter import FilterServer           # noqa: E402
+
+
+def main(args=_ARGS):
+    import jax
+    mesh = None
+    if args.shards > 1:
+        if len(jax.devices()) < args.shards:
+            raise SystemExit(
+                f"--shards {args.shards} needs that many devices but "
+                f"found {len(jax.devices())}; jax was imported before "
+                "the placeholder-device flag could be set")
+        mesh = jax.make_mesh((args.shards,), ("data",))
+        print(f"mesh: {args.shards} CPU shards over axis 'data' "
+              f"(tables row-sharded, bitset word-sharded)")
 
     st = existence.TrainSettings(steps=args.steps, n_pos=4000, n_neg=4000)
     print("fitting tenant 'flights' (4 columns, theta=250)...")
@@ -40,8 +81,13 @@ def main(argv=None):
     idx_b = existence.fit(ds_b, theta=300, settings=st)
 
     srv = FilterServer(buckets=(64, 256, 1024),
-                       use_kernel=args.use_kernel)
-    srv.register("flights", idx_a)
+                       use_kernel=args.use_kernel,
+                       mesh=mesh,
+                       async_dispatch=not args.sync)
+    entry = srv.register("flights", idx_a)
+    print(f"planner placed 'flights' as {entry.plan.placement.kind} "
+          f"({entry.plan.placement.n_shards} shard(s)); "
+          f"dispatch={'sync' if args.sync else 'async double-buffered'}")
 
     # cold-start path: persist + hydrate the second tenant from disk
     with tempfile.TemporaryDirectory() as tmp:
@@ -68,8 +114,8 @@ def main(argv=None):
     snap = srv.stats_snapshot()
     for k in ("queries", "batches", "qps", "batch_occupancy",
               "model_pos_rate", "fixup_hit_rate", "positive_rate",
-              "batch_p50_ms", "batch_p99_ms", "registered_filters",
-              "registry_mb", "compiled_programs"):
+              "batch_p50_ms", "batch_p99_ms", "overlapped_batches",
+              "registered_filters", "registry_mb", "compiled_programs"):
         print(f"  {k:>20} = {snap[k]:.4g}")
 
 

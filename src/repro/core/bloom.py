@@ -89,6 +89,20 @@ def probe_positions(ids, params: BloomParams) -> jax.Array:
     return pos
 
 
+def probe_words(ids, params: BloomParams) -> Tuple[jax.Array, jax.Array]:
+    """(..., n_cols) -> ((..., h) int32 word index, (..., h) uint32 mask).
+
+    The word-level decomposition of :func:`probe_positions`: probe ``k``
+    of a tuple tests ``bits[word[k]] & mask[k]``. Exposed so a sharded
+    executor holding words ``[offset, offset + n_local)`` can probe only
+    its slice (each global word index belongs to exactly one shard).
+    """
+    pos = probe_positions(ids, params)
+    words = (pos >> jnp.uint32(5)).astype(jnp.int32)
+    masks = jnp.uint32(1) << (pos & jnp.uint32(31))
+    return words, masks
+
+
 def add(bits: np.ndarray, ids, params: BloomParams) -> np.ndarray:
     """Host-side insertion (build-time). Returns the mutated array."""
     pos = np.asarray(probe_positions(ids, params)).reshape(-1)
@@ -101,10 +115,32 @@ def add(bits: np.ndarray, ids, params: BloomParams) -> np.ndarray:
 def query(bits, ids, params: BloomParams) -> jax.Array:
     """(..., n_cols) -> (...,) bool. JAX reference implementation."""
     bits = jnp.asarray(bits)
-    pos = probe_positions(ids, params)                 # (..., h)
-    words = jnp.take(bits, (pos >> jnp.uint32(5)).astype(jnp.int32), axis=0)
-    hit = (words >> (pos & jnp.uint32(31))) & jnp.uint32(1)
-    return jnp.all(hit == jnp.uint32(1), axis=-1)
+    words, masks = probe_words(ids, params)
+    hit = (jnp.take(bits, words, axis=0) & masks) != jnp.uint32(0)
+    return jnp.all(hit, axis=-1)
+
+
+def shard_miss_count(bits_local, ids, params: BloomParams,
+                     word_offset) -> jax.Array:
+    """Misses among the probes owned by one bitset slice.
+
+    ``bits_local`` is the shard's contiguous word slice
+    ``bits[word_offset : word_offset + n_local]`` (zero-padded past the
+    global ``n_words`` is fine — no probe lands there). Returns
+    ``(...,) int32`` counts; summing over all shards and comparing to
+    zero reproduces :func:`query` bit-for-bit, since every probe word
+    belongs to exactly one shard:
+
+        psum(shard_miss_count(...)) == 0  <=>  query(...)
+    """
+    bits_local = jnp.asarray(bits_local)
+    n_local = bits_local.shape[0]
+    words, masks = probe_words(ids, params)
+    local = words - word_offset
+    owned = (local >= 0) & (local < n_local)
+    w = jnp.take(bits_local, jnp.clip(local, 0, n_local - 1), axis=0)
+    miss = owned & ((w & masks) == jnp.uint32(0))
+    return jnp.sum(miss, axis=-1).astype(jnp.int32)
 
 
 def fpr_estimate(params: BloomParams, n_keys: int) -> float:

@@ -44,7 +44,7 @@ class TrainSettings:
 
 def query_stages(params, cfg: lmbf.LMBFConfig, tau, fixup_bits,
                  fixup_params: bloom.BloomParams, raw_ids, *,
-                 probe_fn=None):
+                 probe_fn=None, predict_fn=None):
     """The whole query pipeline as ONE jittable program.
 
     ``compression.encode -> embedding gather -> MLP -> tau threshold ->
@@ -53,14 +53,16 @@ def query_stages(params, cfg: lmbf.LMBFConfig, tau, fixup_bits,
     static under ``jax.jit``; ``tau`` may be traced so filters sharing a
     plan shape share one compiled program. ``probe_fn(bits, ids)``
     overrides the fixup probe (the serving subsystem injects the
-    ``kernels/bloom_query`` Pallas kernel here).
+    ``kernels/bloom_query`` Pallas kernel here); ``predict_fn(params,
+    cfg, enc)`` overrides the model score (the sharded executor injects
+    a masked-gather + psum variant over vocab-sharded tables).
 
     Returns ``(answers, model_yes, backup_yes)`` — the per-stage booleans
     feed the serving subsystem's stage-FPR counters.
     """
     raw_ids = jnp.asarray(raw_ids, jnp.int32)
     enc = comp.encode(raw_ids, cfg.plan)
-    s = lmbf.predict(params, cfg, enc)
+    s = (predict_fn or lmbf.predict)(params, cfg, enc)
     model_yes = s >= tau
     if probe_fn is None:
         backup_yes = bloom.query(fixup_bits, raw_ids, fixup_params)

@@ -91,8 +91,9 @@ def init(cfg: LMBFConfig, key: jax.Array):
     return build_params(params_spec(cfg), key)
 
 
-def apply(params, cfg: LMBFConfig, encoded_ids) -> jax.Array:
-    """encoded_ids: (..., n_subcolumns) int32 -> (...,) logits."""
+def features(params, cfg: LMBFConfig, encoded_ids) -> jax.Array:
+    """encoded_ids: (..., n_subcolumns) int32 -> (..., concat_dim) input
+    features (per-subcolumn embedding gathers / one-hots, concatenated)."""
     feats = []
     for i, (rows, e) in enumerate(cfg.column_encodings):
         ids = encoded_ids[..., i]
@@ -100,12 +101,21 @@ def apply(params, cfg: LMBFConfig, encoded_ids) -> jax.Array:
             feats.append(jax.nn.one_hot(ids, rows, dtype=cfg.dtype))
         else:
             feats.append(L.take_embedding(params["embed"][f"col{i}"], ids))
-    x = jnp.concatenate(feats, axis=-1)
+    return jnp.concatenate(feats, axis=-1)
+
+
+def mlp_head(params, cfg: LMBFConfig, x) -> jax.Array:
+    """(..., concat_dim) features -> (...,) logits (hidden ReLU stack)."""
     for li in range(len(cfg.hidden)):
         x = jax.nn.relu(x @ params["dense"][f"w{li}"] +
                         params["dense"][f"b{li}"])
     logit = x @ params["dense"]["w_out"] + params["dense"]["b_out"]
     return logit[..., 0]
+
+
+def apply(params, cfg: LMBFConfig, encoded_ids) -> jax.Array:
+    """encoded_ids: (..., n_subcolumns) int32 -> (...,) logits."""
+    return mlp_head(params, cfg, features(params, cfg, encoded_ids))
 
 
 def predict(params, cfg: LMBFConfig, encoded_ids) -> jax.Array:

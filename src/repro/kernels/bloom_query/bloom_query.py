@@ -68,6 +68,68 @@ def _kernel(ids_ref, bits_ref, out_ref, *, n_hashes: int, m_bits: int):
     out_ref[...] = hit_all
 
 
+def _partial_kernel(off_ref, ids_ref, bits_ref, out_ref, *,
+                    n_hashes: int, m_bits: int, n_local: int):
+    """Word-offset probe against ONE bitset slice.
+
+    ``bits_ref`` holds words ``[off, off + n_local)`` of the global
+    bitset; probes landing outside the slice are skipped. Emits per-key
+    MISS counts (int32) — the cross-shard combine is
+    ``psum(miss) == 0``, matching ``core.bloom.shard_miss_count``.
+    """
+    off = off_ref[0]
+    ids = ids_ref[...].astype(jnp.uint32)               # (bn, n_cols)
+    bits = bits_ref[...]                                # (n_local,) uint32
+    h1 = _hash_block(ids, 0x0000A5A5)
+    h2 = _hash_block(ids, 0x00005EED) | jnp.uint32(1)
+    miss = jnp.zeros(ids.shape[:1], jnp.int32)
+    for k in range(n_hashes):
+        pos = (h1 + jnp.uint32(k) * h2) % jnp.uint32(m_bits)
+        local = (pos >> jnp.uint32(5)).astype(jnp.int32) - off
+        owned = (local >= 0) & (local < n_local)
+        word = jnp.take(bits, jnp.clip(local, 0, n_local - 1), axis=0)
+        bit = (word >> (pos & jnp.uint32(31))) & jnp.uint32(1)
+        miss = miss + (owned & (bit == jnp.uint32(0))).astype(jnp.int32)
+    out_ref[...] = miss
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_hashes", "m_bits", "block_n",
+                                    "interpret"))
+def bloom_query_partial_call(ids, bits_local, word_offset, *,
+                             n_hashes: int, m_bits: int,
+                             block_n: int = 2048, interpret: bool = True):
+    """ids: (N, n_cols) int32; bits_local: (n_local,) uint32 slice;
+    word_offset: (1,) int32 -> (N,) int32 miss counts over owned probes.
+
+    The sharded flavor of :func:`bloom_query_call`: safe to call inside
+    ``shard_map`` (the offset is a traced per-shard scalar, passed as a
+    (1,) operand rather than a static argument).
+    """
+    n, n_cols = ids.shape
+    n_local = bits_local.shape[0]
+    bn = min(block_n, n)
+    pad = (-n) % bn
+    if pad:
+        ids = jnp.pad(ids, ((0, pad), (0, 0)))
+    word_offset = jnp.asarray(word_offset, jnp.int32).reshape((1,))
+    grid = (ids.shape[0] // bn,)
+    out = pl.pallas_call(
+        functools.partial(_partial_kernel, n_hashes=n_hashes,
+                          m_bits=m_bits, n_local=n_local),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((bn, n_cols), lambda i: (i, 0)),
+            pl.BlockSpec(bits_local.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((ids.shape[0],), jnp.int32),
+        interpret=interpret,
+    )(word_offset, ids, bits_local)
+    return out[:n] if pad else out
+
+
 @functools.partial(jax.jit,
                    static_argnames=("n_hashes", "m_bits", "block_n",
                                     "interpret"))

@@ -6,7 +6,8 @@ from typing import Optional
 import jax
 
 from repro.core import bloom
-from repro.kernels.bloom_query.bloom_query import bloom_query_call
+from repro.kernels.bloom_query.bloom_query import (bloom_query_call,
+                                                  bloom_query_partial_call)
 
 
 def default_interpret() -> bool:
@@ -34,3 +35,24 @@ def bloom_query(ids, bits, params: bloom.BloomParams, *,
     return bloom_query_call(ids, bits, n_hashes=params.n_hashes,
                             m_bits=params.m_bits, block_n=block_n,
                             interpret=interpret)
+
+
+def bloom_query_shard(ids, bits_local, word_offset,
+                      params: bloom.BloomParams, *,
+                      block_n: int = 2048,
+                      interpret: Optional[bool] = None):
+    """Per-shard membership probe against one bitset word slice.
+
+    Kernel counterpart of ``core.bloom.shard_miss_count`` (validated
+    bit-exact in tests): returns (N,) int32 miss counts among the
+    probes whose word falls in ``[word_offset, word_offset +
+    len(bits_local))``; the caller combines shards with
+    ``psum(miss) == 0``. ``word_offset`` may be a traced scalar (e.g.
+    ``axis_index * words_per_shard`` inside ``shard_map``).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return bloom_query_partial_call(ids, bits_local, word_offset,
+                                    n_hashes=params.n_hashes,
+                                    m_bits=params.m_bits, block_n=block_n,
+                                    interpret=interpret)

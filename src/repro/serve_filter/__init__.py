@@ -2,57 +2,79 @@
 
 The paper's C-LMBF pays off "when considering a vast amount of data" —
 i.e. as a *service* answering membership queries at high QPS, not a
-one-shot ``ExistenceIndex.query``. This package is that service:
+one-shot ``ExistenceIndex.query``. This package is that service,
+structured as a **planner/executor** stack:
 
 Module map
 ==========
 
+``plan``
+    :class:`QueryPlan` — a frozen, hashable description of HOW a filter
+    runs: plan shape (``LMBFConfig`` + ``BloomParams``), probe flavor
+    (pure-JAX vs Pallas kernel), and :class:`Placement` (local vs
+    mesh-sharded). :func:`plan_query` is the planner: config + fixup
+    params + an optional target ``Mesh`` in, plan out.
+
+``executors``
+    Pluggable compiled query paths behind one interface.
+    :class:`LocalExecutor` jits ``existence.query_stages`` on one
+    device (the original fused path); :class:`ShardedExecutor` runs the
+    same pipeline under ``shard_map`` with embedding tables row-sharded
+    and the fixup bitset word-sharded over a mesh axis — masked local
+    gathers + one ``psum`` rebuild the features, per-shard word-offset
+    probes + one ``psum`` combine the Bloom answer, bit-identical to
+    local by construction. Executors are cached per plan so tenants
+    with equal plans share compiled programs.
+
 ``registry``
     :class:`FilterRegistry` — loads/owns many fitted ``ExistenceIndex``
-    instances keyed by tenant/dataset id. Per-filter memory accounting
-    (model weights via ``core/memory.py`` + packed fixup bitset), an
-    optional total budget with LRU eviction, and checkpoint hydration
-    (``save``/``load`` through ``checkpoint/manager.py``).
+    instances keyed by tenant/dataset id. Entries carry their plan,
+    executor, and device placement (hydrated tenants land directly on
+    their shard). Per-filter memory accounting, an optional total
+    budget with LRU eviction (evicting the last tenant on a plan also
+    releases its cached executor), and checkpoint hydration.
 
 ``scheduler``
     :class:`QueryScheduler` — admission queue + micro-batching with
-    padding buckets (the continuous-batching pattern of
-    ``launch/serve.py`` adapted from token-steps to one-shot queries).
-    Coalesces each tenant's waiting rows into one dispatch, padded to a
-    fixed bucket so heterogeneous tenants hit pre-compiled fixed-shape
-    programs.
-
-``fused``
-    The fused query path — ``compression.encode -> embedding gather ->
-    MLP -> tau threshold -> fixup Bloom probe`` traced as ONE XLA
-    program (via ``core.existence.query_stages``), compiled once per
-    (plan-shape, bucket) and shared across tenants with equal shapes.
-    Dispatches the fixup probe to the ``kernels/bloom_query`` Pallas
-    kernel (VMEM-resident bitset) when requested; pure-JAX fallback
-    otherwise, bit-identical.
+    padding buckets, round-robin across tenants. ``step()`` is split
+    into a host prepare half and an async device dispatch half; with
+    ``async_dispatch=True`` a double-buffered in-flight slot overlaps
+    padding batch *t+1* with computing batch *t*.
 
 ``stats``
-    :class:`ServeStats` — QPS, batch occupancy, p50/p99 latency
-    (``runtime.LatencyWindow``), per-stage positive counters (model
-    yes-rate at tau / fixup hit rate / composite), feeding
+    :class:`ServeStats` — QPS, batch occupancy, p50/p99 latency,
+    per-stage positive counters, overlapped-batch count, feeding
     ``runtime.MetricsLogger``'s JSONL stream.
 
 ``server``
-    :class:`FilterServer` — the facade wiring the four together.
+    :class:`FilterServer` — the facade wiring the five together.
+
+``fused``
+    Back-compat shim: the pre-planner ``fused_query_fn`` surface,
+    delegating to ``plan`` + ``executors``.
 
 Entry points
 ============
 
 * demo:      ``PYTHONPATH=src python examples/serve_filter.py``
-* benchmark: ``PYTHONPATH=src python benchmarks/serve_filter_bench.py``
+  (``--shards N --async-dispatch`` for the mesh-sharded pipeline)
+* benchmark: ``PYTHONPATH=src python benchmarks/serve_filter_bench.py
+  [--executor {local,sharded}] [--async-dispatch]``
 * tests:     ``tests/test_serve_filter.py`` (served answers are
-  property-tested bit-identical to direct ``ExistenceIndex.query`` —
-  the no-false-negative contract survives batching/padding).
+  property-tested bit-identical to direct ``ExistenceIndex.query``),
+  ``tests/test_serve_sharded.py`` (sharded == local, multi-device).
 
-Scale work still open (see ROADMAP): sharded registry across hosts,
-async host-side pipeline (overlap pad/scatter with device compute).
+Scale work still open (see ROADMAP): tenant hot-reload (swap a
+re-fitted index without draining), cross-host registry federation.
 """
+from repro.serve_filter.executors import (Executor, LocalExecutor,
+                                          PlacedFilter, ShardedExecutor,
+                                          acquire_executor,
+                                          compiled_program_count,
+                                          executor_for, release_executor,
+                                          release_plan)
 from repro.serve_filter.fused import fused_query_fn
+from repro.serve_filter.plan import Placement, QueryPlan, plan_query
 from repro.serve_filter.registry import FilterEntry, FilterRegistry
 from repro.serve_filter.scheduler import (DEFAULT_BUCKETS, QueryRequest,
                                           QueryScheduler, bucket_for)

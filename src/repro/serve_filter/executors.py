@@ -1,0 +1,310 @@
+"""Pluggable query executors: one interface, local and mesh-sharded.
+
+An :class:`Executor` turns a :class:`~repro.serve_filter.plan.QueryPlan`
+into a compiled callable with the fused-path signature
+
+    ``fn(params, bits, tau, raw_ids) -> (answers, model_yes, backup_yes)``
+
+plus a :meth:`~Executor.place` hook that lays a fitted index's arrays
+out on device(s) the way that callable expects them. Two implementations:
+
+:class:`LocalExecutor`
+    Today's single-device fused path, behavior-preserving: one
+    ``jax.jit`` of ``existence.query_stages`` per plan, specialized per
+    padding bucket by jit's shape cache, with the fixup probe optionally
+    dispatched to the ``kernels/bloom_query`` Pallas kernel.
+
+:class:`ShardedExecutor`
+    The same pipeline under ``shard_map`` over one mesh axis: embedding
+    tables are row-sharded (masked gather + one ``psum`` rebuilds the
+    concatenated feature row), the fixup bitset is word-sharded (each
+    shard probes only its slice via ``bloom.shard_miss_count`` — or the
+    Pallas word-offset kernel — and answers combine with a single
+    ``psum``), and the tiny dense MLP weights are replicated. Answers
+    are bit-identical to :class:`LocalExecutor` by construction: every
+    probe word and every table row belongs to exactly one shard.
+
+Executors are cached per plan (and mesh), so heterogeneous tenants
+whose filters share a plan share compiled programs — the registry's
+eviction hook (:func:`release_plan`) drops cache entries once no tenant
+references the plan. :func:`compiled_program_count` sums live XLA
+programs across all cached executors for the stats surface.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import bloom, existence, lmbf
+from repro.kernels.bloom_query import ops as bloom_ops
+from repro.nn.spec import is_spec
+from repro.serve_filter.plan import PROBE_KERNEL, QueryPlan
+from repro.sharding import rules
+from repro.sharding.pipeline import shard_map
+
+# shard_map's replication-check kwarg has been renamed across JAX
+# versions (check_rep -> check_vma); resolve once, like the shims in
+# sharding/pipeline.py.
+_CHECK_KW = next((kw for kw in ("check_rep", "check_vma")
+                  if kw in inspect.signature(shard_map).parameters), None)
+
+
+@dataclasses.dataclass
+class PlacedFilter:
+    """One tenant's device-resident arrays, laid out per the plan.
+
+    For local placement these are plain single-device arrays; for
+    sharded placement the embedding tables / bitset are padded to
+    divide the shard count and carry ``NamedSharding`` over the plan's
+    mesh axis.
+    """
+    params: object              # model params pytree
+    bits: jax.Array             # packed fixup bitset
+
+
+class Executor:
+    """Interface: a compiled query path for one :class:`QueryPlan`."""
+
+    plan: QueryPlan
+    fn: Callable                # (params, bits, tau, raw_ids) -> 3-tuple
+
+    def place(self, index: existence.ExistenceIndex) -> PlacedFilter:
+        raise NotImplementedError
+
+    def __call__(self, placed: PlacedFilter, tau, raw_ids):
+        return self.fn(placed.params, placed.bits, tau, raw_ids)
+
+    def program_count(self) -> int:
+        """Live jit-cache entries (plan-shape x bucket XLA programs)."""
+        try:
+            return self.fn._cache_size()
+        except AttributeError:      # older/newer jit internals
+            return 0
+
+
+class LocalExecutor(Executor):
+    """Single-device fused path (the pre-planner behavior)."""
+
+    def __init__(self, plan: QueryPlan):
+        self.plan = plan
+        cfg, fp = plan.cfg, plan.fixup_params
+        if plan.probe == PROBE_KERNEL:
+            def probe(bits, ids):
+                return bloom_ops.bloom_query(ids, bits, fp,
+                                             block_n=plan.block_n,
+                                             interpret=plan.interpret)
+        else:
+            probe = None
+
+        @jax.jit
+        def fused(params, bits, tau, raw_ids):
+            return existence.query_stages(params, cfg, tau, bits, fp,
+                                          raw_ids, probe_fn=probe)
+
+        self.fn = fused
+
+    def place(self, index: existence.ExistenceIndex) -> PlacedFilter:
+        return PlacedFilter(params=index.params,
+                            bits=jnp.asarray(index.fixup_filter.bits))
+
+
+class ShardedExecutor(Executor):
+    """Mesh-sharded fused path: tables + bitset split over one axis."""
+
+    def __init__(self, plan: QueryPlan, mesh: Mesh):
+        if not plan.placement.sharded:
+            raise ValueError("ShardedExecutor needs a sharded placement")
+        if mesh.shape.get(plan.placement.axis, 1) != plan.placement.n_shards:
+            raise ValueError(
+                f"mesh axis {plan.placement.axis!r} has size "
+                f"{mesh.shape.get(plan.placement.axis)} but the plan "
+                f"expects {plan.placement.n_shards} shards")
+        self.plan = plan
+        self.mesh = mesh
+        axis = plan.placement.axis
+        cfg, fp = plan.cfg, plan.fixup_params
+        wl = plan.words_per_shard()
+
+        def predict_fn(params, cfg_, enc):
+            """lmbf.predict over vocab-sharded tables: masked local
+            gathers, ONE psum to rebuild the feature row, replicated
+            MLP head. One-hot columns have no table — compute them on
+            shard 0 only so the psum is exact (no 1/n rescaling)."""
+            shard = jax.lax.axis_index(axis)
+            feats = []
+            for i, (rows, e) in enumerate(cfg_.column_encodings):
+                ids = enc[..., i]
+                if e is None:
+                    oh = jax.nn.one_hot(ids, rows, dtype=cfg_.dtype)
+                    feats.append(jnp.where(shard == 0, oh,
+                                           jnp.zeros_like(oh)))
+                else:
+                    tbl = params["embed"][f"col{i}"]    # (rows_local, e)
+                    rl = tbl.shape[0]
+                    lid = ids - shard * rl
+                    ok = (lid >= 0) & (lid < rl)
+                    g = jnp.take(tbl, jnp.clip(lid, 0, rl - 1), axis=0)
+                    feats.append(jnp.where(ok[..., None], g,
+                                           jnp.zeros_like(g)))
+            x = jax.lax.psum(jnp.concatenate(feats, axis=-1), axis)
+            return jax.nn.sigmoid(lmbf.mlp_head(params, cfg_, x))
+
+        if plan.probe == PROBE_KERNEL:
+            def local_miss(bits_local, ids):
+                off = (jax.lax.axis_index(axis) * wl).astype(jnp.int32)
+                return bloom_ops.bloom_query_shard(
+                    ids, bits_local, off[None], fp,
+                    block_n=plan.block_n, interpret=plan.interpret)
+        else:
+            def local_miss(bits_local, ids):
+                off = jax.lax.axis_index(axis) * wl
+                return bloom.shard_miss_count(bits_local, ids, fp, off)
+
+        def probe_fn(bits_local, ids):
+            # each probe word is owned by exactly one shard: zero
+            # misses across all shards <=> every probed bit is set
+            miss = jax.lax.psum(local_miss(bits_local, ids), axis)
+            return miss == 0
+
+        def body(params, bits_local, tau, raw_ids):
+            return existence.query_stages(params, cfg, tau, bits_local,
+                                          fp, raw_ids, probe_fn=probe_fn,
+                                          predict_fn=predict_fn)
+
+        sm_kwargs = {}
+        if _CHECK_KW:
+            # pallas_call has no replication rule — disable the check
+            # only for the kernel probe flavor
+            sm_kwargs[_CHECK_KW] = plan.probe != PROBE_KERNEL
+        self.fn = jax.jit(shard_map(
+            body, mesh=mesh,
+            in_specs=(self._param_specs(), P(axis), P(), P()),
+            out_specs=(P(), P(), P()), **sm_kwargs))
+
+    # ------------------------------------------------------------ layout
+    def _param_specs(self):
+        """PartitionSpec tree for the (padded) param pytree, resolved
+        through sharding/rules.py: 'vocab' (table rows) -> the shard
+        axis, every other logical axis replicated."""
+        axis = self.plan.placement.axis
+        table = {"vocab": (axis,)}
+        spec_tree = lmbf.params_spec(self.plan.cfg)
+
+        def one(s):
+            shape = list(s.shape)
+            if s.axes and s.axes[0] == "vocab":
+                shape[0] = (self.plan.table_rows_per_shard(shape[0])
+                            * self.plan.placement.n_shards)
+            return rules.spec_for(shape, s.axes, self.mesh, table)
+
+        return jax.tree.map(one, spec_tree, is_leaf=is_spec)
+
+    def place(self, index: existence.ExistenceIndex) -> PlacedFilter:
+        """Pad + scatter a fitted index onto the mesh: each shard gets
+        its table-row and bitset-word slice directly (no full-size
+        replica materializes on any one device)."""
+        cfg = self.plan.cfg
+        n = self.plan.placement.n_shards
+        axis = self.plan.placement.axis
+        shard1d = NamedSharding(self.mesh, P(axis))
+        repl = NamedSharding(self.mesh, P())
+
+        embed = {}
+        for i, (rows, e) in enumerate(cfg.column_encodings):
+            if e is None:
+                continue
+            tbl = np.asarray(index.params["embed"][f"col{i}"])
+            rl = self.plan.table_rows_per_shard(rows)
+            padded = np.zeros((rl * n,) + tbl.shape[1:], tbl.dtype)
+            padded[:rows] = tbl
+            embed[f"col{i}"] = jax.device_put(
+                padded, NamedSharding(self.mesh, P(axis, None)))
+        dense = {k: jax.device_put(np.asarray(v), repl)
+                 for k, v in index.params["dense"].items()}
+
+        bits = np.asarray(index.fixup_filter.bits)
+        padded_bits = np.zeros(self.plan.words_per_shard() * n, np.uint32)
+        padded_bits[:bits.size] = bits
+        return PlacedFilter(params={"embed": embed, "dense": dense},
+                            bits=jax.device_put(padded_bits, shard1d))
+
+
+# --------------------------------------------------------------- registry
+# of compiled executors: (plan, mesh-or-None) -> Executor. Local plans
+# key on (plan, None) so every registry/server in the process shares
+# compiled programs, exactly like the old fused-fn _CACHE. Tenants
+# REF-COUNT their key (acquire on register, release on evict), so one
+# registry evicting its last tenant on a plan cannot invalidate the
+# shared cache entry while another registry still serves that plan.
+
+_EXECUTORS: Dict[Tuple[QueryPlan, Optional[Mesh]], Executor] = {}
+_REFS: Dict[Tuple[QueryPlan, Optional[Mesh]], int] = {}
+
+
+def _key(plan: QueryPlan, mesh: Optional[Mesh]):
+    return (plan, mesh if plan.placement.sharded else None)
+
+
+def executor_for(plan: QueryPlan, mesh: Optional[Mesh] = None) -> Executor:
+    """Build-or-fetch the executor for a plan (cached, no ref taken)."""
+    key = _key(plan, mesh)
+    ex = _EXECUTORS.get(key)
+    if ex is None:
+        if plan.placement.sharded:
+            if mesh is None:
+                raise ValueError("sharded plan needs a mesh")
+            ex = ShardedExecutor(plan, mesh)
+        else:
+            ex = LocalExecutor(plan)
+        _EXECUTORS[key] = ex
+    return ex
+
+
+def acquire_executor(plan: QueryPlan,
+                     mesh: Optional[Mesh] = None) -> Executor:
+    """:func:`executor_for` + take one reference on the cache entry."""
+    ex = executor_for(plan, mesh)
+    key = _key(plan, mesh)
+    _REFS[key] = _REFS.get(key, 0) + 1
+    return ex
+
+
+def release_executor(plan: QueryPlan,
+                     mesh: Optional[Mesh] = None) -> bool:
+    """Drop one reference; on the last one, forget the cached executor
+    (and its compiled programs). Live objects holding the executor keep
+    working — only the cache forgets it. Returns True when dropped."""
+    key = _key(plan, mesh)
+    n = _REFS.get(key, 0) - 1
+    if n > 0:
+        _REFS[key] = n
+        return False
+    _REFS.pop(key, None)
+    return _EXECUTORS.pop(key, None) is not None
+
+
+def release_plan(plan: QueryPlan) -> int:
+    """Force-drop cached executors for a plan regardless of references
+    (tests / explicit cache hygiene). Returns the number released."""
+    victims = [k for k in _EXECUTORS if k[0] == plan]
+    for k in victims:
+        del _EXECUTORS[k]
+        _REFS.pop(k, None)
+    return len(victims)
+
+
+def compiled_program_count() -> int:
+    """Live (plan-shape x bucket) XLA programs across cached executors."""
+    return sum(ex.program_count() for ex in _EXECUTORS.values())
+
+
+def clear_executors() -> None:
+    """Drop every cached executor (tests / tenant-churn hygiene)."""
+    _EXECUTORS.clear()
+    _REFS.clear()

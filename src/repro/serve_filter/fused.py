@@ -1,81 +1,43 @@
-"""Fused query path: the whole membership pipeline as one XLA program.
+"""Back-compat facade over the planner/executor layer.
 
-``existence.query_stages`` already expresses ``encode -> embedding
-gather -> MLP -> tau threshold -> fixup Bloom probe`` as a single
-traceable function; this module owns its *compilation policy* for
-serving:
+The fused query path used to live here as a module-level ``(cfg,
+fixup_params, flags) -> jitted fn`` cache. That policy now belongs to
+``repro.serve_filter.plan`` (the :class:`QueryPlan` planner) and
+``repro.serve_filter.executors`` (the cached :class:`LocalExecutor` /
+:class:`ShardedExecutor` implementations); this module keeps the
+original three-function surface for existing callers:
 
-* one jitted callable per ``(LMBFConfig, BloomParams, probe flavor)`` —
-  both are hashable frozen dataclasses, so heterogeneous tenants whose
-  filters share a plan shape share the SAME jitted function (``tau`` and
-  the bitset are traced operands, not compile-time constants);
-* jit's shape cache then specializes that callable per padding bucket,
-  yielding exactly one XLA program per (plan-shape, bucket);
-* the fixup probe dispatches to the ``kernels/bloom_query`` Pallas
-  kernel (VMEM-resident bitset) when requested, with ``core.bloom.query``
-  as the pure-JAX fallback — bit-identical by construction (same hash
-  family, tested in tests/test_kernels.py).
+* :func:`fused_query_fn` — plan a local placement and return the
+  executor's raw jitted callable (same signature, same sharing
+  semantics: equal plans share one callable, jit's shape cache
+  specializes per padding bucket);
+* :func:`compiled_program_count` — live (plan-shape x bucket) XLA
+  programs across ALL cached executors, local and sharded;
+* :func:`clear_cache` — drop every cached executor.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Optional
 
-import jax
-import jax.numpy as jnp
+from repro.core import bloom, lmbf
+from repro.serve_filter import executors
+from repro.serve_filter.plan import plan_query
 
-from repro.core import bloom, existence, lmbf
-from repro.kernels.bloom_query import ops as bloom_ops
-
-# (cfg, fixup_params, use_kernel, interpret, block_n) -> jitted callable
-_CACHE: Dict[Tuple, Callable] = {}
+compiled_program_count = executors.compiled_program_count
+clear_cache = executors.clear_executors
 
 
 def fused_query_fn(cfg: lmbf.LMBFConfig, fixup_params: bloom.BloomParams,
                    *, use_kernel: bool = False,
                    interpret: Optional[bool] = None,
                    block_n: int = 2048) -> Callable:
-    """Jitted ``(params, bits, tau, raw_ids) -> (ans, model_yes, backup_yes)``.
+    """Jitted ``(params, bits, tau, raw_ids) -> (ans, model_yes,
+    backup_yes)`` for a LOCAL placement (the pre-planner API).
 
-    Identical signatures share one callable (module-level cache), so the
+    Identical signatures share one callable (executor cache), so the
     number of live XLA programs is bounded by distinct plan shapes times
     padding buckets, not by tenant count.
     """
-    key = (cfg, fixup_params, bool(use_kernel), interpret, int(block_n))
-    fn = _CACHE.get(key)
-    if fn is not None:
-        return fn
-
-    if use_kernel:
-        def probe(bits, ids):
-            return bloom_ops.bloom_query(ids, bits, fixup_params,
-                                         block_n=block_n,
-                                         interpret=interpret)
-    else:
-        probe = None
-
-    @jax.jit
-    def fused(params, bits, tau, raw_ids):
-        return existence.query_stages(params, cfg, tau, bits,
-                                      fixup_params, raw_ids,
-                                      probe_fn=probe)
-
-    _CACHE[key] = fused
-    return fused
-
-
-def compiled_program_count() -> int:
-    """Total jit-cache entries across fused callables — the live
-    (plan-shape x bucket) program count surfaced by ServeStats."""
-    total = 0
-    for fn in _CACHE.values():
-        try:
-            total += fn._cache_size()
-        except AttributeError:      # older/newer jit internals
-            pass
-    return total
-
-
-def clear_cache():
-    """Drop all fused callables (tests / tenant-churn hygiene)."""
-    _CACHE.clear()
+    plan = plan_query(cfg, fixup_params, use_kernel=use_kernel,
+                      interpret=interpret, block_n=block_n)
+    return executors.executor_for(plan).fn

@@ -1,0 +1,117 @@
+"""Query planning: a frozen, hashable description of HOW a filter runs.
+
+The serving path used to bake its compilation policy into one
+module-level ``(cfg, fixup_params, flags) -> jitted fn`` cache inside
+``fused.py``. That coupling breaks down once tenants can live on more
+than one device: *what* to compute (the ``encode -> embed -> MLP -> tau
+-> fixup probe`` pipeline), *how* to probe (pure-JAX vs the Pallas
+kernel), and *where* the arrays live (one device vs a mesh axis) are
+independent decisions. This module owns the first two and names the
+third:
+
+* :class:`Placement` — device layout for a tenant's arrays: ``local``
+  (today's single-device path) or ``sharded`` (embedding tables split
+  row-wise and the fixup bitset split word-wise over one mesh axis).
+* :class:`QueryPlan` — placement + probe flavor + plan shape. Frozen
+  and hashable: it IS the executor-cache key, so heterogeneous tenants
+  whose filters share a plan share one compiled program per bucket.
+* :func:`plan_query` — the planner: resolves ``LMBFConfig`` +
+  ``BloomParams`` + an optional target :class:`jax.sharding.Mesh` into
+  a plan. Falls back to local placement when the mesh has no usable
+  shard axis (axis missing or size 1), so single-device callers never
+  need to think about meshes.
+
+Executors (``repro.serve_filter.executors``) consume plans; the
+registry stores one plan per tenant and hands entries their placement.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from jax.sharding import Mesh
+
+from repro.core import bloom, lmbf
+
+LOCAL = "local"
+SHARDED = "sharded"
+
+PROBE_JAX = "jax"          # core.bloom query (pure JAX)
+PROBE_KERNEL = "kernel"    # kernels/bloom_query Pallas probe
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """Where a tenant's arrays live.
+
+    ``local``: everything on the default device. ``sharded``: embedding
+    tables row-sharded and the fixup bitset word-sharded over mesh axis
+    ``axis`` (``n_shards`` = that axis' size); dense MLP weights are
+    replicated (they are tiny — the tables and bitset carry the bytes).
+    """
+    kind: str = LOCAL
+    axis: Optional[str] = None
+    n_shards: int = 1
+
+    def __post_init__(self):
+        if self.kind not in (LOCAL, SHARDED):
+            raise ValueError(f"unknown placement kind {self.kind!r}")
+        if self.kind == SHARDED and (self.axis is None or self.n_shards < 2):
+            raise ValueError("sharded placement needs an axis and >= 2 shards")
+
+    @property
+    def sharded(self) -> bool:
+        return self.kind == SHARDED
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryPlan:
+    """Frozen executor-cache key: plan shape, probe flavor, placement."""
+    cfg: lmbf.LMBFConfig
+    fixup_params: bloom.BloomParams
+    probe: str = PROBE_JAX
+    interpret: Optional[bool] = None     # Pallas interpret override
+    block_n: int = 2048                  # Pallas key-block size
+    placement: Placement = Placement()
+
+    def __post_init__(self):
+        if self.probe not in (PROBE_JAX, PROBE_KERNEL):
+            raise ValueError(f"unknown probe flavor {self.probe!r}")
+
+    @property
+    def n_cols(self) -> int:
+        return self.cfg.plan.n_columns
+
+    # ---- sharded-layout geometry (padding so slices divide evenly) ----
+    def words_per_shard(self) -> int:
+        """Fixup-bitset words held by each shard (global words padded up
+        to a multiple of n_shards; pad words are zero and never probed)."""
+        n = self.placement.n_shards
+        return -(-self.fixup_params.n_words // n)
+
+    def table_rows_per_shard(self, rows: int) -> int:
+        """Embedding-table rows per shard for a table of ``rows`` rows
+        (padded up; pad rows are zero and never gathered)."""
+        n = self.placement.n_shards
+        return -(-rows // n)
+
+
+def plan_query(cfg: lmbf.LMBFConfig, fixup_params: bloom.BloomParams, *,
+               mesh: Optional[Mesh] = None, shard_axis: str = "data",
+               use_kernel: bool = False, interpret: Optional[bool] = None,
+               block_n: int = 2048) -> QueryPlan:
+    """Resolve config + fixup params + target mesh into a QueryPlan.
+
+    Sharded placement is chosen iff ``mesh`` is given and carries
+    ``shard_axis`` with size >= 2; otherwise local (a 1-device mesh and
+    no mesh at all plan identically, so tests/dev boxes share cache
+    entries with production single-device tenants).
+    """
+    placement = Placement()
+    if mesh is not None and mesh.shape.get(shard_axis, 1) > 1:
+        placement = Placement(kind=SHARDED, axis=shard_axis,
+                              n_shards=int(mesh.shape[shard_axis]))
+    return QueryPlan(cfg=cfg, fixup_params=fixup_params,
+                     probe=PROBE_KERNEL if use_kernel else PROBE_JAX,
+                     interpret=interpret, block_n=int(block_n),
+                     placement=placement)

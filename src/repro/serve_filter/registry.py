@@ -1,37 +1,59 @@
-"""Multi-tenant filter registry: owns fitted indexes + their budgets.
+"""Multi-tenant filter registry: owns fitted indexes + their placement.
 
 Each tenant/dataset id maps to a :class:`FilterEntry` bundling the
-fitted ``ExistenceIndex``, its device-resident fixup bitset, the shared
-fused query callable, and per-filter memory accounting (model weights
-via ``core/memory.py`` + packed bitset bytes). A registry optionally
-enforces a total memory budget with LRU eviction, and round-trips
-filters through ``checkpoint/manager.py`` (``save``/``load``) so a
-serving process can hydrate tenants from disk.
+fitted ``ExistenceIndex``, its :class:`~repro.serve_filter.plan.QueryPlan`,
+the (cached) executor compiled for that plan, the tenant's
+device-placed arrays (:class:`~repro.serve_filter.executors.PlacedFilter`
+— on a sharded registry each hydrated tenant's tables/bitset land
+directly on their shard), and per-filter memory accounting. A registry
+optionally enforces a total memory budget with LRU eviction, and
+round-trips filters through ``checkpoint/manager.py`` (``save``/
+``load``) so a serving process can hydrate tenants from disk. Evicting
+the last tenant on a plan also releases the plan's cached executor, so
+compiled-program count tracks live tenants rather than all-time churn.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
 import os
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
+from jax.sharding import Mesh
 
 from repro.core import existence, memory
-from repro.serve_filter import fused as fused_lib
+from repro.serve_filter import executors as executors_lib
+from repro.serve_filter.plan import QueryPlan, plan_query
 
 
 @dataclasses.dataclass
 class FilterEntry:
     tenant: str
     index: existence.ExistenceIndex
-    fused: Callable                 # jitted (params, bits, tau, ids) -> ...
-    bits: jax.Array                 # device-resident packed bitset
+    plan: QueryPlan
+    executor: executors_lib.Executor
+    placed: executors_lib.PlacedFilter   # device-resident, per placement
     model_mb: float
     fixup_mb: float
     last_used: int = 0              # registry LRU clock tick
     n_queries: int = 0
+
+    def run(self, raw_ids):
+        """One fused dispatch: (n, n_cols) ids -> (ans, model, backup).
+        With JAX's async dispatch this returns un-materialized device
+        arrays immediately — the scheduler exploits that to overlap
+        host-side padding with device compute."""
+        return self.executor(self.placed, self.index.tau, raw_ids)
+
+    @property
+    def fused(self):
+        """The executor's raw jitted callable (back-compat surface)."""
+        return self.executor.fn
+
+    @property
+    def bits(self) -> jax.Array:
+        return self.placed.bits
 
     @property
     def total_mb(self) -> float:
@@ -48,17 +70,24 @@ class FilterRegistry:
     ``budget_mb`` bounds the summed per-filter memory (weights + packed
     fixup bitset); registering past the budget evicts least-recently-used
     tenants first. ``use_kernel`` selects the Pallas fixup probe for all
-    tenants' fused callables.
+    tenants' plans. Passing a ``mesh`` whose ``shard_axis`` has >= 2
+    devices makes the planner choose sharded placement: every
+    registered/hydrated tenant's embedding tables and fixup bitset are
+    scattered straight onto their shard slices.
     """
 
     def __init__(self, budget_mb: Optional[float] = None, *,
                  use_kernel: bool = False,
                  interpret: Optional[bool] = None,
-                 block_n: int = 2048):
+                 block_n: int = 2048,
+                 mesh: Optional[Mesh] = None,
+                 shard_axis: str = "data"):
         self.budget_mb = budget_mb
         self.use_kernel = use_kernel
         self.interpret = interpret
         self.block_n = block_n
+        self.mesh = mesh
+        self.shard_axis = shard_axis
         self._entries: Dict[str, FilterEntry] = {}
         self._clock = itertools.count(1)
         self.evictions: List[str] = []
@@ -85,29 +114,45 @@ class FilterRegistry:
         return entry
 
     # ---------------------------------------------------------- mutation
+    def plan_for(self, index: existence.ExistenceIndex) -> QueryPlan:
+        """The plan this registry's planner assigns an index."""
+        return plan_query(index.cfg, index.fixup_filter.params,
+                          mesh=self.mesh, shard_axis=self.shard_axis,
+                          use_kernel=self.use_kernel,
+                          interpret=self.interpret, block_n=self.block_n)
+
     def register(self, tenant: str, index: existence.ExistenceIndex
                  ) -> FilterEntry:
-        """Admit a fitted index; evicts LRU tenants if over budget."""
+        """Admit a fitted index (or replace the tenant's current one —
+        the re-fit/hot-swap path); evicts LRU tenants if over budget."""
         mem = memory.accounting(index.cfg)
+        plan = self.plan_for(index)
+        executor = executors_lib.acquire_executor(plan, self.mesh)
         entry = FilterEntry(
             tenant=tenant,
             index=index,
-            fused=fused_lib.fused_query_fn(
-                index.cfg, index.fixup_filter.params,
-                use_kernel=self.use_kernel, interpret=self.interpret,
-                block_n=self.block_n),
-            bits=jnp.asarray(index.fixup_filter.bits),
+            plan=plan,
+            executor=executor,
+            placed=executor.place(index),
             model_mb=mem.weights_mb,
             fixup_mb=index.fixup_filter.size_mb,
             last_used=next(self._clock))
+        old = self._entries.get(tenant)
         self._entries[tenant] = entry
+        if old is not None:     # replaced: give back the old plan's ref
+            executors_lib.release_executor(old.plan, self.mesh)
         self._enforce_budget(keep=tenant)
         return entry
 
     def evict(self, tenant: str) -> None:
-        if tenant in self._entries:
-            del self._entries[tenant]
-            self.evictions.append(tenant)
+        entry = self._entries.pop(tenant, None)
+        if entry is None:
+            return
+        self.evictions.append(tenant)
+        # drop this tenant's reference; the cache entry (and compiled
+        # programs) go away with the LAST reference process-wide, so
+        # other registries serving the same plan are unaffected
+        executors_lib.release_executor(entry.plan, self.mesh)
 
     def _enforce_budget(self, keep: str) -> None:
         if self.budget_mb is None:
@@ -129,7 +174,8 @@ class FilterRegistry:
 
     def load(self, tenant: str, directory: str,
              step: Optional[int] = None) -> FilterEntry:
-        """Hydrate a tenant from ``directory/<tenant>`` and register it."""
+        """Hydrate a tenant from ``directory/<tenant>`` and register it
+        (on a sharded registry the arrays land directly on-shard)."""
         idx = existence.load_index(os.path.join(directory, tenant),
                                    step=step)
         return self.register(tenant, idx)

@@ -1,13 +1,32 @@
-"""Micro-batching scheduler: admission queue + padding buckets.
+"""Micro-batching scheduler: admission queue, padding buckets, async dispatch.
 
 The continuous-batching pattern from ``launch/serve.py`` adapted from
 token-steps to one-shot membership queries: requests (a tenant id + a
-block of raw-id rows) enter a FIFO admission queue; each ``step()``
-drains the oldest tenant's waiting rows into ONE fused dispatch, padded
-up to a fixed bucket size so every dispatch hits a pre-compiled
+block of raw-id rows) enter per-tenant FIFO queues; each ``step()``
+coalesces ONE tenant's waiting rows into one fused dispatch, padded up
+to a fixed bucket size so every dispatch hits a pre-compiled
 (plan-shape, bucket) XLA program instead of triggering a fresh trace
 per request shape. Padding rows are all-wildcard and sliced off before
-answers are scattered back to their requests.
+answers are scattered back to their requests. Tenants take dispatches
+round-robin (the ``_order`` deque rotates after every pick, with a set
+mirror for O(1) membership), so sustained load from one tenant cannot
+starve late arrivals.
+
+``step()`` is split into a host half and a device half:
+
+* **prepare** — pick the next tenant, pop row spans off its queue, and
+  pad/coalesce them into a bucket-sized batch (pure host work);
+* **dispatch** — hand the batch to the tenant's executor. JAX dispatch
+  is asynchronous: the call returns un-materialized device arrays
+  immediately while the device crunches.
+
+With ``async_dispatch=True`` the scheduler keeps ONE dispatched batch
+in flight between steps (a double buffer): batch *t+1* is prepared and
+dispatched while the device still computes batch *t*; only then does
+the scheduler block on *t*'s arrays and scatter its answers. Host
+pad/scatter time thus overlaps device compute instead of serializing
+with it. ``async_dispatch=False`` (default) retires every batch
+immediately after its dispatch — the original synchronous behavior.
 
 Bucket policy: the smallest bucket that fits the coalesced rows; rows
 beyond the largest bucket stay queued for the next step (bounded
@@ -20,11 +39,11 @@ import collections
 import dataclasses
 import itertools
 import time
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
-from repro.serve_filter.registry import FilterRegistry
+from repro.serve_filter.registry import FilterEntry, FilterRegistry
 from repro.serve_filter.stats import ServeStats
 
 DEFAULT_BUCKETS = (64, 256, 1024, 4096)
@@ -63,20 +82,47 @@ class QueryRequest:
         return self.t_done - self.t_submit
 
 
+@dataclasses.dataclass
+class _Prepared:
+    """Host half of one dispatch: padded batch + scatter plan."""
+    tenant: str
+    entry: FilterEntry
+    take: List[Tuple[QueryRequest, int, int]]   # (request, row offset, rows)
+    batch: np.ndarray                           # (bucket, n_cols) padded
+    bucket: int
+    n_total: int
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """Device half: a dispatched batch awaiting retirement."""
+    prep: _Prepared
+    outputs: tuple            # (ans, model, backup) device arrays
+    t_dispatch: float
+
+
 class QueryScheduler:
     def __init__(self, registry: FilterRegistry,
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
                  stats: Optional[ServeStats] = None,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter, *,
+                 async_dispatch: bool = False,
+                 max_inflight: int = 2):
         self.registry = registry
         self.buckets = tuple(sorted(int(b) for b in buckets))
         self.stats = stats or ServeStats()
         self._clock = clock
         self._rid = itertools.count()
-        # per-tenant FIFO of (request, row offset already answered)
+        self.async_dispatch = bool(async_dispatch)
+        # batches allowed past dispatch before the oldest must retire;
+        # 1 = synchronous, 2 = classic double buffer
+        self.max_inflight = max(1, int(max_inflight)) if async_dispatch else 1
+        # per-tenant FIFO of (request, first row not yet taken)
         self._queues: Dict[str, Deque[Tuple[QueryRequest, int]]] = \
             collections.defaultdict(collections.deque)
-        self._order: Deque[str] = collections.deque()   # tenant arrival order
+        self._order: Deque[str] = collections.deque()   # round-robin ring
+        self._order_set: Set[str] = set()               # O(1) membership
+        self._inflight: Deque[_InFlight] = collections.deque()
 
     # ------------------------------------------------------------ intake
     def submit(self, tenant: str, ids: np.ndarray) -> QueryRequest:
@@ -101,40 +147,72 @@ class QueryScheduler:
             req.t_done = req.t_submit
             return req
         self._queues[tenant].append((req, 0))
-        if tenant not in self._order:
+        if tenant not in self._order_set:
             self._order.append(tenant)
+            self._order_set.add(tenant)
         return req
 
     @property
     def pending_rows(self) -> int:
+        """Rows admitted but not yet taken into a dispatch."""
         return sum(req.ids.shape[0] - off
                    for q in self._queues.values() for req, off in q)
 
+    @property
+    def inflight_batches(self) -> int:
+        return len(self._inflight)
+
     # ---------------------------------------------------------- dispatch
     def step(self) -> bool:
-        """One fused dispatch for the longest-waiting tenant.
+        """Prepare + dispatch one batch, retiring per the in-flight cap.
 
-        Coalesces that tenant's queued rows up to the largest bucket,
-        pads to the smallest fitting bucket, runs the fused program,
-        scatters answers back, completes fully-answered requests.
-        Returns False when nothing is queued.
+        Returns False only when nothing is queued AND nothing is in
+        flight. With async dispatch the final in-flight batches drain
+        one per step once the queues empty.
         """
+        prep = self._prepare()
+        if prep is None:
+            if self._inflight:
+                self._retire(self._inflight.popleft())
+                return True
+            return False
+        try:
+            self._dispatch(prep)
+        except Exception:
+            # dispatch never launched: put the taken spans back at the
+            # head of the queue so the rows stay answerable (a retry
+            # after the fault sees them exactly where they were)
+            self._requeue(prep)
+            raise
+        while len(self._inflight) >= self.max_inflight:
+            self._retire(self._inflight.popleft())
+        return True
+
+    def _prepare(self) -> Optional[_Prepared]:
+        """Host half: coalesce the next tenant's rows into a padded
+        batch. Pops the taken spans off the queue, so a later prepare
+        (while this batch is still in flight) continues after them."""
         tenant = self._next_tenant()
         if tenant is None:
-            return False
+            return None
         queue = self._queues[tenant]
         entry = self.registry.get(tenant)
         cap = self.buckets[-1]
 
-        # coalesce rows from the head of the queue
-        take: List[Tuple[QueryRequest, int, int]] = []  # (req, off, n)
+        take: List[Tuple[QueryRequest, int, int]] = []
         n_total = 0
-        for req, off in queue:
+        while queue and n_total < cap:
+            req, off = queue[0]
             n = min(req.ids.shape[0] - off, cap - n_total)
-            if n <= 0:
-                break
             take.append((req, off, n))
             n_total += n
+            if off + n >= req.ids.shape[0]:
+                queue.popleft()
+            else:                         # bucket cap hit mid-request
+                queue[0] = (req, off + n)
+                break
+        if not queue:
+            del self._queues[tenant]
 
         bucket = bucket_for(n_total, self.buckets)
         batch = np.zeros((bucket, entry.n_cols), np.int32)  # pad = wildcard
@@ -142,19 +220,51 @@ class QueryScheduler:
         for req, off, n in take:
             batch[pos:pos + n] = req.ids[off:off + n]
             pos += n
+        return _Prepared(tenant=tenant, entry=entry, take=take,
+                         batch=batch, bucket=bucket, n_total=n_total)
 
-        t0 = self._clock()
-        ans_d, model_d, backup_d = entry.fused(
-            entry.index.params, entry.bits, entry.index.tau, batch)
-        ans = np.asarray(ans_d)[:n_total]
-        model = np.asarray(model_d)[:n_total]
-        backup = np.asarray(backup_d)[:n_total]
-        latency = self._clock() - t0
-        entry.n_queries += n_total
+    def _dispatch(self, prep: _Prepared) -> None:
+        """Device half: launch the fused program (async — returns
+        un-materialized device arrays) and park it in flight."""
+        outputs = prep.entry.run(prep.batch)
+        prep.entry.n_queries += prep.n_total
+        self._inflight.append(_InFlight(prep=prep, outputs=outputs,
+                                        t_dispatch=self._clock()))
 
-        # scatter back + retire finished requests
+    def _requeue(self, prep: _Prepared) -> None:
+        """Restore a prepared-but-never-dispatched batch's spans to the
+        front of the tenant's queue, in their original order."""
+        queue = self._queues.setdefault(prep.tenant, collections.deque())
+        for req, off, n in reversed(prep.take):
+            if queue and queue[0][0] is req:    # cap-split head entry
+                queue[0] = (req, off)
+            else:
+                queue.appendleft((req, off))
+        if prep.tenant not in self._order_set:
+            self._order.append(prep.tenant)
+            self._order_set.add(prep.tenant)
+
+    def _retire(self, inf: _InFlight) -> None:
+        """Block on a dispatched batch, scatter answers back, complete
+        fully-answered requests, record stats."""
+        prep = inf.prep
+        try:
+            ans = np.asarray(inf.outputs[0])[:prep.n_total]
+            model = np.asarray(inf.outputs[1])[:prep.n_total]
+            backup = np.asarray(inf.outputs[2])[:prep.n_total]
+        except Exception as e:
+            # the async computation itself failed: the rows are gone
+            # from the queue, so fail their requests rather than hang
+            # their owners on req.done forever
+            for req, _, _ in prep.take:
+                if not req.done:
+                    req.error = f"dispatch failed: {e!r}"
+                    req.t_done = self._clock()
+            raise
+        latency = self._clock() - inf.t_dispatch
+
         pos = 0
-        for req, off, n in take:
+        for req, off, n in prep.take:
             if req.answers is None:
                 m = req.ids.shape[0]
                 req.answers = np.zeros(m, bool)
@@ -164,31 +274,25 @@ class QueryScheduler:
             req.model_yes[off:off + n] = model[pos:pos + n]
             req.backup_yes[off:off + n] = backup[pos:pos + n]
             pos += n
-            new_off = off + n
-            assert queue[0][0] is req
-            if new_off >= req.ids.shape[0]:
-                queue.popleft()
+            if off + n >= req.ids.shape[0]:   # last span: request done
                 req.t_done = self._clock()
                 self.stats.record_request(req.latency_s)
-            else:
-                queue[0] = (req, new_off)
-
-        if not queue:
-            del self._queues[tenant]
-        self.stats.record_batch(tenant, n_total, bucket, latency,
-                                ans, model, backup)
-        return True
+        self.stats.record_batch(prep.tenant, prep.n_total, prep.bucket,
+                                latency, ans, model, backup,
+                                inflight=len(self._inflight))
 
     def _next_tenant(self) -> Optional[str]:
         while self._order:
             tenant = self._order[0]
             if not self._queues.get(tenant):
                 self._order.popleft()
+                self._order_set.discard(tenant)
                 continue
             if tenant not in self.registry:
                 self._fail_tenant(tenant, f"tenant {tenant!r} evicted "
                                   "with requests queued")
                 self._order.popleft()
+                self._order_set.discard(tenant)
                 continue
             # rotate so tenants with sustained load share dispatches
             self._order.rotate(-1)
@@ -197,12 +301,16 @@ class QueryScheduler:
 
     def _fail_tenant(self, tenant: str, reason: str) -> None:
         """Retire a tenant's queued requests with an error (their owner
-        sees ``req.done`` with ``req.error`` set instead of answers)."""
+        sees ``req.done`` with ``req.error`` set instead of answers).
+        Spans already in flight still retire with answers — they ran
+        against the entry as placed at dispatch time."""
         for req, _ in self._queues.pop(tenant, ()):
             req.error = reason
             req.t_done = self._clock()
 
     def run_until_drained(self, max_steps: int = 100_000) -> int:
+        """Steps until queues AND the in-flight buffer are empty (the
+        final async batches drain one per step). Returns step count."""
         steps = 0
         while steps < max_steps and self.step():
             steps += 1

@@ -6,16 +6,22 @@ from checkpoint) fitted indexes per tenant, submit query blocks, drive
 synchronous convenience ``query()`` is the one-shot path used by tests
 and notebooks; production callers submit and drain in their own loop
 (mirroring ``launch/serve.py``).
+
+Scale knobs: pass ``mesh`` (+ ``shard_axis``) to have the planner place
+every tenant's embedding tables and fixup bitset sharded over that mesh
+axis (the ``ShardedExecutor`` path), and ``async_dispatch=True`` to
+double-buffer dispatches so host-side padding overlaps device compute.
 """
 from __future__ import annotations
 
 from typing import Dict, Optional, Sequence
 
 import numpy as np
+from jax.sharding import Mesh
 
 from repro.core import existence
 from repro.runtime.metrics import MetricsLogger
-from repro.serve_filter import fused as fused_lib
+from repro.serve_filter import executors as executors_lib
 from repro.serve_filter.registry import FilterEntry, FilterRegistry
 from repro.serve_filter.scheduler import (DEFAULT_BUCKETS, QueryRequest,
                                           QueryScheduler)
@@ -28,13 +34,20 @@ class FilterServer:
                  use_kernel: bool = False,
                  interpret: Optional[bool] = None,
                  block_n: int = 2048,
+                 mesh: Optional[Mesh] = None,
+                 shard_axis: str = "data",
+                 async_dispatch: bool = False,
+                 max_inflight: int = 2,
                  metrics_path: Optional[str] = None,
                  metrics_echo: bool = False):
         self.registry = FilterRegistry(budget_mb, use_kernel=use_kernel,
-                                       interpret=interpret, block_n=block_n)
+                                       interpret=interpret, block_n=block_n,
+                                       mesh=mesh, shard_axis=shard_axis)
         self.stats = ServeStats()
         self.scheduler = QueryScheduler(self.registry, buckets=buckets,
-                                        stats=self.stats)
+                                        stats=self.stats,
+                                        async_dispatch=async_dispatch,
+                                        max_inflight=max_inflight)
         self.metrics = (MetricsLogger(metrics_path, echo=metrics_echo)
                         if (metrics_path or metrics_echo) else None)
         self._log_step = 0
@@ -85,5 +98,5 @@ class FilterServer:
         snap["registered_filters"] = float(len(self.registry))
         snap["registry_mb"] = self.registry.total_mb
         snap["compiled_programs"] = float(
-            fused_lib.compiled_program_count())
+            executors_lib.compiled_program_count())
         return snap

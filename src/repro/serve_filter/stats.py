@@ -32,6 +32,7 @@ class _Counters:
     model_pos: int = 0
     fixup_pos: int = 0
     final_pos: int = 0
+    overlapped: int = 0         # batches retired with another in flight
 
 
 class ServeStats:
@@ -48,8 +49,11 @@ class ServeStats:
     # ---------------------------------------------------------- recording
     def record_batch(self, tenant: str, n_valid: int, bucket: int,
                      latency_s: float, answers: np.ndarray,
-                     model_yes: np.ndarray, backup_yes: np.ndarray):
-        """One fused dispatch. Stage arrays are the VALID slice only."""
+                     model_yes: np.ndarray, backup_yes: np.ndarray,
+                     inflight: int = 0):
+        """One fused dispatch. Stage arrays are the VALID slice only;
+        ``inflight`` is the number of OTHER batches still in flight at
+        retirement (> 0 means the async double buffer overlapped)."""
         t = self.totals
         t.queries += int(n_valid)
         t.batches += 1
@@ -57,6 +61,8 @@ class ServeStats:
         t.model_pos += int(np.asarray(model_yes).sum())
         t.fixup_pos += int(np.asarray(backup_yes).sum())
         t.final_pos += int(np.asarray(answers).sum())
+        if inflight > 0:
+            t.overlapped += 1
         self.batch_latency.record(latency_s)
         self.per_tenant[tenant] = self.per_tenant.get(tenant, 0) + \
             int(n_valid)
@@ -81,6 +87,7 @@ class ServeStats:
             "fixup_hit_rate": t.fixup_pos / q,
             "positive_rate": t.final_pos / q,
             "tenants_served": float(len(self.per_tenant)),
+            "overlapped_batches": float(t.overlapped),
         }
         out.update(self.batch_latency.summary("batch_"))
         out.update(self.request_latency.summary("request_"))

@@ -25,20 +25,26 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # jax.shard_map only exists from 2025-era JAX; older releases ship it
-# under jax.experimental. Resolve once at import time.
+# under jax.experimental. Resolve once at import time. Public: the
+# serving executors (repro.serve_filter.executors) reuse these shims.
 if hasattr(jax, "shard_map"):
-    _shard_map = jax.shard_map
+    shard_map = jax.shard_map
 else:
-    from jax.experimental.shard_map import shard_map as _shard_map
+    from jax.experimental.shard_map import shard_map
+
+_shard_map = shard_map     # back-compat alias
 
 
-def _mark_varying(x, axis: str):
-    """Mark a shard_map carry as pipe-varying where the JAX version
+def mark_varying(x, axis: str):
+    """Mark a shard_map carry as axis-varying where the JAX version
     distinguishes varying from replicated loop carries (jax.lax.pcast,
     new-style shard_map); a no-op on versions without that type system."""
     if hasattr(jax.lax, "pcast"):
         return jax.lax.pcast(x, (axis,), to="varying")
     return x
+
+
+_mark_varying = mark_varying     # back-compat alias
 
 
 def stage_split(n_layers: int, n_stages: int):

@@ -12,6 +12,8 @@ from repro.core import existence
 from repro.data import tuples
 from repro.serve_filter import (FilterRegistry, FilterServer, ServeStats,
                                 bucket_for)
+from repro.serve_filter import executors as executors_lib
+from repro.serve_filter import fused as fused_lib
 from repro.serve_filter.scheduler import QueryScheduler
 
 
@@ -63,6 +65,117 @@ def test_registry_budget_lru(fitted):
     reg2 = FilterRegistry(budget_mb=mb / 2)
     reg2.register("only", idx)
     assert "only" in reg2
+
+
+def test_evict_releases_unshared_executor_cache(fitted):
+    """Evicting the LAST tenant on a plan must drop the plan's cached
+    executor; evicting one of several sharers must not."""
+    _, idx_a = fitted["a"]
+    _, idx_b = fitted["b"]
+    fused_lib.clear_cache()     # forget refs from earlier tests' tenants
+    reg = FilterRegistry()
+    reg.register("t1", idx_a)
+    reg.register("t2", idx_a)           # shares t1's plan
+    reg.register("t3", idx_b)           # distinct plan shape
+    plan_a = reg.get("t1").plan
+    assert reg.get("t2").plan == plan_a
+    assert (plan_a, None) in executors_lib._EXECUTORS
+
+    reg.evict("t1")                     # t2 still holds the plan
+    assert (plan_a, None) in executors_lib._EXECUTORS
+    reg.evict("t2")                     # last holder gone
+    assert (plan_a, None) not in executors_lib._EXECUTORS
+    assert (reg.get("t3").plan, None) in executors_lib._EXECUTORS
+
+    # references are process-wide: another registry's tenant on the
+    # same plan keeps the cache entry alive across this one's eviction
+    reg_a, reg_b = FilterRegistry(), FilterRegistry()
+    reg_a.register("mine", idx_a)
+    reg_b.register("theirs", idx_a)
+    reg_a.evict("mine")
+    assert (plan_a, None) in executors_lib._EXECUTORS
+    reg_b.evict("theirs")
+    assert (plan_a, None) not in executors_lib._EXECUTORS
+
+
+def test_reregister_releases_replaced_entry_ref(fitted):
+    """Replacing a tenant's index (the re-fit/hot-swap path) must give
+    back the OLD plan's executor reference, or the cache leaks."""
+    _, idx_a = fitted["a"]
+    _, idx_b = fitted["b"]
+    fused_lib.clear_cache()
+    reg = FilterRegistry()
+    reg.register("t", idx_a)
+    plan_old = reg.get("t").plan
+    reg.register("t", idx_b)            # replace with a different plan
+    plan_new = reg.get("t").plan
+    assert plan_old != plan_new
+    assert (plan_old, None) not in executors_lib._EXECUTORS  # ref returned
+    reg.evict("t")
+    assert (plan_new, None) not in executors_lib._EXECUTORS
+    assert executors_lib.compiled_program_count() == 0
+
+
+def test_dispatch_failure_keeps_rows_answerable(fitted):
+    """An executor fault during dispatch must not silently drop the
+    prepared rows: they go back on the queue and a retry answers them."""
+    ds, idx = fitted["a"]
+    reg = FilterRegistry()
+    reg.register("t", idx)
+    sched = QueryScheduler(reg, buckets=(16,))
+    req = sched.submit("t", ds.records[:24])    # 2 spans of <= 16
+
+    entry = reg.get("t")
+    good_executor = entry.executor
+
+    class _Boom:
+        def __call__(self, *a, **k):
+            raise RuntimeError("injected device fault")
+
+    entry.executor = _Boom()
+    with pytest.raises(RuntimeError, match="injected device fault"):
+        sched.step()
+    assert not req.done and req.error is None
+    assert sched.pending_rows == 24             # nothing lost
+
+    entry.executor = good_executor              # fault cleared: retry
+    sched.run_until_drained()
+    assert req.done and req.error is None and req.answers.all()
+
+
+def test_compiled_program_count_observable(fitted):
+    """stats_snapshot must track live compiled programs through
+    register -> query -> evict, so cache growth is observable."""
+    fused_lib.clear_cache()
+    _, idx = fitted["a"]
+    srv = FilterServer(buckets=(32,))
+    srv.register("t", idx)
+    srv.query("t", fitted["a"][0].records[:8])
+    assert srv.stats_snapshot()["compiled_programs"] >= 1
+    srv.evict("t")
+    assert srv.stats_snapshot()["compiled_programs"] == 0
+
+
+def test_lru_evict_then_rehydrate_bit_identical(fitted, tmp_path):
+    """save -> budget eviction -> load must round-trip to bit-identical
+    answers (the production cold-start-after-pressure path)."""
+    ds_a, idx_a = fitted["a"]
+    _, idx_b = fitted["b"]
+    probes, _ = _corpus(ds_a, 200, seed=21)
+    srv = FilterServer(budget_mb=idx_a.total_mb + idx_b.total_mb / 2,
+                       buckets=(64, 256))
+    srv.register("t1", idx_a)
+    before = srv.query("t1", probes).copy()
+    srv.save("t1", str(tmp_path))
+
+    srv.register("t2", idx_b)           # over budget: t1 is LRU, evicted
+    assert "t1" not in srv.registry
+    assert srv.registry.evictions == ["t1"]
+
+    srv.load("t1", str(tmp_path))       # re-hydrate (evicts t2 in turn)
+    assert "t1" in srv.registry
+    after = srv.query("t1", probes)
+    np.testing.assert_array_equal(after, before)
 
 
 def test_registry_checkpoint_roundtrip(fitted, tmp_path):
@@ -170,6 +283,65 @@ def test_scheduler_rejects_bad_submissions(fitted):
         sched.submit("nope", ds.records[:4])
     with pytest.raises(ValueError):
         sched.submit("t", ds.records[:4, :2])   # wrong column count
+
+
+def test_round_robin_no_starvation(fitted):
+    """A tenant with a deep backlog must not starve a late arrival:
+    the late tenant gets a dispatch within one round-robin cycle."""
+    ds, idx = fitted["a"]
+    reg = FilterRegistry()
+    reg.register("hog", idx)
+    reg.register("late", idx)
+    sched = QueryScheduler(reg, buckets=(16,))
+    for i in range(6):                      # 6 full dispatches of backlog
+        sched.submit("hog", ds.records[i * 16:(i + 1) * 16])
+    late = sched.submit("late", ds.records[:8])
+    assert sched.step() and sched.step()    # hog, then late — not hog x2
+    assert late.done and late.error is None
+    # the ring and its membership mirror stay consistent
+    assert sched._order_set == set(sched._order)
+    sched.run_until_drained()
+    assert sched.pending_rows == 0
+
+
+def test_async_dispatch_matches_sync_bit_identical(fitted):
+    """Double-buffered dispatch must not change one answer bit vs the
+    synchronous path, across interleaved tenants and odd row counts."""
+    srv_sync = FilterServer(buckets=(32, 128))
+    srv_async = FilterServer(buckets=(32, 128), async_dispatch=True)
+    for name, (_, idx) in fitted.items():
+        srv_sync.register(name, idx)
+        srv_async.register(name, idx)
+
+    got = {}
+    for srv in (srv_sync, srv_async):
+        reqs = []
+        for name, (ds, _) in fitted.items():
+            ids, _ = _corpus(ds, 300, seed=13)
+            for start, size in [(0, 41), (41, 97), (138, 162)]:
+                reqs.append((name, srv.submit(name, ids[start:start + size])))
+        srv.run_until_drained()
+        assert all(r.done and r.error is None for _, r in reqs)
+        got[srv] = np.concatenate([r.answers for _, r in reqs])
+    np.testing.assert_array_equal(got[srv_sync], got[srv_async])
+    # the double buffer actually overlapped dispatches
+    assert srv_async.stats_snapshot()["overlapped_batches"] > 0
+    assert srv_async.scheduler.inflight_batches == 0
+
+
+def test_async_multi_dispatch_request_completes(fitted):
+    """An oversized request spanning several async dispatches reports
+    done only after its LAST span retires, with all rows answered."""
+    ds, idx = fitted["a"]
+    reg = FilterRegistry()
+    reg.register("t", idx)
+    sched = QueryScheduler(reg, buckets=(16,), async_dispatch=True)
+    req = sched.submit("t", ds.records[:40])    # 3 spans of <= 16
+    assert sched.step()                          # dispatched, in flight
+    assert not req.done
+    sched.run_until_drained()
+    assert req.done and req.answers.all()
+    assert sched.inflight_batches == 0
 
 
 # ------------------------------------------------------------- end-to-end
