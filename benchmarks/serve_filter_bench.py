@@ -10,16 +10,26 @@ Tracks the batched-query serving trajectory of ``repro.serve_filter``:
   ``ShardedExecutor`` on a forced-multi-device CPU mesh (``--shards``),
 * ``--async-dispatch`` double-buffers dispatches so host padding
   overlaps device compute,
+* ``--tenants N --rows-per-request K`` adds the many-tenant low-load
+  scenario this repo's grouped path targets: N lightly-loaded tenants
+  each submitting K-row requests, where per-tenant dispatches can never
+  fill a big bucket. ``--grouped`` additionally serves the same stream
+  through plan-group megabatching (``FilterServer(grouped=True)``) and
+  reports the grouped-vs-ungrouped speedup,
+* ``--smoke`` is the CI fast path: a few hundred queries through the
+  many-tenant scenario, grouped AND ungrouped, with a bit-equality
+  cross-check instead of throughput assertions,
 * the anti-baseline: a per-query Python loop over
   ``ExistenceIndex.query`` — the fused jitted path must beat it by
   >= 10x (asserted when run as a script).
 
-Every scripted run appends one entry per bucket (q/s, occupancy, p99)
-to ``BENCH_serve_filter.json`` next to the repo root, so the perf
-trajectory across PRs is recorded, not anecdotal.
+Every scripted run appends one entry per bucket/scenario (q/s,
+occupancy, p99) to ``BENCH_serve_filter.json`` next to the repo root,
+so the perf trajectory across PRs is recorded, not anecdotal.
 
 Usage: PYTHONPATH=src python benchmarks/serve_filter_bench.py
            [--executor {local,sharded}] [--shards N] [--async-dispatch]
+           [--tenants N] [--rows-per-request K] [--grouped] [--smoke]
            [--json-out PATH]
 """
 from __future__ import annotations
@@ -45,6 +55,18 @@ def make_parser() -> argparse.ArgumentParser:
                     help="double-buffered dispatch (overlap pad/compute)")
     ap.add_argument("--steps", type=int, default=60,
                     help="training steps per tenant fit")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="run the many-tenant low-load scenario with "
+                         "this many tenants (0 disables)")
+    ap.add_argument("--rows-per-request", type=int, default=16,
+                    help="rows per request in the many-tenant scenario")
+    ap.add_argument("--grouped", action="store_true",
+                    help="also serve the many-tenant scenario through "
+                         "plan-group megabatching and report the speedup")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI fast path: tiny many-tenant run (grouped + "
+                         "ungrouped, bit-equality checked), no classic "
+                         "sweep")
     ap.add_argument("--json-out", default=_DEFAULT_JSON,
                     help="append results here ('' disables)")
     return ap
@@ -138,6 +160,110 @@ def bench_served(tenants: Dict[str, tuple], bucket: int,
     }
 
 
+def fit_fleet(n_tenants: int, steps: int = 30, n_bases: int = 4
+              ) -> Dict[str, tuple]:
+    """A fleet sharing ONE plan shape: ``n_bases`` distinct fits
+    (distinct weights, tau, fixup m_bits) assigned round-robin, so the
+    fleet is heterogeneous where tenants really differ but groupable —
+    the regime the paper's "vast amounts of data" serving story lives
+    in. Fitting every tenant separately would measure training, not
+    serving."""
+    st = existence.TrainSettings(steps=steps, n_pos=2000, n_neg=2000)
+    bases = []
+    for i in range(min(n_bases, n_tenants)):
+        ds = tuples.synthesize([600, 400, 200], n_records=4000,
+                               seed=40 + i)
+        bases.append((ds, existence.fit(ds, theta=200, settings=st)))
+    return {f"tenant{i:03d}": bases[i % len(bases)]
+            for i in range(n_tenants)}
+
+
+def _measure_window(srv: FilterServer, pools: Dict[str, np.ndarray],
+                    k: int, rounds: int) -> float:
+    """One measurement window: ``rounds`` fleet ticks (every tenant
+    submits ONE k-row request per tick, submissions pipelined with the
+    in-flight dispatch), drained at the end. Returns q/s."""
+    sched = srv.scheduler
+    items = [(name, pool[:k]) for name, pool in pools.items()]
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        sched.submit_many(items)
+        while sched.pending_rows:
+            sched.step()
+    sched.run_until_drained()
+    dt = time.perf_counter() - t0
+    return rounds * len(pools) * k / dt
+
+
+def run_many_tenant_scenario(*, tenants: int, rows_per_request: int,
+                             grouped: bool, steps: int,
+                             async_dispatch: bool = False,
+                             target_queries: int = 16384,
+                             repeats: int = 3) -> List[dict]:
+    """The many-tenant low-load regime: every tenant lightly loaded
+    (one small request outstanding), where per-tenant dispatches can
+    never fill a big bucket. Ungrouped always runs (the 'before');
+    grouped additionally when asked (the 'after'), cross-checked
+    bit-equal on a verification tick and tagged with the speedup.
+
+    The two modes are measured in INTERLEAVED windows and summarized by
+    the median, so an episodic slowdown of the host lands on both modes
+    instead of silently skewing the ratio."""
+    fleet = fit_fleet(tenants, steps=steps)
+    k = rows_per_request
+    modes = [False] + ([True] if grouped else [])
+    ctx: Dict[bool, tuple] = {}
+    answers: Dict[bool, dict] = {}
+    for g in modes:
+        srv = FilterServer(buckets=BUCKETS, grouped=g,
+                           async_dispatch=async_dispatch)
+        for name, (_, idx) in fleet.items():
+            srv.register(name, idx)
+        pools = {name: _query_pool(ds, max(k * 4, 64), seed=3)
+                 for name, (ds, _) in fleet.items()}
+        # verification tick: compiles everything AND captures answers
+        reqs = dict(zip(pools, srv.submit_many(
+            [(name, pool[:k]) for name, pool in pools.items()])))
+        srv.run_until_drained()
+        answers[g] = {name: r.answers.copy() for name, r in reqs.items()}
+        ctx[g] = (srv, pools)
+    if grouped:     # grouped answers must be bit-equal to ungrouped
+        for name, ans in answers[True].items():
+            np.testing.assert_array_equal(ans, answers[False][name])
+
+    rounds = max(2, target_queries // (len(fleet) * k))
+    qps: Dict[bool, List[float]] = {g: [] for g in modes}
+    for _ in range(repeats):
+        for g in modes:
+            qps[g].append(_measure_window(ctx[g][0], ctx[g][1], k,
+                                          rounds))
+    med = {g: sorted(qps[g])[len(qps[g]) // 2] for g in modes}
+
+    rows = []
+    for g in modes:
+        srv = ctx[g][0]
+        snap = srv.stats_snapshot()
+        row = {
+            "scenario": "many_tenant",
+            "tenants": len(fleet),
+            "rows_per_request": k,
+            "grouped": g,
+            "async_dispatch": async_dispatch,
+            "queries": repeats * rounds * len(fleet) * k,
+            "qps": med[g],
+            "qps_windows": [round(q) for q in qps[g]],
+            "us_per_query": 1e6 / med[g],
+            "batches": int(snap["batches"]),
+            "grouped_batches": int(snap["grouped_batches"]),
+            "batch_occupancy": round(snap["batch_occupancy"], 3),
+            "batch_p99_ms": round(snap["batch_p99_ms"], 3),
+            "plan_groups": int(snap["plan_groups"]),
+        }
+        if g:
+            row["speedup_vs_ungrouped"] = round(med[True] / med[False], 1)
+        rows.append(row)
+    return rows
+
 def bench_python_loop(tenants: Dict[str, tuple], n: int = 64) -> dict:
     """The anti-baseline: one eager ExistenceIndex.query per row."""
     per_query = []
@@ -191,22 +317,63 @@ def record(rows: List[dict], path: Optional[str]) -> None:
     print(f"recorded {len(rows)} rows -> {path}")
 
 
-def main():
-    rows = run(executor=_ARGS.executor, shards=_ARGS.shards,
-               async_dispatch=_ARGS.async_dispatch, steps=_ARGS.steps)
-    hdr = f"{'bucket':>7} {'filters':>7} {'qps':>12} {'us/query':>10} " \
-          f"{'occupancy':>9} {'speedup':>8}"
-    print(f"executor={_ARGS.executor} async={_ARGS.async_dispatch}")
+def _print_many_tenant(rows: List[dict]) -> None:
+    hdr = f"{'mode':>9} {'tenants':>7} {'rows/req':>8} {'qps':>12} " \
+          f"{'batches':>8} {'occupancy':>9} {'speedup':>8}"
     print(hdr)
     for r in rows:
-        print(f"{r['bucket']:>7} {r['filters']:>7} {r['qps']:>12.0f} "
-              f"{r['us_per_query']:>10.1f} "
-              f"{r.get('batch_occupancy', ''):>9} "
-              f"{r.get('speedup_vs_python_loop', ''):>8}"
-              + ("   " + r["note"] if "note" in r else ""))
-    best = max(r.get("speedup_vs_python_loop", 0) for r in rows)
-    assert best >= 10, f"fused path only {best}x over the Python loop"
-    print(f"\nfused path beats the per-query loop by {best}x at best")
+        mode = "grouped" if r["grouped"] else "ungrouped"
+        print(f"{mode:>9} {r['tenants']:>7} {r['rows_per_request']:>8} "
+              f"{r['qps']:>12.0f} {r['batches']:>8} "
+              f"{r['batch_occupancy']:>9} "
+              f"{r.get('speedup_vs_ungrouped', ''):>8}")
+
+
+def main():
+    rows: List[dict] = []
+    if _ARGS.smoke:
+        # CI fast signal: tiny fleet, few hundred queries through BOTH
+        # paths, grouped answers cross-checked bit-equal to ungrouped
+        many = run_many_tenant_scenario(
+            tenants=_ARGS.tenants or 8,
+            rows_per_request=_ARGS.rows_per_request,
+            grouped=True, steps=min(_ARGS.steps, 10),
+            target_queries=384, repeats=2)
+        print("smoke: many-tenant scenario (grouped answers verified "
+              "bit-equal to ungrouped)")
+        _print_many_tenant(many)
+        assert any(r["grouped"] and r["grouped_batches"] > 0
+                   for r in many), "grouped path never megabatched"
+        rows += many
+    else:
+        classic = run(executor=_ARGS.executor, shards=_ARGS.shards,
+                      async_dispatch=_ARGS.async_dispatch,
+                      steps=_ARGS.steps)
+        hdr = f"{'bucket':>7} {'filters':>7} {'qps':>12} " \
+              f"{'us/query':>10} {'occupancy':>9} {'speedup':>8}"
+        print(f"executor={_ARGS.executor} async={_ARGS.async_dispatch}")
+        print(hdr)
+        for r in classic:
+            print(f"{r['bucket']:>7} {r['filters']:>7} {r['qps']:>12.0f} "
+                  f"{r['us_per_query']:>10.1f} "
+                  f"{r.get('batch_occupancy', ''):>9} "
+                  f"{r.get('speedup_vs_python_loop', ''):>8}"
+                  + ("   " + r["note"] if "note" in r else ""))
+        best = max(r.get("speedup_vs_python_loop", 0) for r in classic)
+        assert best >= 10, f"fused path only {best}x over the Python loop"
+        print(f"\nfused path beats the per-query loop by {best}x at best")
+        rows += classic
+        if _ARGS.tenants:
+            many = run_many_tenant_scenario(
+                tenants=_ARGS.tenants,
+                rows_per_request=_ARGS.rows_per_request,
+                grouped=_ARGS.grouped, steps=_ARGS.steps,
+                async_dispatch=_ARGS.async_dispatch)
+            print(f"\nmany-tenant low-load scenario "
+                  f"({_ARGS.tenants} tenants x "
+                  f"{_ARGS.rows_per_request}-row requests)")
+            _print_many_tenant(many)
+            rows += many
     record(rows, _ARGS.json_out)
     return rows
 

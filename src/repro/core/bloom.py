@@ -120,6 +120,36 @@ def query(bits, ids, params: BloomParams) -> jax.Array:
     return jnp.all(hit, axis=-1)
 
 
+def grouped_query(bits, ids, n_hashes: int, m_bits, word_base) -> jax.Array:
+    """Per-row probe against a CONCATENATION of many filters' bitsets.
+
+    ``bits`` holds several tenants' packed bitsets back to back;
+    ``m_bits`` (uint32) and ``word_base`` (int32) give each row its own
+    filter geometry: row ``r`` probes the ``m_bits[r]``-bit filter whose
+    words start at ``bits[word_base[r]]``. ``n_hashes`` is static (the
+    probe-loop bound) and must be uniform across the group — it is part
+    of the serving layer's plan-group key.
+
+    Integer-exact: for any row, the result equals :func:`query` against
+    that row's own filter sliced out of ``bits`` (same hash family, same
+    double-hashing schedule, same word/mask decomposition — only the
+    word index is rebased). The serving ``GroupedExecutor`` relies on
+    this to answer many tenants from ONE device dispatch.
+    """
+    bits = jnp.asarray(bits)
+    ids = jnp.asarray(ids)
+    m_bits = jnp.asarray(m_bits).astype(jnp.uint32)
+    word_base = jnp.asarray(word_base).astype(jnp.int32)
+    h1 = hash_tuples(ids, seed=0x0000A5A5)
+    h2 = hash_tuples(ids, seed=0x00005EED) | jnp.uint32(1)
+    ks = jnp.arange(n_hashes, dtype=jnp.uint32)
+    pos = (h1[..., None] + ks * h2[..., None]) % m_bits[..., None]
+    words = (pos >> jnp.uint32(5)).astype(jnp.int32) + word_base[..., None]
+    masks = jnp.uint32(1) << (pos & jnp.uint32(31))
+    hit = (jnp.take(bits, words, axis=0) & masks) != jnp.uint32(0)
+    return jnp.all(hit, axis=-1)
+
+
 def shard_miss_count(bits_local, ids, params: BloomParams,
                      word_offset) -> jax.Array:
     """Misses among the probes owned by one bitset slice.

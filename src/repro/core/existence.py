@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
@@ -43,19 +44,23 @@ class TrainSettings:
 
 
 def query_stages(params, cfg: lmbf.LMBFConfig, tau, fixup_bits,
-                 fixup_params: bloom.BloomParams, raw_ids, *,
+                 fixup_params: Optional[bloom.BloomParams], raw_ids, *,
                  probe_fn=None, predict_fn=None):
     """The whole query pipeline as ONE jittable program.
 
     ``compression.encode -> embedding gather -> MLP -> tau threshold ->
     fixup Bloom probe`` with no host round-trips between stages. ``cfg``
     and ``fixup_params`` are hashable (frozen dataclasses) and must be
-    static under ``jax.jit``; ``tau`` may be traced so filters sharing a
-    plan shape share one compiled program. ``probe_fn(bits, ids)``
-    overrides the fixup probe (the serving subsystem injects the
-    ``kernels/bloom_query`` Pallas kernel here); ``predict_fn(params,
-    cfg, enc)`` overrides the model score (the sharded executor injects
-    a masked-gather + psum variant over vocab-sharded tables).
+    static under ``jax.jit``; ``tau`` may be traced — a scalar, or a
+    per-row vector when one dispatch carries many tenants' rows — so
+    filters sharing a plan shape share one compiled program.
+    ``probe_fn(bits, ids)`` overrides the fixup probe (the serving
+    subsystem injects the ``kernels/bloom_query`` Pallas kernel, or a
+    grouped per-row-offset probe, here; ``fixup_params`` may then be
+    ``None`` — a grouped dispatch has no single filter geometry);
+    ``predict_fn(params, cfg, enc)`` overrides the model score (the
+    sharded executor injects a masked-gather + psum variant over
+    vocab-sharded tables, the grouped executor a stacked-arena gather).
 
     Returns ``(answers, model_yes, backup_yes)`` — the per-stage booleans
     feed the serving subsystem's stage-FPR counters.
@@ -183,10 +188,20 @@ def _plan_from_json(d: Dict) -> comp.CompressionPlan:
                                 ns=int(d["ns"]))
 
 
+# Checkpoint kinds this module can hydrate. v1 indexes were fit when
+# mlp_head's output layer was a (prev, 1) GEMV; it is now a
+# multiply+reduce (required so grouped serving can reproduce it batched
+# bit-for-bit), whose float accumulation differs in the last ulps — a
+# v1 index's borderline rows near tau can flip, and flipped members are
+# NOT covered by its fixup filter. Loading v1 therefore warns: refit to
+# restore the no-false-negative guarantee.
+_INDEX_KINDS = ("existence_index_v2", "existence_index_v1")
+
+
 def index_meta(idx: ExistenceIndex) -> Dict:
     """JSON-safe description of everything but the arrays."""
     return {
-        "kind": "existence_index_v1",
+        "kind": "existence_index_v2",
         "plan": _plan_to_json(idx.cfg.plan),
         "hidden": list(idx.cfg.hidden),
         "onehot_max": idx.cfg.onehot_max,
@@ -225,9 +240,16 @@ def load_index(directory: str, step: Optional[int] = None) -> ExistenceIndex:
         if step is None:
             raise FileNotFoundError(f"no committed checkpoint in {directory}")
     meta = ckpt.read_meta(directory, step)["extra"]
-    if meta.get("kind") != "existence_index_v1":
+    if meta.get("kind") not in _INDEX_KINDS:
         raise ValueError(f"{directory} step {step} is not an existence "
                          f"index checkpoint: {meta.get('kind')!r}")
+    if meta["kind"] == "existence_index_v1":
+        warnings.warn(
+            f"{directory} step {step} was fit under the pre-grouped MLP "
+            "head (existence_index_v1); its scores differ in the last "
+            "ulps under the current head, so rows borderline at tau may "
+            "flip and the no-false-negative guarantee is not assured — "
+            "refit and re-save to upgrade", UserWarning, stacklevel=2)
     cfg = config_from_meta(meta)
     bp = bloom.BloomParams(m_bits=int(meta["fixup"]["m_bits"]),
                            n_hashes=int(meta["fixup"]["n_hashes"]))

@@ -105,12 +105,21 @@ def features(params, cfg: LMBFConfig, encoded_ids) -> jax.Array:
 
 
 def mlp_head(params, cfg: LMBFConfig, x) -> jax.Array:
-    """(..., concat_dim) features -> (...,) logits (hidden ReLU stack)."""
+    """(..., concat_dim) features -> (...,) logits (hidden ReLU stack).
+
+    The output layer is a broadcast multiply + last-axis reduce rather
+    than ``x @ w_out``: a (prev, 1) GEMV has its own accumulation order
+    that no per-row batched form reproduces, while multiply+reduce
+    lowers identically whether the weight row is shared (here) or
+    gathered per row (the serving ``GroupedExecutor`` stacks many
+    tenants' heads and indexes them with a per-row tenant id) — so
+    grouped serving stays bit-identical to this reference.
+    """
     for li in range(len(cfg.hidden)):
         x = jax.nn.relu(x @ params["dense"][f"w{li}"] +
                         params["dense"][f"b{li}"])
-    logit = x @ params["dense"]["w_out"] + params["dense"]["b_out"]
-    return logit[..., 0]
+    return (jnp.sum(x * params["dense"]["w_out"][:, 0], axis=-1)
+            + params["dense"]["b_out"][0])
 
 
 def apply(params, cfg: LMBFConfig, encoded_ids) -> jax.Array:

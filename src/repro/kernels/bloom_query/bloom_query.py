@@ -93,6 +93,75 @@ def _partial_kernel(off_ref, ids_ref, bits_ref, out_ref, *,
     out_ref[...] = miss
 
 
+def _grouped_kernel(ids_ref, base_ref, mbits_ref, bits_ref, out_ref, *,
+                    n_hashes: int):
+    """Per-row-rebased probe against a CONCATENATION of bitsets.
+
+    ``bits_ref`` holds many filters' packed words back to back (the
+    serving layer's plan-group arena); each key row carries its own
+    filter geometry — ``base_ref`` the first word of its bitset,
+    ``mbits_ref`` its modulo. The word-offset rebase is the same
+    machinery as :func:`_partial_kernel` (sharding), only per row
+    instead of per shard, and with the whole arena VMEM-resident the
+    answer is complete — a bool hit, no cross-device combine.
+    """
+    ids = ids_ref[...].astype(jnp.uint32)               # (bn, n_cols)
+    base = base_ref[...]                                # (bn,) int32
+    mb = mbits_ref[...]                                 # (bn,) uint32
+    bits = bits_ref[...]                                # (n_words,) uint32
+    h1 = _hash_block(ids, 0x0000A5A5)
+    h2 = _hash_block(ids, 0x00005EED) | jnp.uint32(1)
+    hit_all = jnp.ones(ids.shape[:1], jnp.bool_)
+    for k in range(n_hashes):
+        pos = (h1 + jnp.uint32(k) * h2) % mb
+        word = jnp.take(bits,
+                        (pos >> jnp.uint32(5)).astype(jnp.int32) + base,
+                        axis=0)
+        bit = (word >> (pos & jnp.uint32(31))) & jnp.uint32(1)
+        hit_all = hit_all & (bit == jnp.uint32(1))
+    out_ref[...] = hit_all
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_hashes", "block_n", "interpret"))
+def bloom_query_grouped_call(ids, bits, word_base, m_bits, *,
+                             n_hashes: int, block_n: int = 2048,
+                             interpret: bool = True):
+    """ids: (N, n_cols) int32; bits: (n_words,) uint32 concatenated
+    arena; word_base: (N,) int32; m_bits: (N,) uint32 -> (N,) bool.
+
+    The multi-tenant flavor of :func:`bloom_query_call`: row ``r``
+    probes the ``m_bits[r]``-bit filter starting at word
+    ``word_base[r]``. Geometry vectors are per-row operands (traced),
+    so ONE compiled program serves any tenant mix in the batch.
+    """
+    n, n_cols = ids.shape
+    bn = min(block_n, n)
+    pad = (-n) % bn
+    word_base = jnp.asarray(word_base, jnp.int32)
+    m_bits = jnp.asarray(m_bits, jnp.uint32)
+    if pad:
+        ids = jnp.pad(ids, ((0, pad), (0, 0)))
+        word_base = jnp.pad(word_base, (0, pad))
+        # pad rows still compute pos % m_bits — keep the modulo nonzero
+        m_bits = jnp.pad(m_bits, (0, pad), constant_values=32)
+    grid = (ids.shape[0] // bn,)
+    out = pl.pallas_call(
+        functools.partial(_grouped_kernel, n_hashes=n_hashes),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, n_cols), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec(bits.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((ids.shape[0],), jnp.bool_),
+        interpret=interpret,
+    )(ids, word_base, m_bits, bits)
+    return out[:n] if pad else out
+
+
 @functools.partial(jax.jit,
                    static_argnames=("n_hashes", "m_bits", "block_n",
                                     "interpret"))

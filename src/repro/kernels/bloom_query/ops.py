@@ -7,6 +7,7 @@ import jax
 
 from repro.core import bloom
 from repro.kernels.bloom_query.bloom_query import (bloom_query_call,
+                                                  bloom_query_grouped_call,
                                                   bloom_query_partial_call)
 
 
@@ -35,6 +36,25 @@ def bloom_query(ids, bits, params: bloom.BloomParams, *,
     return bloom_query_call(ids, bits, n_hashes=params.n_hashes,
                             m_bits=params.m_bits, block_n=block_n,
                             interpret=interpret)
+
+
+def bloom_query_grouped(ids, bits, word_base, m_bits, *,
+                        n_hashes: int, block_n: int = 2048,
+                        interpret: Optional[bool] = None):
+    """Multi-tenant probe against a concatenated bitset arena.
+
+    Kernel counterpart of ``core.bloom.grouped_query`` (validated
+    bit-exact in tests): row ``r`` probes the ``m_bits[r]``-bit filter
+    whose words start at ``bits[word_base[r]]``. ``n_hashes`` must be
+    uniform across the arena (it is part of the serving plan-group
+    key); the geometry vectors are traced per-row operands, so one
+    compiled program answers any tenant mix.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return bloom_query_grouped_call(ids, bits, word_base, m_bits,
+                                    n_hashes=n_hashes, block_n=block_n,
+                                    interpret=interpret)
 
 
 def bloom_query_shard(ids, bits_local, word_offset,

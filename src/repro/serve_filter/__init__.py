@@ -23,8 +23,19 @@ Module map
     and the fixup bitset word-sharded over a mesh axis — masked local
     gathers + one ``psum`` rebuild the features, per-shard word-offset
     probes + one ``psum`` combine the Bloom answer, bit-identical to
-    local by construction. Executors are cached per plan so tenants
-    with equal plans share compiled programs.
+    local by construction. :class:`GroupedExecutor` is the megabatch
+    path: one program per (group key, bucket) takes a per-row
+    ``tenant_idx`` into a stacked arena and answers MANY tenants per
+    device call — bit-identical to local, property-tested. Executors
+    are cached per plan (grouped: per group key) so tenants with equal
+    plans share compiled programs.
+
+``arena``
+    :class:`PlanGroupArena` — stacked device residence for a plan
+    group: embedding tables and MLP weights stacked on a leading tenant
+    axis, fixup bitsets concatenated with per-tenant word base offsets,
+    per-tenant ``tau``/``m_bits`` vectors. Slot reuse + compaction keep
+    LRU churn from leaking arena rows.
 
 ``registry``
     :class:`FilterRegistry` — loads/owns many fitted ``ExistenceIndex``
@@ -39,7 +50,10 @@ Module map
     padding buckets, round-robin across tenants. ``step()`` is split
     into a host prepare half and an async device dispatch half; with
     ``async_dispatch=True`` a double-buffered in-flight slot overlaps
-    padding batch *t+1* with computing batch *t*.
+    padding batch *t+1* with computing batch *t*. Coalescing is
+    group-aware: a grouped tenant's dispatch tops its bucket up with
+    same-group siblings' rows, so fleets of lightly-loaded filters ride
+    large-bucket megabatches.
 
 ``stats``
     :class:`ServeStats` — QPS, batch occupancy, p50/p99 latency,
@@ -67,14 +81,21 @@ Entry points
 Scale work still open (see ROADMAP): tenant hot-reload (swap a
 re-fitted index without draining), cross-host registry federation.
 """
-from repro.serve_filter.executors import (Executor, LocalExecutor,
-                                          PlacedFilter, ShardedExecutor,
+from repro.serve_filter.arena import PlanGroupArena
+from repro.serve_filter.executors import (Executor, GroupedExecutor,
+                                          LocalExecutor, PlacedFilter,
+                                          ShardedExecutor,
                                           acquire_executor,
+                                          acquire_grouped_executor,
                                           compiled_program_count,
-                                          executor_for, release_executor,
+                                          executor_for,
+                                          grouped_executor_for,
+                                          release_executor,
+                                          release_grouped_executor,
                                           release_plan)
 from repro.serve_filter.fused import fused_query_fn
-from repro.serve_filter.plan import Placement, QueryPlan, plan_query
+from repro.serve_filter.plan import (GroupKey, Placement, QueryPlan,
+                                     group_key, plan_query)
 from repro.serve_filter.registry import FilterEntry, FilterRegistry
 from repro.serve_filter.scheduler import (DEFAULT_BUCKETS, QueryRequest,
                                           QueryScheduler, bucket_for)

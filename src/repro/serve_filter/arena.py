@@ -1,0 +1,387 @@
+"""Per-plan-group device arenas: many tenants' parameters, one dispatch.
+
+A :class:`PlanGroupArena` holds every grouped tenant of one
+:class:`~repro.serve_filter.plan.GroupKey` in STACKED device arrays:
+
+* embedding tables in ONE combined row-padded matrix
+  (``(capacity * sum(rows_c), e_max)``, column blocks back to back and
+  narrow tables zero-padded to ``e_max`` columns) so the compiled
+  program does a single gather across all subcolumns — XLA's CPU
+  gather pays per-op, and one big gather is ~2x the speed of one per
+  subcolumn while returning bit-identical rows,
+* dense MLP weights/biases stacked on a leading tenant axis,
+* fixup bitsets CONCATENATED into one packed ``uint32`` arena, each
+  tenant owning the word range ``[word_base, word_base + n_words)``
+  (tenants' ``m_bits`` differ — bitset size tracks each tenant's
+  false-negative count — so slots are ranges, not a matrix),
+* per-tenant ``tau`` / ``m_bits`` / ``word_base`` vectors indexed by
+  the slot id.
+
+The grouped executor's compiled program takes a per-row ``tenant_idx``
+into these arrays, so ONE device call answers rows from many tenants —
+the megabatch path that rescues the many-tenant/low-per-tenant-load
+regime where per-tenant dispatches can never fill a large bucket.
+
+Slot lifecycle: ``add`` reuses freed slots (and first-fit reuses freed
+bitset word ranges) before growing; ``remove`` frees; when churn leaves
+more holes than live tenants — or the bitset arena more dead words than
+live — ``maybe_compact`` repacks into (possibly smaller) fresh arrays.
+Entries never cache their slot id: they ask :meth:`slot_of`, so
+compaction is invisible to the serving layers above. Host mirrors are
+authoritative; device views are materialized lazily and invalidated on
+every mutation. Capacity and bitset allocation grow geometrically so
+the compiled program's shapes (and thus recompiles) change
+O(log tenants) times, not per registration.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import existence, lmbf
+from repro.serve_filter.plan import GroupKey
+
+MIN_CAPACITY = 4
+_BITS_GROWTH = 1.5
+
+
+class PlanGroupArena:
+    """Stacked device residence for every tenant sharing one GroupKey."""
+
+    def __init__(self, key: GroupKey, executor,
+                 min_capacity: int = MIN_CAPACITY):
+        self.key = key
+        self.executor = executor            # GroupedExecutor (owns .fn)
+        self.min_capacity = max(1, int(min_capacity))
+        self.capacity = 0
+        self.version = 0                    # bumped on every mutation
+        self._slots: Dict[str, int] = {}    # tenant -> slot id
+        self._free: List[int] = []
+        # combined-embedding layout: [(col index, rows, e)] for the
+        # embedded (non-one-hot) subcolumns, in column order
+        self._emb_cols = [(i, rows, e) for i, (rows, e)
+                          in enumerate(key.cfg.column_encodings)
+                          if e is not None]
+        self._emb_rows = sum(rows for _, rows, _ in self._emb_cols)
+        self._e_max = max((e for _, _, e in self._emb_cols), default=1)
+        # host mirrors (authoritative); shapes carry a leading slot axis
+        self._embed_flat = np.zeros((0, self._e_max),
+                                    jnp.dtype(key.cfg.dtype))
+        self._params: Dict[str, Dict[str, np.ndarray]] = {}
+        self._tau = np.zeros(0, np.float32)
+        self._m_bits = np.zeros(0, np.uint32)
+        self._word_base = np.zeros(0, np.int32)
+        self._word_len = np.zeros(0, np.int32)
+        # concatenated fixup bitsets + free-range bookkeeping
+        self._bits = np.zeros(0, np.uint32)
+        self._bits_used = 0                          # high-water mark
+        self._free_ranges: List[Tuple[int, int]] = []   # (base, length)
+        self._device = None                 # lazily built device views
+        # per-tile gathered dense weights, memoized on the batch's tile
+        # signature: steady-state traffic repeats tenant layouts, and
+        # the gather costs as much as the GEMM it feeds
+        self._tile_cache: Dict[bytes, object] = {}
+
+    # ------------------------------------------------------------- access
+    def __len__(self) -> int:
+        return len(self._slots)
+
+    def __contains__(self, tenant: str) -> bool:
+        return tenant in self._slots
+
+    @property
+    def tenants(self) -> List[str]:
+        return list(self._slots)
+
+    def slot_of(self, tenant: str) -> int:
+        """The tenant's CURRENT slot id (compaction renumbers slots, so
+        callers must not cache this across mutations)."""
+        return self._slots[tenant]
+
+    @property
+    def nbytes(self) -> int:
+        """ACTUAL host-mirror footprint (stacked params, combined
+        embeddings incl. e_max padding, the over-allocated bitset, the
+        per-slot vectors) — a bounded multiple of the members' nominal
+        sizes (<= 2x slots after growth, <= 1.5x bitset, e_max-padded
+        columns; compaction pulls it back down). The registry's
+        ``budget_mb`` counts nominal per-filter sizes; this is the
+        observable truth for capacity planning."""
+        n = self._embed_flat.nbytes + self._bits.nbytes + \
+            self._tau.nbytes + self._m_bits.nbytes + \
+            self._word_base.nbytes + self._word_len.nbytes
+        for d in self._params.values():
+            for arr in d.values():
+                n += arr.nbytes
+        return n
+
+    @property
+    def live_words(self) -> int:
+        return int(self._word_len[list(self._slots.values())].sum()) \
+            if self._slots else 0
+
+    # ----------------------------------------------------------- mutation
+    def _emb_starts(self, cap: int) -> List[int]:
+        """Start row of each embedded column's block in the combined
+        embedding matrix, for a given slot capacity."""
+        starts, prefix = [], 0
+        for _, rows, _ in self._emb_cols:
+            starts.append(cap * prefix)
+            prefix += rows
+        return starts
+
+    def add(self, tenant: str, index: existence.ExistenceIndex) -> int:
+        """Stack a fitted index into the arena; returns its slot id.
+        Re-adding a tenant (hot-swap) releases its old slot first."""
+        if tenant in self._slots:
+            self.remove(tenant)
+        slot = self._free.pop() if self._free else self._grow_one()
+        for name, arr in index.params["dense"].items():
+            self._params["dense"][name][slot] = np.asarray(arr)
+        starts = self._emb_starts(self.capacity)
+        for (i, rows, e), start in zip(self._emb_cols, starts):
+            tbl = np.asarray(index.params["embed"][f"col{i}"])
+            self._embed_flat[start + slot * rows:
+                             start + (slot + 1) * rows, :e] = tbl
+        self._tau[slot] = np.float32(index.tau)
+        fp = index.fixup_filter.params
+        base = self._alloc_words(fp.n_words)
+        self._bits[base:base + fp.n_words] = \
+            np.asarray(index.fixup_filter.bits)
+        self._m_bits[slot] = fp.m_bits
+        self._word_base[slot] = base
+        self._word_len[slot] = fp.n_words
+        self._slots[tenant] = slot
+        self._touch()
+        return slot
+
+    def remove(self, tenant: str) -> None:
+        slot = self._slots.pop(tenant, None)
+        if slot is None:
+            return
+        self._free.append(slot)
+        base, length = int(self._word_base[slot]), int(self._word_len[slot])
+        if length:
+            self._bits[base:base + length] = 0
+            self._free_ranges.append((base, length))
+        # park the freed slot on safe geometry: padding/misrouted rows
+        # must never hit a zero modulo, and probing words [0, 1) of a
+        # zeroed range answers False
+        self._zero_slot(slot)
+        self._touch()
+
+    def maybe_compact(self) -> bool:
+        """Repack when churn leaves more holes than live tenants (slot
+        axis) or more dead words than live ones (bitset arena). Returns
+        True when a repack happened; slot ids are renumbered — which is
+        why they are always re-read through :meth:`slot_of`."""
+        n_live = len(self._slots)
+        slot_waste = self.capacity - n_live
+        bits_waste = self._bits_used - self.live_words
+        if not ((slot_waste > max(n_live, self.min_capacity - 1)
+                 and self.capacity > self.min_capacity)
+                or bits_waste > max(self.live_words, 32)):
+            return False
+        self._repack()
+        return True
+
+    # ------------------------------------------------------------ serving
+    def device_arrays(self):
+        """(params, bits, tau, m_bits, word_base) as device arrays —
+        cached until the next mutation."""
+        if self._device is None:
+            params = {g: {k: jnp.asarray(v) for k, v in d.items()}
+                      for g, d in self._params.items()}
+            params["embed_flat"] = jnp.asarray(self._embed_flat)
+            self._device = (params, jnp.asarray(self._bits),
+                            jnp.asarray(self._tau),
+                            jnp.asarray(self._m_bits),
+                            jnp.asarray(self._word_base))
+        return self._device
+
+    def run(self, raw_ids, tenant_idx):
+        """One megabatch dispatch: ``raw_ids`` (n, n_cols) with per-row
+        arena slots ``tenant_idx`` (n,) -> (answers, model, backup).
+
+        The executor wants whole single-tenant tiles of
+        ``key.tile_rows``; callers whose n is not tile-aligned get
+        padded here (wildcard rows on the last row's slot — a full
+        single-tenant batch stays single-tenant) and the outputs
+        sliced back.
+        """
+        raw = np.asarray(raw_ids, np.int32)
+        idx = np.asarray(tenant_idx, np.int32)
+        n = raw.shape[0]
+        pad = (-n) % self.key.tile_rows
+        if pad:
+            raw = np.concatenate(
+                [raw, np.zeros((pad, raw.shape[1]), raw.dtype)])
+            idx = np.concatenate(
+                [idx, np.full(pad, idx[-1] if n else 0, np.int32)])
+        params, bits, tau, m_bits, base = self.device_arrays()
+        sig = idx.tobytes()
+        hit = self._tile_cache.get(sig)
+        if hit is None:
+            tile_idx = idx.reshape(-1, self.key.tile_rows)[:, 0]
+            hit = (self.executor.gather_tiles(params,
+                                              jnp.asarray(tile_idx)),
+                   jnp.asarray(idx))
+            if len(self._tile_cache) >= 8:      # bounded: drop arbitrary
+                self._tile_cache.pop(next(iter(self._tile_cache)))
+            self._tile_cache[sig] = hit
+        tiles, idx_dev = hit
+        out = self.executor.fn(params, tiles, bits, tau, m_bits, base,
+                               idx_dev, raw)
+        if pad:
+            out = tuple(o[:n] for o in out)
+        return out
+
+    def run_single(self, raw_ids, slot: int):
+        """Whole-batch dispatch for ONE tenant through the grouped
+        program (a constant tenant_idx vector) — the degenerate case the
+        scheduler hits when no group sibling has queued rows."""
+        n = np.asarray(raw_ids).shape[0]
+        return self.run(raw_ids, np.full(n, slot, np.int32))
+
+    @property
+    def tile_rows(self) -> int:
+        return self.key.tile_rows
+
+    # ----------------------------------------------------------- plumbing
+    def _touch(self) -> None:
+        self.version += 1
+        self._device = None
+        self._tile_cache.clear()    # slot ids / weights may have moved
+
+    def _zero_slot(self, slot: int) -> None:
+        for d in self._params.values():
+            for arr in d.values():
+                arr[slot] = 0
+        for (_, rows, _), start in zip(self._emb_cols,
+                                       self._emb_starts(self.capacity)):
+            self._embed_flat[start + slot * rows:
+                             start + (slot + 1) * rows] = 0
+        self._tau[slot] = 0.0
+        self._m_bits[slot] = 32
+        self._word_base[slot] = 0
+        self._word_len[slot] = 0
+
+    def _grow_one(self) -> int:
+        """Claim a fresh slot, doubling the stacked arrays as needed."""
+        used = self.capacity - len(self._free)
+        if used < self.capacity:
+            # unreachable via add() (free slots pop first); guard anyway
+            return self._free.pop()
+        new_cap = max(self.min_capacity, 2 * self.capacity)
+        self._resize_slots(new_cap)
+        slot = len(self._slots)     # first never-used slot
+        self._free.extend(range(self.capacity - 1, slot, -1))
+        return slot
+
+    def _resize_slots(self, new_cap: int) -> None:
+        spec = lmbf.params_spec(self.key.cfg)
+        old = self.capacity
+        keep = min(old, new_cap)
+        fresh: Dict[str, Dict[str, np.ndarray]] = {"dense": {}}
+        for name, s in spec["dense"].items():
+            arr = np.zeros((new_cap,) + tuple(s.shape),
+                           jnp.dtype(s.dtype))
+            if old:
+                arr[:keep] = self._params["dense"][name][:keep]
+            fresh["dense"][name] = arr
+        self._params = fresh
+        flat = np.zeros((new_cap * self._emb_rows, self._e_max),
+                        self._embed_flat.dtype)
+        if old:
+            for (_, rows, _), new_start, old_start in zip(
+                    self._emb_cols, self._emb_starts(new_cap),
+                    self._emb_starts(old)):
+                flat[new_start:new_start + keep * rows] = \
+                    self._embed_flat[old_start:old_start + keep * rows]
+        self._embed_flat = flat
+
+        def vec(v, fill, dtype):
+            out = np.full(new_cap, fill, dtype)
+            out[:min(old, new_cap)] = v[:min(old, new_cap)]
+            return out
+
+        self._tau = vec(self._tau, 0.0, np.float32)
+        self._m_bits = vec(self._m_bits, 32, np.uint32)
+        self._word_base = vec(self._word_base, 0, np.int32)
+        self._word_len = vec(self._word_len, 0, np.int32)
+        self.capacity = new_cap
+
+    def _alloc_words(self, n_words: int) -> int:
+        """First-fit over freed bitset ranges, else append (growing the
+        packed arena geometrically so its device shape is stable across
+        minor churn)."""
+        for i, (base, length) in enumerate(self._free_ranges):
+            if length >= n_words:
+                if length > n_words:
+                    self._free_ranges[i] = (base + n_words,
+                                            length - n_words)
+                else:
+                    del self._free_ranges[i]
+                return base
+        base = self._bits_used
+        need = base + n_words
+        if need > self._bits.size:
+            alloc = max(int(need * _BITS_GROWTH), 64)
+            grown = np.zeros(alloc, np.uint32)
+            grown[:self._bits.size] = self._bits
+            self._bits = grown
+        self._bits_used = need
+        return base
+
+    def _repack(self) -> None:
+        """Rebuild packed: live tenants keep their relative slot order,
+        bitsets land back to back, stacked arrays shrink to the growth
+        curve's smallest fit."""
+        live = sorted(self._slots.items(), key=lambda kv: kv[1])
+        old_params, old_bits = self._params, self._bits
+        old_tau, old_mb = self._tau, self._m_bits
+        old_base, old_len = self._word_base, self._word_len
+        old_flat, old_cap = self._embed_flat, self.capacity
+
+        new_cap = self.min_capacity
+        while new_cap < len(live):
+            new_cap *= 2
+        self.capacity = 0
+        self._params = {}
+        self._embed_flat = np.zeros((0, self._e_max), old_flat.dtype)
+        self._resize_slots(new_cap)
+
+        total_words = int(sum(old_len[s] for _, s in live))
+        self._bits = np.zeros(max(int(total_words * _BITS_GROWTH), 64),
+                              np.uint32)
+        self._bits_used = total_words
+        self._free_ranges = []
+        self._slots = {}
+        self._free = list(range(new_cap - 1, len(live) - 1, -1))
+
+        new_starts = self._emb_starts(new_cap)
+        old_starts = self._emb_starts(old_cap)
+        cursor = 0
+        for new_slot, (tenant, old_slot) in enumerate(live):
+            for group, d in self._params.items():
+                for name, arr in d.items():
+                    arr[new_slot] = old_params[group][name][old_slot]
+            for (_, rows, _), ns, os_ in zip(self._emb_cols, new_starts,
+                                             old_starts):
+                self._embed_flat[ns + new_slot * rows:
+                                 ns + (new_slot + 1) * rows] = \
+                    old_flat[os_ + old_slot * rows:
+                             os_ + (old_slot + 1) * rows]
+            self._tau[new_slot] = old_tau[old_slot]
+            self._m_bits[new_slot] = old_mb[old_slot]
+            length = int(old_len[old_slot])
+            src = int(old_base[old_slot])
+            self._bits[cursor:cursor + length] = \
+                old_bits[src:src + length]
+            self._word_base[new_slot] = cursor
+            self._word_len[new_slot] = length
+            self._slots[tenant] = new_slot
+            cursor += length
+        self._touch()

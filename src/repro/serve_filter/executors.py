@@ -24,11 +24,26 @@ out on device(s) the way that callable expects them. Two implementations:
     are bit-identical to :class:`LocalExecutor` by construction: every
     probe word and every table row belongs to exactly one shard.
 
-Executors are cached per plan (and mesh), so heterogeneous tenants
-whose filters share a plan share compiled programs — the registry's
-eviction hook (:func:`release_plan`) drops cache entries once no tenant
-references the plan. :func:`compiled_program_count` sums live XLA
-programs across all cached executors for the stats surface.
+:class:`GroupedExecutor`
+    The megabatch path: ONE compiled program per
+    (:class:`~repro.serve_filter.plan.GroupKey`, bucket) answers rows
+    from MANY tenants at once. Tenants' parameters live stacked in a
+    :class:`~repro.serve_filter.arena.PlanGroupArena`; the program takes
+    a per-row ``tenant_idx`` and gathers each row's embedding table
+    slab, MLP weights, ``tau``, and fixup-bitset base offset. Answers
+    are bit-identical to :class:`LocalExecutor`: gathers/one-hots/probe
+    rebasing are integer-exact, the output layer shares the
+    multiply+reduce form of ``lmbf.mlp_head`` whose lowering is
+    identical batched or not, and the hidden-layer batched contraction
+    is property-tested bit-equal to the plain matmul
+    (tests/test_serve_grouped.py).
+
+Executors are cached per plan (and mesh) — grouped ones per group key —
+so heterogeneous tenants whose filters share a plan share compiled
+programs; the registry's eviction hooks (:func:`release_plan`,
+:func:`release_grouped_executor`) drop cache entries once no tenant
+references them. :func:`compiled_program_count` sums live XLA programs
+across all cached executors for the stats surface.
 """
 from __future__ import annotations
 
@@ -44,7 +59,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import bloom, existence, lmbf
 from repro.kernels.bloom_query import ops as bloom_ops
 from repro.nn.spec import is_spec
-from repro.serve_filter.plan import PROBE_KERNEL, QueryPlan
+from repro.serve_filter.plan import GroupKey, PROBE_KERNEL, QueryPlan
 from repro.sharding import rules
 from repro.sharding.pipeline import shard_map
 
@@ -235,6 +250,163 @@ class ShardedExecutor(Executor):
                             bits=jax.device_put(padded_bits, shard1d))
 
 
+class GroupedExecutor:
+    """One compiled megabatch program for a whole plan group.
+
+    Signature (all but the group key traced, so one program serves any
+    tenant mix)::
+
+        fn(params, bits, tau_vec, m_bits_vec, base_vec, tenant_idx,
+           raw_ids) -> (answers, model_yes, backup_yes)
+
+    ``params`` is the arena's stacked pytree (leading tenant axis),
+    ``bits`` the concatenated fixup bitsets, and the three vectors are
+    indexed by each row's ``tenant_idx``: its threshold, its filter's
+    modulo, and its bitset's first word. Bit-identical to running each
+    row through its tenant's :class:`LocalExecutor` — see the module
+    docstring for the stage-by-stage argument.
+
+    Contract: the row count is a multiple of ``key.tile_rows`` and
+    ``tenant_idx`` is constant within every tile (the scheduler aligns
+    tenant regions to tiles; ``PlanGroupArena.run`` pads stragglers) —
+    that is what lets the hidden-layer weight gather happen per tile.
+
+    The per-tile hidden-layer weight gather is split out as
+    :attr:`gather_tiles` so the arena can MEMOIZE it on the batch's
+    tile signature: XLA's CPU gather costs as much as the GEMM it
+    feeds, and in the steady state consecutive megabatches carry the
+    same tenant layout, so the gather amortizes to ~zero and the
+    grouped dispatch runs at plain-local-GEMM speed.
+    """
+
+    def __init__(self, key: GroupKey):
+        self.key = key
+        cfg, nh, tile = key.cfg, key.n_hashes, key.tile_rows
+        n_hidden = len(cfg.hidden)
+        # combined-embedding layout (must mirror PlanGroupArena's):
+        # embedded columns' tables live back to back in one row-padded
+        # matrix so ONE gather serves every subcolumn
+        emb_cols = [(i, rows, e)
+                    for i, (rows, e) in enumerate(cfg.column_encodings)
+                    if e is not None]
+        emb_rows_sum = sum(rows for _, rows, _ in emb_cols)
+
+        @jax.jit
+        def gather_tiles(params, tile_idx):
+            """Per-tile dense-stack weights: {w{li}: (g, i, o), b{li}:
+            (g, o), w_out: (g, prev), b_out: (g,)}. Indices are
+            scheduler-controlled live slots, so the bounds check is
+            safely skipped."""
+            tiles = {}
+            for li in range(n_hidden):
+                tiles[f"w{li}"] = params["dense"][f"w{li}"] \
+                    .at[tile_idx].get(mode="promise_in_bounds")
+                tiles[f"b{li}"] = params["dense"][f"b{li}"] \
+                    .at[tile_idx].get(mode="promise_in_bounds")
+            tiles["w_out"] = params["dense"]["w_out"] \
+                .at[tile_idx].get(mode="promise_in_bounds")[..., 0]
+            tiles["b_out"] = params["dense"]["b_out"] \
+                .at[tile_idx].get(mode="promise_in_bounds")[..., 0]
+            return tiles
+
+        self.gather_tiles = gather_tiles
+
+        if key.probe == PROBE_KERNEL:
+            def probe(bits, ids, mb_rows, base_rows):
+                return bloom_ops.bloom_query_grouped(
+                    ids, bits, base_rows, mb_rows, n_hashes=nh,
+                    block_n=key.block_n, interpret=key.interpret)
+        else:
+            def probe(bits, ids, mb_rows, base_rows):
+                return bloom.grouped_query(bits, ids, nh, mb_rows,
+                                           base_rows)
+
+        @jax.jit
+        def fused(params, tiles, bits, tau_vec, m_bits_vec, base_vec,
+                  tenant_idx, raw_ids):
+            def predict_fn(p, cfg_, enc):
+                gathered = None
+                valids = []
+                if emb_cols:
+                    flat = p["embed_flat"]  # (cap*emb_rows_sum, e_max)
+                    cap = flat.shape[0] // emb_rows_sum
+                    parts, prefix = [], 0
+                    for i, rows, _ in emb_cols:
+                        # reproduce the local path's jnp.take semantics
+                        # EXACTLY — negative ids wrap pythonically,
+                        # out-of-bounds ids become NaN rows — while
+                        # keeping the combined-matrix index inside THIS
+                        # tenant's block (an out-of-vocab id must never
+                        # read a neighbor tenant's rows)
+                        ids = enc[..., i]
+                        wrapped = jnp.where(ids < 0, ids + rows, ids)
+                        valids.append((wrapped >= 0) & (wrapped < rows))
+                        safe = jnp.clip(wrapped, 0, rows - 1)
+                        parts.append(cap * prefix + tenant_idx * rows
+                                     + safe)
+                        prefix += rows
+                    idx = jnp.stack(parts, axis=-1)     # (n, C)
+                    gathered = flat.at[idx.reshape(-1)] \
+                        .get(mode="promise_in_bounds") \
+                        .reshape(idx.shape[0], len(emb_cols), -1)
+                feats, gi = [], 0
+                for i, (rows, e) in enumerate(cfg_.column_encodings):
+                    if e is None:       # no table: same one-hot as local
+                        feats.append(jax.nn.one_hot(enc[..., i], rows,
+                                                    dtype=cfg_.dtype))
+                    else:               # exact table rows, e_max-padded
+                        feats.append(jnp.where(
+                            valids[gi][..., None], gathered[:, gi, :e],
+                            jnp.asarray(jnp.nan, cfg_.dtype)))
+                        gi += 1
+                x = jnp.concatenate(feats, axis=-1)
+                # hidden stack on TILES: the scheduler guarantees every
+                # tile_rows-row tile is single-tenant, so weights come
+                # pre-gathered per tile (``tiles``, memoized by the
+                # arena) and each tile runs a real (tile, i) @ (i, o)
+                # GEMM — bit-equal to the local matmul (row count does
+                # not change the k-reduction order; property-tested),
+                # and ~10x faster than per-row weight gathers, which
+                # turn the dense stack into pure memory traffic
+                for li in range(len(cfg_.hidden)):
+                    w = tiles[f"w{li}"]                 # (g, prev, width)
+                    b = tiles[f"b{li}"]                 # (g, width)
+                    x = x.reshape(-1, tile, x.shape[-1])
+                    x = jax.nn.relu(
+                        jnp.einsum("gti,gio->gto", x, w) + b[:, None, :])
+                    x = x.reshape(-1, x.shape[-1])
+                # output layer: the same multiply+reduce as
+                # lmbf.mlp_head. The weight row is gathered per TILE
+                # and broadcast to rows — each row still multiplies its
+                # own tenant's w_out and the (n, prev) -> (n,) reduce is
+                # unchanged, so this stays bit-identical while gathering
+                # 1/tile_rows as many weight rows
+                w_out = jnp.repeat(tiles["w_out"], tile, axis=0)  # (n, prev)
+                b_out = jnp.repeat(tiles["b_out"], tile, axis=0)  # (n,)
+                return jax.nn.sigmoid(
+                    jnp.sum(x * w_out, axis=-1) + b_out)
+
+            def probe_fn(bits_, ids):
+                return probe(bits_, ids,
+                             jnp.take(m_bits_vec, tenant_idx),
+                             jnp.take(base_vec, tenant_idx))
+
+            tau_rows = jnp.take(tau_vec, tenant_idx)
+            return existence.query_stages(params, cfg, tau_rows, bits,
+                                          None, raw_ids,
+                                          probe_fn=probe_fn,
+                                          predict_fn=predict_fn)
+
+        self.fn = fused
+
+    def program_count(self) -> int:
+        """Live jit-cache entries ((arena-shape x bucket) programs)."""
+        try:
+            return self.fn._cache_size()
+        except AttributeError:
+            return 0
+
+
 # --------------------------------------------------------------- registry
 # of compiled executors: (plan, mesh-or-None) -> Executor. Local plans
 # key on (plan, None) so every registry/server in the process shares
@@ -299,12 +471,51 @@ def release_plan(plan: QueryPlan) -> int:
     return len(victims)
 
 
+# Grouped executors key on the GroupKey alone (grouping is local-only,
+# so no mesh in the key) and ref-count like the per-plan cache: each
+# live arena holds ONE reference, released when its last tenant leaves.
+
+_GROUPED: Dict[GroupKey, GroupedExecutor] = {}
+_GREFS: Dict[GroupKey, int] = {}
+
+
+def grouped_executor_for(key: GroupKey) -> GroupedExecutor:
+    """Build-or-fetch the megabatch executor for a plan group (cached,
+    no ref taken)."""
+    ex = _GROUPED.get(key)
+    if ex is None:
+        ex = _GROUPED[key] = GroupedExecutor(key)
+    return ex
+
+
+def acquire_grouped_executor(key: GroupKey) -> GroupedExecutor:
+    """:func:`grouped_executor_for` + take one reference."""
+    ex = grouped_executor_for(key)
+    _GREFS[key] = _GREFS.get(key, 0) + 1
+    return ex
+
+
+def release_grouped_executor(key: GroupKey) -> bool:
+    """Drop one reference; the last one forgets the cached executor
+    (and its compiled programs). Returns True when dropped."""
+    n = _GREFS.get(key, 0) - 1
+    if n > 0:
+        _GREFS[key] = n
+        return False
+    _GREFS.pop(key, None)
+    return _GROUPED.pop(key, None) is not None
+
+
 def compiled_program_count() -> int:
-    """Live (plan-shape x bucket) XLA programs across cached executors."""
-    return sum(ex.program_count() for ex in _EXECUTORS.values())
+    """Live (plan-shape x bucket) XLA programs across cached executors,
+    per-tenant and grouped."""
+    return (sum(ex.program_count() for ex in _EXECUTORS.values())
+            + sum(ex.program_count() for ex in _GROUPED.values()))
 
 
 def clear_executors() -> None:
     """Drop every cached executor (tests / tenant-churn hygiene)."""
     _EXECUTORS.clear()
     _REFS.clear()
+    _GROUPED.clear()
+    _GREFS.clear()

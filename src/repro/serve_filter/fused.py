@@ -17,6 +17,7 @@ original three-function surface for existing callers:
 """
 from __future__ import annotations
 
+import warnings
 from typing import Callable, Optional
 
 from repro.core import bloom, lmbf
@@ -37,7 +38,17 @@ def fused_query_fn(cfg: lmbf.LMBFConfig, fixup_params: bloom.BloomParams,
     Identical signatures share one callable (executor cache), so the
     number of live XLA programs is bounded by distinct plan shapes times
     padding buckets, not by tenant count.
+
+    .. deprecated:: PR 3
+        Use ``plan.plan_query`` + ``executors.executor_for`` (or the
+        higher-level ``FilterRegistry``/``FilterServer``); this shim is
+        slated for removal once external callers migrate.
     """
+    warnings.warn(
+        "repro.serve_filter.fused.fused_query_fn is a back-compat shim; "
+        "plan with repro.serve_filter.plan.plan_query and compile with "
+        "repro.serve_filter.executors.executor_for instead",
+        DeprecationWarning, stacklevel=2)
     plan = plan_query(cfg, fixup_params, use_kernel=use_kernel,
                       interpret=interpret, block_n=block_n)
     return executors.executor_for(plan).fn

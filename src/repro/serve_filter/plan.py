@@ -15,6 +15,13 @@ third:
 * :class:`QueryPlan` — placement + probe flavor + plan shape. Frozen
   and hashable: it IS the executor-cache key, so heterogeneous tenants
   whose filters share a plan share one compiled program per bucket.
+* :class:`GroupKey` — the plan minus tenant-specific sizes: what must
+  agree for tenants to share ONE grouped device dispatch (see
+  ``executors.GroupedExecutor``). The fixup bitset's ``m_bits`` is the
+  tenant-specific size — it varies with each tenant's false-negative
+  count, so the grouped program takes it as a traced per-row operand;
+  ``n_hashes`` stays in the key (it is a compile-time probe-loop
+  bound), as do the model config and probe flavor.
 * :func:`plan_query` — the planner: resolves ``LMBFConfig`` +
   ``BloomParams`` + an optional target :class:`jax.sharding.Mesh` into
   a plan. Falls back to local placement when the mesh has no usable
@@ -94,6 +101,47 @@ class QueryPlan:
         (padded up; pad rows are zero and never gathered)."""
         n = self.placement.n_shards
         return -(-rows // n)
+
+
+DEFAULT_TILE_ROWS = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupKey:
+    """What tenants must share to ride one grouped dispatch: the plan
+    with every tenant-specific size stripped. Tenants whose plans map
+    to equal group keys can have their parameters stacked into one
+    device arena and answered by ONE compiled program per bucket.
+
+    ``tile_rows`` is the megabatch's tenant-uniformity granule: the
+    scheduler aligns each tenant's rows to tiles of this many, so the
+    compiled program gathers MLP weights once per TILE instead of once
+    per row (per-row weight gathers turn the dense stack memory-bound
+    and ~10x slower; per-tile gathers keep real batched GEMMs).
+    """
+    cfg: lmbf.LMBFConfig
+    n_hashes: int
+    probe: str = PROBE_JAX
+    interpret: Optional[bool] = None
+    block_n: int = 2048
+    tile_rows: int = DEFAULT_TILE_ROWS
+
+    def __post_init__(self):
+        if self.tile_rows < 1:
+            raise ValueError("tile_rows must be >= 1")
+
+
+def group_key(plan: QueryPlan,
+              tile_rows: int = DEFAULT_TILE_ROWS) -> Optional[GroupKey]:
+    """The plan-group key for grouped (megabatch) execution, or ``None``
+    when the plan cannot group (sharded placement — cross-tenant
+    coalescing and cross-shard splitting are separate axes; a sharded
+    grouped executor is future work)."""
+    if plan.placement.sharded:
+        return None
+    return GroupKey(cfg=plan.cfg, n_hashes=plan.fixup_params.n_hashes,
+                    probe=plan.probe, interpret=plan.interpret,
+                    block_n=plan.block_n, tile_rows=int(tile_rows))
 
 
 def plan_query(cfg: lmbf.LMBFConfig, fixup_params: bloom.BloomParams, *,

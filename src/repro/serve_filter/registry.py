@@ -11,6 +11,16 @@ round-trips filters through ``checkpoint/manager.py`` (``save``/
 ``load``) so a serving process can hydrate tenants from disk. Evicting
 the last tenant on a plan also releases the plan's cached executor, so
 compiled-program count tracks live tenants rather than all-time churn.
+
+With ``grouped=True`` the registry additionally maintains plan-group
+membership: tenants whose plans share a
+:class:`~repro.serve_filter.plan.GroupKey` live stacked in ONE
+:class:`~repro.serve_filter.arena.PlanGroupArena` (registration and
+checkpoint hydration write straight into an arena slot), so the
+scheduler can answer many tenants per device dispatch. Eviction frees
+the tenant's slot for reuse and compacts the arena once churn leaves
+more holes than live tenants — LRU churn cannot leak arena rows — and
+the last tenant out releases the group's cached megabatch executor.
 """
 from __future__ import annotations
 
@@ -24,7 +34,9 @@ from jax.sharding import Mesh
 
 from repro.core import existence, memory
 from repro.serve_filter import executors as executors_lib
-from repro.serve_filter.plan import QueryPlan, plan_query
+from repro.serve_filter.arena import PlanGroupArena
+from repro.serve_filter.plan import (DEFAULT_TILE_ROWS, GroupKey,
+                                     QueryPlan, group_key, plan_query)
 
 
 @dataclasses.dataclass
@@ -32,19 +44,30 @@ class FilterEntry:
     tenant: str
     index: existence.ExistenceIndex
     plan: QueryPlan
-    executor: executors_lib.Executor
-    placed: executors_lib.PlacedFilter   # device-resident, per placement
+    executor: object                # Executor or GroupedExecutor
+    placed: Optional[executors_lib.PlacedFilter]  # None when grouped
     model_mb: float
     fixup_mb: float
     last_used: int = 0              # registry LRU clock tick
     n_queries: int = 0
+    group: Optional[PlanGroupArena] = None   # set iff grouped placement
 
     def run(self, raw_ids):
         """One fused dispatch: (n, n_cols) ids -> (ans, model, backup).
         With JAX's async dispatch this returns un-materialized device
         arrays immediately — the scheduler exploits that to overlap
-        host-side padding with device compute."""
+        host-side padding with device compute. A grouped entry runs
+        through its arena's megabatch program (constant tenant_idx);
+        the scheduler upgrades that to true multi-tenant batches."""
+        if self.group is not None:
+            return self.group.run_single(raw_ids, self.slot)
         return self.executor(self.placed, self.index.tau, raw_ids)
+
+    @property
+    def slot(self) -> int:
+        """Arena slot id (grouped entries only). Never cached: arena
+        compaction renumbers slots."""
+        return self.group.slot_of(self.tenant)
 
     @property
     def fused(self):
@@ -53,6 +76,8 @@ class FilterEntry:
 
     @property
     def bits(self) -> jax.Array:
+        if self.group is not None:
+            return self.group.device_arrays()[1]
         return self.placed.bits
 
     @property
@@ -73,7 +98,17 @@ class FilterRegistry:
     tenants' plans. Passing a ``mesh`` whose ``shard_axis`` has >= 2
     devices makes the planner choose sharded placement: every
     registered/hydrated tenant's embedding tables and fixup bitset are
-    scattered straight onto their shard slices.
+    scattered straight onto their shard slices. ``grouped=True`` stacks
+    same-group-key tenants into per-group device arenas so one dispatch
+    can serve many of them (local placement only — a mesh wins over
+    grouping when both are configured).
+
+    ``budget_mb`` counts NOMINAL per-filter sizes (weights + packed
+    bitset). A grouped arena's real footprint carries bounded overhead
+    on top (e_max-padded embedding columns, <= 2x slot headroom after
+    growth, <= 1.5x bitset over-allocation; compaction reclaims churn)
+    — observable as ``arena_mb`` in the server stats snapshot and
+    ``PlanGroupArena.nbytes``.
     """
 
     def __init__(self, budget_mb: Optional[float] = None, *,
@@ -81,14 +116,19 @@ class FilterRegistry:
                  interpret: Optional[bool] = None,
                  block_n: int = 2048,
                  mesh: Optional[Mesh] = None,
-                 shard_axis: str = "data"):
+                 shard_axis: str = "data",
+                 grouped: bool = False,
+                 tile_rows: int = DEFAULT_TILE_ROWS):
         self.budget_mb = budget_mb
         self.use_kernel = use_kernel
         self.interpret = interpret
         self.block_n = block_n
         self.mesh = mesh
         self.shard_axis = shard_axis
+        self.grouped = bool(grouped)
+        self.tile_rows = int(tile_rows)
         self._entries: Dict[str, FilterEntry] = {}
+        self._groups: Dict[GroupKey, PlanGroupArena] = {}
         self._clock = itertools.count(1)
         self.evictions: List[str] = []
 
@@ -113,6 +153,21 @@ class FilterRegistry:
         entry.last_used = next(self._clock)
         return entry
 
+    def peek(self, tenant: str) -> Optional[FilterEntry]:
+        """Fetch WITHOUT touching LRU recency (scheduler group scans)."""
+        return self._entries.get(tenant)
+
+    def tick(self) -> int:
+        """Next LRU clock value — for callers that already hold an
+        entry (from :meth:`peek`) and want to bump its recency without
+        a second lookup: ``entry.last_used = registry.tick()``."""
+        return next(self._clock)
+
+    @property
+    def groups(self) -> Dict[GroupKey, PlanGroupArena]:
+        """Live plan-group arenas (read-only view for stats/tests)."""
+        return dict(self._groups)
+
     # ---------------------------------------------------------- mutation
     def plan_for(self, index: existence.ExistenceIndex) -> QueryPlan:
         """The plan this registry's planner assigns an index."""
@@ -124,23 +179,33 @@ class FilterRegistry:
     def register(self, tenant: str, index: existence.ExistenceIndex
                  ) -> FilterEntry:
         """Admit a fitted index (or replace the tenant's current one —
-        the re-fit/hot-swap path); evicts LRU tenants if over budget."""
+        the re-fit/hot-swap path); evicts LRU tenants if over budget.
+        On a grouped registry the index lands in its plan-group arena
+        (slot reuse before growth)."""
         mem = memory.accounting(index.cfg)
         plan = self.plan_for(index)
-        executor = executors_lib.acquire_executor(plan, self.mesh)
-        entry = FilterEntry(
-            tenant=tenant,
-            index=index,
-            plan=plan,
-            executor=executor,
-            placed=executor.place(index),
-            model_mb=mem.weights_mb,
-            fixup_mb=index.fixup_filter.size_mb,
-            last_used=next(self._clock))
+        gk = group_key(plan, self.tile_rows) if self.grouped else None
+        common = dict(tenant=tenant, index=index, plan=plan,
+                      model_mb=mem.weights_mb,
+                      fixup_mb=index.fixup_filter.size_mb,
+                      last_used=next(self._clock))
+        if gk is not None:
+            arena = self._groups.get(gk)
+            if arena is None:
+                arena = PlanGroupArena(
+                    gk, executors_lib.acquire_grouped_executor(gk))
+                self._groups[gk] = arena
+            arena.add(tenant, index)
+            entry = FilterEntry(executor=arena.executor, placed=None,
+                                group=arena, **common)
+        else:
+            executor = executors_lib.acquire_executor(plan, self.mesh)
+            entry = FilterEntry(executor=executor,
+                                placed=executor.place(index), **common)
         old = self._entries.get(tenant)
         self._entries[tenant] = entry
-        if old is not None:     # replaced: give back the old plan's ref
-            executors_lib.release_executor(old.plan, self.mesh)
+        if old is not None:     # replaced: give back the old entry's ref
+            self._release_entry(old, replaced_by=entry)
         self._enforce_budget(keep=tenant)
         return entry
 
@@ -149,10 +214,34 @@ class FilterRegistry:
         if entry is None:
             return
         self.evictions.append(tenant)
-        # drop this tenant's reference; the cache entry (and compiled
-        # programs) go away with the LAST reference process-wide, so
-        # other registries serving the same plan are unaffected
-        executors_lib.release_executor(entry.plan, self.mesh)
+        self._release_entry(entry)
+
+    def _release_entry(self, entry: FilterEntry, *,
+                       replaced_by: Optional[FilterEntry] = None) -> None:
+        """Give back whatever the entry holds: its arena slot (grouped)
+        or its per-plan executor reference. The last tenant out of an
+        arena/plan drops the cached executor and its compiled programs;
+        surviving arenas compact when churn leaves too many holes."""
+        if entry.group is not None:
+            arena = entry.group
+            if replaced_by is not None and replaced_by.group is arena:
+                # hot-swap in place: arena.add already reused the slot,
+                # but a re-fit whose bitset GREW left the old word range
+                # dead — compact when that waste piles up, or repeated
+                # hot-swaps would leak arena words
+                arena.maybe_compact()
+                return
+            arena.remove(entry.tenant)
+            if len(arena) == 0:
+                del self._groups[arena.key]
+                executors_lib.release_grouped_executor(arena.key)
+            else:
+                arena.maybe_compact()
+        else:
+            # drop this tenant's reference; the cache entry (and compiled
+            # programs) go away with the LAST reference process-wide, so
+            # other registries serving the same plan are unaffected
+            executors_lib.release_executor(entry.plan, self.mesh)
 
     def _enforce_budget(self, keep: str) -> None:
         if self.budget_mb is None:

@@ -3,14 +3,24 @@
 The continuous-batching pattern from ``launch/serve.py`` adapted from
 token-steps to one-shot membership queries: requests (a tenant id + a
 block of raw-id rows) enter per-tenant FIFO queues; each ``step()``
-coalesces ONE tenant's waiting rows into one fused dispatch, padded up
-to a fixed bucket size so every dispatch hits a pre-compiled
-(plan-shape, bucket) XLA program instead of triggering a fresh trace
-per request shape. Padding rows are all-wildcard and sliced off before
-answers are scattered back to their requests. Tenants take dispatches
-round-robin (the ``_order`` deque rotates after every pick, with a set
-mirror for O(1) membership), so sustained load from one tenant cannot
-starve late arrivals.
+coalesces waiting rows into one fused dispatch, padded up to a fixed
+bucket size so every dispatch hits a pre-compiled (plan-shape, bucket)
+XLA program instead of triggering a fresh trace per request shape.
+Padding rows are all-wildcard and sliced off before answers are
+scattered back to their requests. Tenants take dispatches round-robin
+(the ``_order`` deque rotates after every pick, with a set mirror for
+O(1) membership), so sustained load from one tenant cannot starve late
+arrivals.
+
+Coalescing is GROUP-AWARE: when the picked tenant's entry belongs to a
+plan-group arena (``FilterRegistry(grouped=True)``) and its own rows
+don't fill the bucket, the scheduler keeps pulling rows from the next
+same-group tenants in ring order and dispatches ONE megabatch with a
+per-row ``tenant_idx`` — so a fleet of lightly-loaded filters rides
+bucket-1024-class dispatches instead of each paying a lonely bucket-64
+one. Per-request scatter is unchanged (spans stay contiguous); the
+round-robin ring still rotates on the picked tenant only, so tenants
+in other groups keep their turn.
 
 ``step()`` is split into a host half and a device half:
 
@@ -57,8 +67,13 @@ def bucket_for(n: int, buckets: Sequence[int]) -> int:
     raise ValueError(f"batch of {n} exceeds largest bucket {buckets[-1]}")
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class QueryRequest:
+    """One admitted query block. The result arrays (``answers``,
+    ``model_yes``, ``backup_yes``) are owned by the scheduler and must
+    be treated as READ-ONLY: single-span requests receive zero-copy
+    views of the batch output (non-writeable), multi-span requests a
+    private buffer — copy before mutating."""
     rid: int
     tenant: str
     ids: np.ndarray                       # (n, n_cols) int32 raw ids
@@ -82,18 +97,23 @@ class QueryRequest:
         return self.t_done - self.t_submit
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class _Prepared:
     """Host half of one dispatch: padded batch + scatter plan."""
-    tenant: str
-    entry: FilterEntry
+    tenant: str                                 # picked (primary) tenant
+    entry: FilterEntry                          # its registry entry
     take: List[Tuple[QueryRequest, int, int]]   # (request, row offset, rows)
+    span_entries: List[FilterEntry]             # per-span owning entry
+    span_pos: List[int]                         # per-span batch position
     batch: np.ndarray                           # (bucket, n_cols) padded
     bucket: int
-    n_total: int
+    n_total: int                                # valid rows (gaps excluded)
+    slots: Optional[np.ndarray] = None          # (bucket,) arena slot ids
+    group: Optional[object] = None              # PlanGroupArena if grouped
+    valid_idx: Optional[np.ndarray] = None      # set iff alignment gaps
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class _InFlight:
     """Device half: a dispatched batch awaiting retirement."""
     prep: _Prepared
@@ -128,29 +148,57 @@ class QueryScheduler:
     def submit(self, tenant: str, ids: np.ndarray) -> QueryRequest:
         """Admit one request; rows may exceed the largest bucket (they
         will be answered across several dispatches)."""
-        if tenant not in self.registry:
-            raise KeyError(f"unknown tenant {tenant!r}")
-        ids = np.asarray(ids, np.int32)
-        if ids.ndim == 1:
-            ids = ids[None, :]
-        want = self.registry.get(tenant).n_cols
-        if ids.shape[-1] != want:
-            raise ValueError(
-                f"tenant {tenant!r} expects {want} columns, "
-                f"got {ids.shape[-1]}")
-        req = QueryRequest(rid=next(self._rid), tenant=tenant, ids=ids,
-                           t_submit=self._clock())
-        if ids.shape[0] == 0:             # trivially complete, never queued
-            req.answers = np.zeros(0, bool)
-            req.model_yes = np.zeros(0, bool)
-            req.backup_yes = np.zeros(0, bool)
-            req.t_done = req.t_submit
-            return req
-        self._queues[tenant].append((req, 0))
-        if tenant not in self._order_set:
-            self._order.append(tenant)
-            self._order_set.add(tenant)
-        return req
+        return self.submit_many(((tenant, ids),))[0]
+
+    def submit_many(self, items) -> List[QueryRequest]:
+        """Bulk admission: ``[(tenant, ids), ...]`` -> requests, in
+        order. One call per fleet tick instead of one per tenant — the
+        megabatch regime serves thousands of small requests per second,
+        so per-request Python overhead is the serving bottleneck once
+        dispatches are grouped; this path keeps the hot loop tight
+        (locals bound once, validation per item preserved)."""
+        registry = self.registry
+        queues = self._queues
+        order = self._order
+        order_set = self._order_set
+        clock = self._clock
+        rid = self._rid
+        # validate EVERYTHING first: a bad item must reject the whole
+        # call before any request is queued, or the caller loses the
+        # handles of the items admitted ahead of the failure
+        checked = []
+        for tenant, ids in items:
+            entry = registry.peek(tenant)
+            if entry is None:
+                raise KeyError(f"unknown tenant {tenant!r}")
+            ids = np.asarray(ids, np.int32)
+            if ids.ndim == 1:
+                ids = ids[None, :]
+            if ids.shape[-1] != entry.n_cols:
+                raise ValueError(
+                    f"tenant {tenant!r} expects {entry.n_cols} columns, "
+                    f"got {ids.shape[-1]}")
+            checked.append((tenant, entry, ids))
+        out: List[QueryRequest] = []
+        for tenant, entry, ids in checked:
+            # LRU touch: a tenant with freshly queued work must not be
+            # the next budget-eviction victim (evicting fails its
+            # requests), so submission counts as recency
+            entry.last_used = registry.tick()
+            req = QueryRequest(rid=next(rid), tenant=tenant, ids=ids,
+                               t_submit=clock())
+            if ids.shape[0] == 0:
+                req.answers = np.zeros(0, bool)
+                req.model_yes = np.zeros(0, bool)
+                req.backup_yes = np.zeros(0, bool)
+                req.t_done = req.t_submit
+            else:
+                queues[tenant].append((req, 0))
+                if tenant not in order_set:
+                    order.append(tenant)
+                    order_set.add(tenant)
+            out.append(req)
+        return out
 
     @property
     def pending_rows(self) -> int:
@@ -189,69 +237,183 @@ class QueryScheduler:
         return True
 
     def _prepare(self) -> Optional[_Prepared]:
-        """Host half: coalesce the next tenant's rows into a padded
-        batch. Pops the taken spans off the queue, so a later prepare
-        (while this batch is still in flight) continues after them."""
+        """Host half: coalesce the next tenant's rows — and, for a
+        grouped tenant with room to spare, rows from the next same-group
+        tenants in ring order — into a padded batch. Pops the taken
+        spans off the queues, so a later prepare (while this batch is
+        still in flight) continues after them.
+
+        Grouped batches are TILE-ALIGNED: each tenant's region starts on
+        a ``tile_rows`` boundary (gap rows are wildcard padding on the
+        region owner's slot), so every tile is single-tenant and the
+        grouped program can gather MLP weights per tile instead of per
+        row. Regions are laid out in SLOT ORDER (not boarding order),
+        so a recurring tenant mix produces a canonical tile signature —
+        the arena memoizes its per-tile weight gather on it, and the
+        round-robin rotation would otherwise permute the layout every
+        dispatch and defeat that cache. Alignment gaps count as padding
+        in occupancy stats.
+        """
         tenant = self._next_tenant()
         if tenant is None:
             return None
-        queue = self._queues[tenant]
-        entry = self.registry.get(tenant)
+        registry = self.registry
+        queues = self._queues
+        entry = registry.get(tenant)
         cap = self.buckets[-1]
+        group = entry.group
+        tile = group.tile_rows if group is not None else 1
+        # whole-tile capacity so per-region tile-alignment can never
+        # overflow the bucket (cap < tile: a single region, no siblings)
+        cap_tiles = (cap // tile) * tile
+        cap_eff = cap_tiles if cap_tiles >= tile else cap
 
         take: List[Tuple[QueryRequest, int, int]] = []
-        n_total = 0
-        while queue and n_total < cap:
-            req, off = queue[0]
-            n = min(req.ids.shape[0] - off, cap - n_total)
-            take.append((req, off, n))
-            n_total += n
-            if off + n >= req.ids.shape[0]:
-                queue.popleft()
-            else:                         # bucket cap hit mid-request
-                queue[0] = (req, off + n)
-                break
-        if not queue:
-            del self._queues[tenant]
+        span_entries: List[FilterEntry] = []
+        # (entry, first span idx, span count, valid rows) per tenant
+        regions: List[Tuple[FilterEntry, int, int, int]] = []
+        aligned = 0     # committed tile-aligned rows
+        n_total = 0     # valid rows
 
-        bucket = bucket_for(n_total, self.buckets)
-        batch = np.zeros((bucket, entry.n_cols), np.int32)  # pad = wildcard
+        # span-taking, inlined: this runs once per candidate tenant on
+        # the hottest host path (a 64-tenant megabatch walks 64 regions
+        # per dispatch), so no helper-call or closure overhead
+        order_list = list(self._order) if group is not None else ()
+        order_i = 0
+        name, e = tenant, entry
+        while True:
+            queue = queues.get(name)
+            if queue:
+                budget = cap_eff - aligned
+                first = len(take)
+                taken = 0
+                while queue:
+                    req, off = queue[0]
+                    n = req.ids.shape[0] - off
+                    left = budget - taken
+                    if n >= left:         # budget hit (maybe mid-request)
+                        if n > left:
+                            queue[0] = (req, off + left)
+                        else:
+                            queue.popleft()
+                        take.append((req, off, left))
+                        span_entries.append(e)
+                        taken += left
+                        break
+                    take.append((req, off, n))
+                    span_entries.append(e)
+                    taken += n
+                    queue.popleft()
+                if not queue:
+                    queues.pop(name, None)
+                if taken:
+                    regions.append((e, first, len(take) - first, taken))
+                    n_total += taken
+                    t = taken + tile - 1
+                    aligned += t - t % tile
+            # megabatch: top the bucket up with group siblings' rows
+            # (ring order, so the tenants next in line board first)
+            if group is None or aligned >= cap_eff:
+                break
+            name = None
+            while order_i < len(order_list):
+                cand = order_list[order_i]
+                order_i += 1
+                if cand == tenant or not queues.get(cand):
+                    continue
+                ce = registry.peek(cand)
+                if ce is None or ce.group is not group:
+                    continue
+                ce.last_used = registry.tick()      # LRU touch
+                name, e = cand, ce
+                break
+            if name is None:
+                break
+
+        # lay regions out in slot order (canonical tile signature)
+        if group is not None and len(regions) > 1:
+            regions.sort(key=lambda r: group.slot_of(r[0].tenant))
+        span_pos: List[int] = [0] * len(take)
+        bounds: List[Tuple[FilterEntry, int, int]] = []
+        chunks: List[np.ndarray] = []       # span payloads in layout order
         pos = 0
-        for req, off, n in take:
-            batch[pos:pos + n] = req.ids[off:off + n]
-            pos += n
+        for e, first, n_spans, rows in regions:
+            p = pos
+            for si in range(first, first + n_spans):
+                span_pos[si] = p
+                req, off, n = take[si]
+                chunks.append(req.ids[off:off + n])
+                p += n
+            end = min(cap, -(-(pos + rows) // tile) * tile)
+            bounds.append((e, pos, end))
+            pos = end
+
+        bucket = bucket_for(pos, self.buckets)
+        batch = np.zeros((bucket, entry.n_cols), np.int32)  # pad = wildcard
+        slots = None
+        valid_idx = None
+        if pos == n_total:      # gapless: one vectorized fill
+            batch[:n_total] = chunks[0] if len(chunks) == 1 \
+                else np.concatenate(chunks)
+        else:                   # alignment gaps: per-span fill + map
+            for p, (req, off, n) in zip(span_pos, take):
+                batch[p:p + n] = req.ids[off:off + n]
+            valid_idx = np.concatenate(
+                [np.arange(p, p + n)
+                 for p, (_, _, n) in zip(span_pos, take)])
+        if group is not None:
+            # bucket-padding rows extend the LAST (highest-slot) region:
+            # any live slot is safe (their answers are sliced off), and
+            # keeping the fill canonical preserves the tile signature;
+            # gap rows inside a region carry the region owner's slot,
+            # keeping tiles uniform
+            vals = np.fromiter((group.slot_of(e.tenant)
+                                for e, _, _ in bounds),
+                               np.int32, len(bounds))
+            lens = np.empty(len(bounds), np.int64)
+            for j, (_, start, end) in enumerate(bounds):
+                lens[j] = end - start
+            lens[-1] += bucket - pos        # tail padding
+            slots = np.repeat(vals, lens)
         return _Prepared(tenant=tenant, entry=entry, take=take,
-                         batch=batch, bucket=bucket, n_total=n_total)
+                         span_entries=span_entries, span_pos=span_pos,
+                         batch=batch, bucket=bucket, n_total=n_total,
+                         slots=slots, group=group, valid_idx=valid_idx)
 
     def _dispatch(self, prep: _Prepared) -> None:
         """Device half: launch the fused program (async — returns
         un-materialized device arrays) and park it in flight."""
-        outputs = prep.entry.run(prep.batch)
-        prep.entry.n_queries += prep.n_total
+        if prep.group is not None:
+            outputs = prep.group.run(prep.batch, prep.slots)
+        else:
+            outputs = prep.entry.run(prep.batch)
+        for e, (_, _, n) in zip(prep.span_entries, prep.take):
+            e.n_queries += n
         self._inflight.append(_InFlight(prep=prep, outputs=outputs,
                                         t_dispatch=self._clock()))
 
     def _requeue(self, prep: _Prepared) -> None:
         """Restore a prepared-but-never-dispatched batch's spans to the
-        front of the tenant's queue, in their original order."""
-        queue = self._queues.setdefault(prep.tenant, collections.deque())
-        for req, off, n in reversed(prep.take):
+        front of their tenants' queues, in their original order."""
+        for e, (req, off, n) in zip(reversed(prep.span_entries),
+                                    reversed(prep.take)):
+            queue = self._queues.setdefault(e.tenant, collections.deque())
             if queue and queue[0][0] is req:    # cap-split head entry
                 queue[0] = (req, off)
             else:
                 queue.appendleft((req, off))
-        if prep.tenant not in self._order_set:
-            self._order.append(prep.tenant)
-            self._order_set.add(prep.tenant)
+            if e.tenant not in self._order_set:
+                self._order.append(e.tenant)
+                self._order_set.add(e.tenant)
 
     def _retire(self, inf: _InFlight) -> None:
         """Block on a dispatched batch, scatter answers back, complete
         fully-answered requests, record stats."""
         prep = inf.prep
         try:
-            ans = np.asarray(inf.outputs[0])[:prep.n_total]
-            model = np.asarray(inf.outputs[1])[:prep.n_total]
-            backup = np.asarray(inf.outputs[2])[:prep.n_total]
+            full_ans = np.asarray(inf.outputs[0])
+            full_model = np.asarray(inf.outputs[1])
+            full_backup = np.asarray(inf.outputs[2])
         except Exception as e:
             # the async computation itself failed: the rows are gone
             # from the queue, so fail their requests rather than hang
@@ -262,24 +424,45 @@ class QueryScheduler:
                     req.t_done = self._clock()
             raise
         latency = self._clock() - inf.t_dispatch
+        if prep.valid_idx is not None:     # tile-alignment gaps present
+            ans = full_ans[prep.valid_idx]
+            model = full_model[prep.valid_idx]
+            backup = full_backup[prep.valid_idx]
+        else:
+            ans = full_ans[:prep.n_total]
+            model = full_model[:prep.n_total]
+            backup = full_backup[:prep.n_total]
 
-        pos = 0
-        for req, off, n in prep.take:
-            if req.answers is None:
-                m = req.ids.shape[0]
-                req.answers = np.zeros(m, bool)
-                req.model_yes = np.zeros(m, bool)
-                req.backup_yes = np.zeros(m, bool)
-            req.answers[off:off + n] = ans[pos:pos + n]
-            req.model_yes[off:off + n] = model[pos:pos + n]
-            req.backup_yes[off:off + n] = backup[pos:pos + n]
-            pos += n
+        clock = self._clock
+        record_request = self.stats.record_request
+        t_done = clock()        # one retirement instant for the batch
+        for p, (req, off, n) in zip(prep.span_pos, prep.take):
+            if off == 0 and n == req.ids.shape[0]:
+                # whole request answered by this span (the common case
+                # in the many-small-request regime): hand out zero-copy
+                # views instead of allocating + copying three arrays
+                req.answers = full_ans[p:p + n]
+                req.model_yes = full_model[p:p + n]
+                req.backup_yes = full_backup[p:p + n]
+            else:
+                if req.answers is None:
+                    m = req.ids.shape[0]
+                    req.answers = np.zeros(m, bool)
+                    req.model_yes = np.zeros(m, bool)
+                    req.backup_yes = np.zeros(m, bool)
+                req.answers[off:off + n] = full_ans[p:p + n]
+                req.model_yes[off:off + n] = full_model[p:p + n]
+                req.backup_yes[off:off + n] = full_backup[p:p + n]
             if off + n >= req.ids.shape[0]:   # last span: request done
-                req.t_done = self._clock()
-                self.stats.record_request(req.latency_s)
+                req.t_done = t_done
+                record_request(t_done - req.t_submit)
+        per_tenant: Dict[str, int] = {}
+        for e, (_, _, n) in zip(prep.span_entries, prep.take):
+            per_tenant[e.tenant] = per_tenant.get(e.tenant, 0) + n
         self.stats.record_batch(prep.tenant, prep.n_total, prep.bucket,
                                 latency, ans, model, backup,
-                                inflight=len(self._inflight))
+                                inflight=len(self._inflight),
+                                per_tenant=per_tenant)
 
     def _next_tenant(self) -> Optional[str]:
         while self._order:
@@ -310,8 +493,18 @@ class QueryScheduler:
 
     def run_until_drained(self, max_steps: int = 100_000) -> int:
         """Steps until queues AND the in-flight buffer are empty (the
-        final async batches drain one per step). Returns step count."""
+        final async batches drain one per step). Returns step count.
+
+        Never returns with batches still in flight: even when
+        ``max_steps`` cuts the loop short, the already-dispatched
+        batches are retired (pure progress — retiring launches nothing
+        new and is bounded by ``max_inflight``), so their requests
+        complete and their latency lands in ``ServeStats`` instead of
+        dangling un-materialized on the device.
+        """
         steps = 0
         while steps < max_steps and self.step():
             steps += 1
+        while self._inflight:
+            self._retire(self._inflight.popleft())
         return steps

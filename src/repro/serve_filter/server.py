@@ -9,8 +9,12 @@ and notebooks; production callers submit and drain in their own loop
 
 Scale knobs: pass ``mesh`` (+ ``shard_axis``) to have the planner place
 every tenant's embedding tables and fixup bitset sharded over that mesh
-axis (the ``ShardedExecutor`` path), and ``async_dispatch=True`` to
-double-buffer dispatches so host-side padding overlaps device compute.
+axis (the ``ShardedExecutor`` path), ``async_dispatch=True`` to
+double-buffer dispatches so host-side padding overlaps device compute,
+and ``grouped=True`` to stack same-plan-shape tenants into plan-group
+arenas so one device dispatch answers many lightly-loaded tenants (the
+many-tenant/low-per-tenant-load regime where per-tenant dispatches
+cannot fill a bucket).
 """
 from __future__ import annotations
 
@@ -22,6 +26,7 @@ from jax.sharding import Mesh
 from repro.core import existence
 from repro.runtime.metrics import MetricsLogger
 from repro.serve_filter import executors as executors_lib
+from repro.serve_filter.plan import DEFAULT_TILE_ROWS
 from repro.serve_filter.registry import FilterEntry, FilterRegistry
 from repro.serve_filter.scheduler import (DEFAULT_BUCKETS, QueryRequest,
                                           QueryScheduler)
@@ -38,11 +43,14 @@ class FilterServer:
                  shard_axis: str = "data",
                  async_dispatch: bool = False,
                  max_inflight: int = 2,
+                 grouped: bool = False,
+                 tile_rows: int = DEFAULT_TILE_ROWS,
                  metrics_path: Optional[str] = None,
                  metrics_echo: bool = False):
         self.registry = FilterRegistry(budget_mb, use_kernel=use_kernel,
                                        interpret=interpret, block_n=block_n,
-                                       mesh=mesh, shard_axis=shard_axis)
+                                       mesh=mesh, shard_axis=shard_axis,
+                                       grouped=grouped, tile_rows=tile_rows)
         self.stats = ServeStats()
         self.scheduler = QueryScheduler(self.registry, buckets=buckets,
                                         stats=self.stats,
@@ -70,6 +78,10 @@ class FilterServer:
     # ------------------------------------------------------------ queries
     def submit(self, tenant: str, ids: np.ndarray) -> QueryRequest:
         return self.scheduler.submit(tenant, ids)
+
+    def submit_many(self, items):
+        """Bulk admission for fleet clients: ``[(tenant, ids), ...]``."""
+        return self.scheduler.submit_many(items)
 
     def step(self) -> bool:
         return self.scheduler.step()
@@ -99,4 +111,10 @@ class FilterServer:
         snap["registry_mb"] = self.registry.total_mb
         snap["compiled_programs"] = float(
             executors_lib.compiled_program_count())
+        snap["plan_groups"] = float(len(self.registry.groups))
+        # actual arena footprint (padding + growth headroom included) —
+        # budget_mb counts nominal per-filter sizes, so operators watch
+        # this for the true grouped-residency cost
+        snap["arena_mb"] = sum(a.nbytes for a in
+                               self.registry.groups.values()) / 2 ** 20
         return snap

@@ -33,6 +33,7 @@ class _Counters:
     fixup_pos: int = 0
     final_pos: int = 0
     overlapped: int = 0         # batches retired with another in flight
+    grouped: int = 0            # batches whose rows spanned > 1 tenant
 
 
 class ServeStats:
@@ -50,10 +51,14 @@ class ServeStats:
     def record_batch(self, tenant: str, n_valid: int, bucket: int,
                      latency_s: float, answers: np.ndarray,
                      model_yes: np.ndarray, backup_yes: np.ndarray,
-                     inflight: int = 0):
+                     inflight: int = 0,
+                     per_tenant: Optional[Dict[str, int]] = None):
         """One fused dispatch. Stage arrays are the VALID slice only;
         ``inflight`` is the number of OTHER batches still in flight at
-        retirement (> 0 means the async double buffer overlapped)."""
+        retirement (> 0 means the async double buffer overlapped);
+        ``per_tenant`` breaks the valid rows down by owning tenant when
+        one grouped dispatch carried several tenants' rows (defaults to
+        attributing everything to ``tenant``)."""
         t = self.totals
         t.queries += int(n_valid)
         t.batches += 1
@@ -63,9 +68,13 @@ class ServeStats:
         t.final_pos += int(np.asarray(answers).sum())
         if inflight > 0:
             t.overlapped += 1
+        if per_tenant is None:
+            per_tenant = {tenant: int(n_valid)}
+        if len(per_tenant) > 1:
+            t.grouped += 1
+        for name, n in per_tenant.items():
+            self.per_tenant[name] = self.per_tenant.get(name, 0) + int(n)
         self.batch_latency.record(latency_s)
-        self.per_tenant[tenant] = self.per_tenant.get(tenant, 0) + \
-            int(n_valid)
         self.last_bucket = int(bucket)
 
     def record_request(self, latency_s: float):
@@ -88,6 +97,7 @@ class ServeStats:
             "positive_rate": t.final_pos / q,
             "tenants_served": float(len(self.per_tenant)),
             "overlapped_batches": float(t.overlapped),
+            "grouped_batches": float(t.grouped),
         }
         out.update(self.batch_latency.summary("batch_"))
         out.update(self.request_latency.summary("request_"))

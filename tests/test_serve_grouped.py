@@ -1,0 +1,362 @@
+"""Grouped (megabatch) execution: arenas, group keys, bit-exactness.
+
+The load-bearing property: answers served through the grouped path —
+cross-tenant coalescing, stacked-arena gathers, per-row rebased fixup
+probes — are BIT-IDENTICAL (``answers``, ``model_yes``, ``backup_yes``)
+to the same stream through per-tenant ``LocalExecutor`` serving, across
+plan shapes, buckets, probe flavors, and mid-stream
+evict -> compact -> rehydrate churn.
+"""
+import numpy as np
+import pytest
+
+from repro.core import bloom, existence
+from repro.data import tuples
+from repro.kernels.bloom_query import ops as bloom_ops
+from repro.serve_filter import FilterServer, group_key, plan_query
+from repro.serve_filter import executors as executors_lib
+from repro.serve_filter import fused as fused_lib
+from repro.serve_filter.arena import PlanGroupArena
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    """Six cheap fitted indexes over TWO plan shapes (two groups), each
+    shape fitted on three distinct record sets (distinct weights, tau,
+    and fixup m_bits — the tenant-specific size the group key drops)."""
+    st = existence.TrainSettings(steps=15, n_pos=800, n_neg=800)
+    out = {}
+    for shape, (cards, theta) in enumerate(
+            [([300, 200, 80], 100), ([500, 150], 120)]):
+        for j in range(3):
+            ds = tuples.synthesize(cards, n_records=900,
+                                   seed=10 * shape + j)
+            out[f"s{shape}j{j}"] = (ds, existence.fit(ds, theta=theta,
+                                                      settings=st))
+    return out
+
+
+def _probes(ds, n, seed):
+    rng = np.random.default_rng(seed)
+    pos = ds.records[rng.integers(0, len(ds.records), n // 2)]
+    neg = np.stack([rng.integers(1, v, n - n // 2) for v in ds.cards],
+                   axis=-1).astype(np.int32)
+    return np.concatenate([pos, neg])
+
+
+# ------------------------------------------------------------ group keys
+
+def test_group_key_drops_tenant_sizes(fleet):
+    (_, a), (_, b) = fleet["s0j0"], fleet["s0j1"]
+    pa = plan_query(a.cfg, a.fixup_filter.params)
+    pb = plan_query(b.cfg, b.fixup_filter.params)
+    assert a.fixup_filter.params.m_bits != b.fixup_filter.params.m_bits
+    assert pa != pb                         # per-plan cache keys differ...
+    assert group_key(pa) == group_key(pb)   # ...but they share a group
+    # distinct plan shape -> distinct group
+    (_, c) = fleet["s1j0"]
+    pc = plan_query(c.cfg, c.fixup_filter.params)
+    assert group_key(pc) != group_key(pa)
+    # probe flavor is part of the group key
+    pk = plan_query(a.cfg, a.fixup_filter.params, use_kernel=True)
+    assert group_key(pk) != group_key(pa)
+
+
+def test_sharded_plans_do_not_group(fleet):
+    import jax
+    _, idx = fleet["s0j0"]
+    mesh = jax.make_mesh((1,), ("data",))
+    p = plan_query(idx.cfg, idx.fixup_filter.params, mesh=mesh)
+    assert group_key(p) is not None         # 1-device mesh plans local
+    from repro.serve_filter.plan import Placement, QueryPlan
+    sharded = QueryPlan(cfg=idx.cfg, fixup_params=idx.fixup_filter.params,
+                        placement=Placement(kind="sharded", axis="data",
+                                            n_shards=2))
+    assert group_key(sharded) is None
+
+
+# ----------------------------------------------------- grouped probe math
+
+def test_grouped_probe_reassembles_per_filter_query():
+    """Per-row rebased probes against a concatenation of heterogeneous
+    bitsets == per-filter bloom.query, for JAX and Pallas flavors."""
+    rng = np.random.default_rng(0)
+    nh, filters, base = 5, [], 0
+    chunks = []
+    for m in (2000, 1100, 3300):
+        p = bloom.BloomParams(m_bits=m, n_hashes=nh)
+        keys = rng.integers(1, 500, size=(120, 3)).astype(np.int32)
+        bits = bloom.empty(p)
+        bloom.add(bits, keys[:60], p)
+        filters.append((p, bits, keys, base))
+        chunks.append(bits)
+        base += p.n_words
+    concat = np.concatenate(chunks)
+
+    ids = np.concatenate([k for _, _, k, _ in filters])
+    mb = np.concatenate([np.full(120, p.m_bits, np.uint32)
+                         for p, _, _, _ in filters])
+    wb = np.concatenate([np.full(120, b, np.int32)
+                         for _, _, _, b in filters])
+    perm = rng.permutation(len(ids))
+    ids, mb, wb = ids[perm], mb[perm], wb[perm]
+
+    want = np.empty(len(ids), bool)
+    for p, bits, _, b in filters:
+        sel = wb == b
+        want[sel] = np.asarray(bloom.query(bits, ids[sel], p))
+
+    got = np.asarray(bloom.grouped_query(concat, ids, nh, mb, wb))
+    np.testing.assert_array_equal(got, want)
+    got_k = np.asarray(bloom_ops.bloom_query_grouped(
+        ids, concat, wb, mb, n_hashes=nh, block_n=64, interpret=True))
+    np.testing.assert_array_equal(got_k, want)
+
+
+# ------------------------------------------------------------- the arena
+
+def test_arena_slot_reuse_and_compaction(fleet):
+    key = group_key(plan_query(fleet["s0j0"][1].cfg,
+                               fleet["s0j0"][1].fixup_filter.params))
+    arena = PlanGroupArena(key, executors_lib.grouped_executor_for(key))
+    idxs = [fleet[f"s0j{j}"][1] for j in range(3)]
+    for j, idx in enumerate(idxs):
+        arena.add(f"t{j}", idx)
+    assert arena.capacity == 4 and len(arena) == 3
+    bases = {t: arena._word_base[arena.slot_of(t)] for t in arena.tenants}
+
+    # freed slot AND freed bitset range are reused before growing
+    arena.remove("t1")
+    freed_slot = [s for s in range(arena.capacity)
+                  if s not in (arena.slot_of("t0"), arena.slot_of("t2"))]
+    arena.add("t1b", idxs[1])
+    assert arena.slot_of("t1b") in freed_slot
+    assert arena._word_base[arena.slot_of("t1b")] == bases["t1"]
+    high_water = arena._bits_used
+
+    # growth doubles capacity; churn past half-empty compacts back down
+    for j in range(5):
+        arena.add(f"extra{j}", idxs[j % 3])
+    assert arena.capacity == 8
+    v = arena.version
+    for j in range(5):
+        arena.remove(f"extra{j}")
+    assert arena.version > v
+    assert arena.maybe_compact()
+    assert arena.capacity == 4 and len(arena) == 3
+    assert arena._bits_used <= high_water    # bitsets repacked dense
+    # compaction renumbers but keeps every live tenant addressable
+    assert {arena.slot_of(t) for t in arena.tenants} == {0, 1, 2}
+
+
+def test_grouped_executor_refcount_released_on_last_evict(fleet):
+    fused_lib.clear_cache()
+    _, idx = fleet["s0j0"]
+    srv = FilterServer(buckets=(32,), grouped=True)
+    srv.register("t1", idx)
+    srv.register("t2", fleet["s0j1"][1])
+    assert len(srv.registry.groups) == 1
+    key = next(iter(srv.registry.groups))
+    assert key in executors_lib._GROUPED
+    srv.query("t1", fleet["s0j0"][0].records[:8])
+    assert srv.stats_snapshot()["compiled_programs"] >= 1
+    srv.evict("t1")
+    assert key in executors_lib._GROUPED     # t2 still holds the group
+    srv.evict("t2")
+    assert key not in executors_lib._GROUPED
+    assert srv.stats_snapshot()["compiled_programs"] == 0
+    assert len(srv.registry.groups) == 0
+
+
+# ------------------------------------------------- end-to-end bit-exactness
+
+def _drive(srv, fleet, plan_rows, seed):
+    """Submit an interleaved request stream and return per-request
+    (answers, model_yes, backup_yes) triples after a full drain."""
+    corpora = {t: _probes(ds, 400, seed) for t, (ds, _) in fleet.items()}
+    reqs = []
+    for start, size in plan_rows:
+        for t in fleet:
+            reqs.append(srv.submit(t, corpora[t][start:start + size]))
+    srv.run_until_drained()
+    assert all(r.done and r.error is None for r in reqs)
+    return [(r.answers, r.model_yes, r.backup_yes) for r in reqs]
+
+
+@pytest.mark.parametrize("buckets,use_kernel,async_dispatch", [
+    ((32, 128), False, False),
+    ((64, 256, 1024), False, True),
+    ((32, 128), True, False),
+])
+def test_grouped_matches_local_bit_identical(fleet, buckets, use_kernel,
+                                             async_dispatch):
+    """The acceptance property: the grouped megabatch path changes not
+    one bit of any stage output vs per-tenant LocalExecutor serving —
+    odd request sizes, cross-tenant coalescing, both probe flavors."""
+    kw = dict(buckets=buckets, use_kernel=use_kernel, block_n=64)
+    srv_l = FilterServer(**kw)
+    srv_g = FilterServer(grouped=True, async_dispatch=async_dispatch, **kw)
+    for t, (_, idx) in fleet.items():
+        srv_l.register(t, idx)
+        srv_g.register(t, idx)
+    plan_rows = [(0, 13), (13, 57), (70, 128), (198, 202)]
+    got_l = _drive(srv_l, fleet, plan_rows, seed=5)
+    got_g = _drive(srv_g, fleet, plan_rows, seed=5)
+    for (la, lm, lb), (ga, gm, gb) in zip(got_l, got_g):
+        np.testing.assert_array_equal(ga, la)
+        np.testing.assert_array_equal(gm, lm)
+        np.testing.assert_array_equal(gb, lb)
+    # the grouped server actually megabatched (fewer, fuller dispatches)
+    assert srv_g.stats.totals.grouped > 0
+    assert srv_g.stats.totals.batches < srv_l.stats.totals.batches
+
+
+def test_grouped_churn_mid_stream_bit_identical(fleet, tmp_path):
+    """evict -> compact -> rehydrate between (and amid) request waves
+    must not change one answer bit: slots are reused/renumbered under a
+    live scheduler."""
+    srv_l = FilterServer(buckets=(32, 128))
+    srv_g = FilterServer(buckets=(32, 128), grouped=True)
+    for t, (_, idx) in fleet.items():
+        srv_l.register(t, idx)
+        srv_g.register(t, idx)
+
+    wave1_l = _drive(srv_l, fleet, [(0, 41)], seed=6)
+    wave1_g = _drive(srv_g, fleet, [(0, 41)], seed=6)
+
+    # churn: persist one tenant, evict enough of its group to trigger
+    # slot-freeing + compaction, then hydrate it back from checkpoint
+    srv_g.save("s0j0", str(tmp_path))
+    for t in ("s0j0", "s0j1"):
+        srv_g.evict(t)
+    arena = next(a for a in srv_g.registry.groups.values()
+                 if "s0j2" in a)
+    assert "s0j0" not in arena and len(arena) == 1
+    srv_g.load("s0j0", str(tmp_path))            # lands back in the arena
+    srv_g.register("s0j1", fleet["s0j1"][1])
+    assert len(arena) == 3 or "s0j0" in srv_g.registry.groups[arena.key]
+
+    # second wave mixes churned and untouched tenants mid-stream:
+    # submit, step once (a batch goes in flight), churn AGAIN, finish
+    corpora = {t: _probes(ds, 300, 7) for t, (ds, _) in fleet.items()}
+    reqs_g = [srv_g.submit(t, corpora[t][:150]) for t in fleet]
+    assert srv_g.step()
+    srv_g.evict("s1j1")
+    srv_g.register("s1j1", fleet["s1j1"][1])
+    srv_g.run_until_drained()
+    reqs_l = [srv_l.submit(t, corpora[t][:150]) for t in fleet]
+    srv_l.run_until_drained()
+    for g, l in zip(reqs_g, reqs_l):
+        assert g.done and g.error is None
+        np.testing.assert_array_equal(g.answers, l.answers)
+        np.testing.assert_array_equal(g.model_yes, l.model_yes)
+        np.testing.assert_array_equal(g.backup_yes, l.backup_yes)
+    for (la, lm, lb), (ga, gm, gb) in zip(wave1_l, wave1_g):
+        np.testing.assert_array_equal(ga, la)
+        np.testing.assert_array_equal(gm, lm)
+        np.testing.assert_array_equal(gb, lb)
+
+
+def test_out_of_vocab_ids_grouped_matches_local(fleet):
+    """Ids past the fitted cardinality must clamp exactly like the
+    local path's per-table gather — never walk into a neighbor tenant's
+    block of the combined embedding matrix."""
+    srv_l = FilterServer(buckets=(64,))
+    srv_g = FilterServer(buckets=(64,), grouped=True)
+    for t, (_, idx) in fleet.items():
+        srv_l.register(t, idx)
+        srv_g.register(t, idx)
+    rng = np.random.default_rng(11)
+    for t, (ds, _) in fleet.items():
+        wild = rng.integers(0, 10 ** 6,
+                            size=(40, ds.records.shape[1])).astype(np.int32)
+        np.testing.assert_array_equal(srv_g.query(t, wild),
+                                      srv_l.query(t, wild))
+
+
+def test_hot_swap_does_not_leak_arena_words(fleet):
+    """Repeated re-registration of one tenant (the re-fit hot-swap
+    path) must not grow the bitset arena without bound: the in-place
+    swap still compacts when dead words pile up."""
+    idxs = [fleet[f"s0j{j}"][1] for j in range(3)]
+    srv = FilterServer(buckets=(32,), grouped=True)
+    for j, idx in enumerate(idxs):
+        srv.register(f"t{j}", idx)
+    arena = next(iter(srv.registry.groups.values()))
+    for rep in range(30):       # alternate sizes so ranges can't reuse
+        srv.register("t0", idxs[rep % 2])
+    live = arena.live_words
+    assert arena._bits_used <= 2 * max(live, 32), \
+        f"bitset arena leaked: used {arena._bits_used} vs live {live}"
+
+
+def test_submit_many_atomic_on_bad_item(fleet):
+    """A validation failure mid-list must reject the WHOLE bulk submit
+    — no request from the same call may be silently queued with its
+    handle lost."""
+    _, idx = fleet["s0j0"]
+    ds = fleet["s0j0"][0]
+    srv = FilterServer(buckets=(32,), grouped=True)
+    srv.register("t", idx)
+    with pytest.raises(KeyError):
+        srv.submit_many([("t", ds.records[:4]), ("ghost", ds.records[:4])])
+    assert srv.scheduler.pending_rows == 0      # nothing half-admitted
+    with pytest.raises(ValueError):
+        srv.submit_many([("t", ds.records[:4]),
+                         ("t", ds.records[:4, :1])])
+    assert srv.scheduler.pending_rows == 0
+
+
+def test_arena_footprint_observable(fleet):
+    srv = FilterServer(buckets=(32,), grouped=True)
+    srv.register("t", fleet["s0j0"][1])
+    snap = srv.stats_snapshot()
+    assert snap["arena_mb"] > 0
+    assert snap["plan_groups"] == 1
+
+
+# -------------------------------------------------------- scheduler drain
+
+def test_run_until_drained_retires_inflight_past_step_budget(fleet):
+    """run_until_drained must NEVER return with batches in flight, even
+    when max_steps cuts the stepping loop short — and the forced retires
+    must land in ServeStats (batch count + latency)."""
+    ds, idx = fleet["s0j0"]
+    srv = FilterServer(buckets=(16,), async_dispatch=True)
+    srv.register("t", idx)
+    reqs = [srv.submit("t", ds.records[i * 16:(i + 1) * 16])
+            for i in range(4)]
+    steps = srv.scheduler.run_until_drained(max_steps=2)
+    assert steps == 2
+    assert srv.scheduler.inflight_batches == 0       # the drain contract
+    done = [r for r in reqs if r.done]
+    assert len(done) == 2                            # 2 dispatched batches
+    assert srv.stats.totals.batches == 2             # ...both accounted
+    assert srv.stats.batch_latency.summary("b_")["b_p50_ms"] > 0
+    srv.run_until_drained()                          # the rest still serve
+    assert all(r.done and r.answers.all() for r in reqs)
+    assert srv.scheduler.inflight_batches == 0
+
+
+# ------------------------------------------------------- back-compat shim
+
+def test_fused_shim_warns_and_delegates(fleet):
+    """fused.fused_query_fn must keep its pre-planner contract (same
+    callable for equal signatures, shared with the executor cache) while
+    warning that it is a shim — pinned so a later PR can remove it."""
+    _, idx = fleet["s0j0"]
+    cfg, fp = idx.cfg, idx.fixup_filter.params
+    fused_lib.clear_cache()
+    with pytest.warns(DeprecationWarning, match="back-compat shim"):
+        fn = fused_lib.fused_query_fn(cfg, fp)
+    with pytest.warns(DeprecationWarning):
+        assert fused_lib.fused_query_fn(cfg, fp) is fn   # shared callable
+    plan = plan_query(cfg, fp)
+    assert executors_lib.executor_for(plan).fn is fn     # same cache
+    ans, model, backup = fn(idx.params, idx.fixup_filter.bits, idx.tau,
+                            fleet["s0j0"][0].records[:32])
+    want = np.asarray(idx.query(fleet["s0j0"][0].records[:32]))
+    np.testing.assert_array_equal(np.asarray(ans), want)
+    assert fused_lib.compiled_program_count() >= 1
+    fused_lib.clear_cache()
+    assert fused_lib.compiled_program_count() == 0
