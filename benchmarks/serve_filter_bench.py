@@ -14,8 +14,15 @@ Tracks the batched-query serving trajectory of ``repro.serve_filter``:
   scenario this repo's grouped path targets: N lightly-loaded tenants
   each submitting K-row requests, where per-tenant dispatches can never
   fill a big bucket. ``--grouped`` additionally serves the same stream
-  through plan-group megabatching (``FilterServer(grouped=True)``) and
+  through plan-group megabatching (a grouped ``ServeConfig``) and
   reports the grouped-vs-ungrouped speedup,
+* ``--reload-every N`` turns the many-tenant scenario into a CHURN
+  scenario: every N fleet ticks one tenant hot-reloads to a re-fitted
+  index via ``TenantHandle.reload`` — under live traffic, mid-queue —
+  exercising the zero-drain swap path (and, grouped, the arena slot
+  swap). The reload schedule is deterministic and shared across modes,
+  so a post-churn verification tick still cross-checks grouped
+  bit-equal to ungrouped, and reload latency lands in the JSON rows,
 * ``--smoke`` is the CI fast path: a few hundred queries through the
   many-tenant scenario, grouped AND ungrouped, with a bit-equality
   cross-check instead of throughput assertions,
@@ -29,8 +36,8 @@ so the perf trajectory across PRs is recorded, not anecdotal.
 
 Usage: PYTHONPATH=src python benchmarks/serve_filter_bench.py
            [--executor {local,sharded}] [--shards N] [--async-dispatch]
-           [--tenants N] [--rows-per-request K] [--grouped] [--smoke]
-           [--json-out PATH]
+           [--tenants N] [--rows-per-request K] [--grouped]
+           [--reload-every N] [--smoke] [--json-out PATH]
 """
 from __future__ import annotations
 
@@ -63,6 +70,10 @@ def make_parser() -> argparse.ArgumentParser:
     ap.add_argument("--grouped", action="store_true",
                     help="also serve the many-tenant scenario through "
                          "plan-group megabatching and report the speedup")
+    ap.add_argument("--reload-every", type=int, default=0,
+                    help="many-tenant churn: hot-reload one tenant via "
+                         "TenantHandle.reload every N fleet ticks "
+                         "(0 disables)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI fast path: tiny many-tenant run (grouped + "
                          "ungrouped, bit-equality checked), no classic "
@@ -84,7 +95,8 @@ import numpy as np                                    # noqa: E402
 
 from repro.core import existence                      # noqa: E402
 from repro.data import tuples                         # noqa: E402
-from repro.serve_filter import FilterServer           # noqa: E402
+from repro.serve_filter import (FilterServer,         # noqa: E402
+                                ServeConfig, TenantSpec)
 
 BUCKETS = (64, 256, 1024)
 N_QUERIES = 4096            # per tenant per bucket measurement
@@ -126,10 +138,10 @@ def bench_served(tenants: Dict[str, tuple], bucket: int,
                  n_queries: int = N_QUERIES, *, mesh=None,
                  async_dispatch: bool = False) -> dict:
     """QPS through the full server at one request batch size."""
-    srv = FilterServer(buckets=BUCKETS, mesh=mesh,
-                       async_dispatch=async_dispatch)
+    srv = FilterServer(ServeConfig.from_kwargs(
+        buckets=BUCKETS, mesh=mesh, async_dispatch=async_dispatch))
     for name, (_, idx) in tenants.items():
-        srv.register(name, idx)
+        srv.admit(TenantSpec(name, index=idx))
     pools = {name: _query_pool(ds, n_queries, seed=1)
              for name, (ds, _) in tenants.items()}
 
@@ -161,33 +173,68 @@ def bench_served(tenants: Dict[str, tuple], bucket: int,
 
 
 def fit_fleet(n_tenants: int, steps: int = 30, n_bases: int = 4
-              ) -> Dict[str, tuple]:
+              ) -> tuple:
     """A fleet sharing ONE plan shape: ``n_bases`` distinct fits
     (distinct weights, tau, fixup m_bits) assigned round-robin, so the
     fleet is heterogeneous where tenants really differ but groupable —
     the regime the paper's "vast amounts of data" serving story lives
     in. Fitting every tenant separately would measure training, not
-    serving."""
+    serving. Returns ``(fleet, bases)`` — the bases double as reload
+    targets for the churn scenario."""
     st = existence.TrainSettings(steps=steps, n_pos=2000, n_neg=2000)
     bases = []
     for i in range(min(n_bases, n_tenants)):
         ds = tuples.synthesize([600, 400, 200], n_records=4000,
                                seed=40 + i)
         bases.append((ds, existence.fit(ds, theta=200, settings=st)))
-    return {f"tenant{i:03d}": bases[i % len(bases)]
-            for i in range(n_tenants)}
+    return ({f"tenant{i:03d}": bases[i % len(bases)]
+             for i in range(n_tenants)}, bases)
+
+
+class _ReloadChurn:
+    """Deterministic reload schedule for the churn scenario: every
+    ``every`` fleet ticks, the next tenant (rotating) hot-reloads to
+    the next base fit — mid-queue, so the swap happens under live
+    traffic. The schedule depends only on tick/reload counts, so the
+    grouped and ungrouped modes end every window with IDENTICAL
+    tenant->index mappings and the post-churn verification tick can
+    require bit-equality across modes."""
+
+    def __init__(self, srv: FilterServer, names, bases, every: int):
+        self.srv = srv
+        self.names = list(names)
+        self.bases = bases
+        self.every = every
+        self.ticks = 0
+        self.reloads = 0
+
+    def due(self) -> bool:
+        self.ticks += 1
+        return self.every > 0 and self.ticks % self.every == 0
+
+    def fire(self) -> None:
+        name = self.names[self.reloads % len(self.names)]
+        _, idx = self.bases[self.reloads % len(self.bases)]
+        self.srv.handle(name).reload(idx)
+        self.reloads += 1
 
 
 def _measure_window(srv: FilterServer, pools: Dict[str, np.ndarray],
-                    k: int, rounds: int) -> float:
+                    k: int, rounds: int,
+                    churn: Optional[_ReloadChurn] = None) -> float:
     """One measurement window: ``rounds`` fleet ticks (every tenant
     submits ONE k-row request per tick, submissions pipelined with the
-    in-flight dispatch), drained at the end. Returns q/s."""
+    in-flight dispatch), drained at the end; on churn ticks one tenant
+    hot-reloads after the first dispatch, with the rest of the tick's
+    rows still queued. Returns q/s."""
     sched = srv.scheduler
     items = [(name, pool[:k]) for name, pool in pools.items()]
     t0 = time.perf_counter()
     for _ in range(rounds):
         sched.submit_many(items)
+        if churn is not None and churn.due():
+            sched.step()        # a batch dispatches against the old epoch
+            churn.fire()        # ...then the swap lands under live load
         while sched.pending_rows:
             sched.step()
     sched.run_until_drained()
@@ -198,6 +245,7 @@ def _measure_window(srv: FilterServer, pools: Dict[str, np.ndarray],
 def run_many_tenant_scenario(*, tenants: int, rows_per_request: int,
                              grouped: bool, steps: int,
                              async_dispatch: bool = False,
+                             reload_every: int = 0,
                              target_queries: int = 16384,
                              repeats: int = 3) -> List[dict]:
     """The many-tenant low-load regime: every tenant lightly loaded
@@ -205,20 +253,23 @@ def run_many_tenant_scenario(*, tenants: int, rows_per_request: int,
     never fill a big bucket. Ungrouped always runs (the 'before');
     grouped additionally when asked (the 'after'), cross-checked
     bit-equal on a verification tick and tagged with the speedup.
+    ``reload_every`` > 0 adds hot-reload churn to every mode on a
+    shared deterministic schedule — a post-churn verification tick
+    re-checks grouped bit-equal to ungrouped AFTER the swaps.
 
     The two modes are measured in INTERLEAVED windows and summarized by
     the median, so an episodic slowdown of the host lands on both modes
     instead of silently skewing the ratio."""
-    fleet = fit_fleet(tenants, steps=steps)
+    fleet, bases = fit_fleet(tenants, steps=steps)
     k = rows_per_request
     modes = [False] + ([True] if grouped else [])
     ctx: Dict[bool, tuple] = {}
     answers: Dict[bool, dict] = {}
     for g in modes:
-        srv = FilterServer(buckets=BUCKETS, grouped=g,
-                           async_dispatch=async_dispatch)
+        srv = FilterServer(ServeConfig.from_kwargs(
+            buckets=BUCKETS, grouped=g, async_dispatch=async_dispatch))
         for name, (_, idx) in fleet.items():
-            srv.register(name, idx)
+            srv.admit(TenantSpec(name, index=idx))
         pools = {name: _query_pool(ds, max(k * 4, 64), seed=3)
                  for name, (ds, _) in fleet.items()}
         # verification tick: compiles everything AND captures answers
@@ -226,7 +277,9 @@ def run_many_tenant_scenario(*, tenants: int, rows_per_request: int,
             [(name, pool[:k]) for name, pool in pools.items()])))
         srv.run_until_drained()
         answers[g] = {name: r.answers.copy() for name, r in reqs.items()}
-        ctx[g] = (srv, pools)
+        churn = (_ReloadChurn(srv, sorted(fleet), bases, reload_every)
+                 if reload_every else None)
+        ctx[g] = (srv, pools, churn)
     if grouped:     # grouped answers must be bit-equal to ungrouped
         for name, ans in answers[True].items():
             np.testing.assert_array_equal(ans, answers[False][name])
@@ -235,13 +288,28 @@ def run_many_tenant_scenario(*, tenants: int, rows_per_request: int,
     qps: Dict[bool, List[float]] = {g: [] for g in modes}
     for _ in range(repeats):
         for g in modes:
-            qps[g].append(_measure_window(ctx[g][0], ctx[g][1], k,
-                                          rounds))
+            srv, pools, churn = ctx[g]
+            qps[g].append(_measure_window(srv, pools, k, rounds, churn))
     med = {g: sorted(qps[g])[len(qps[g]) // 2] for g in modes}
+
+    if grouped and reload_every:
+        # post-churn verification tick: the shared reload schedule left
+        # both modes with the same tenant->index mapping, so grouped
+        # answers must STILL be bit-equal to ungrouped after the swaps
+        post: Dict[bool, dict] = {}
+        for g in modes:
+            srv, pools, _ = ctx[g]
+            reqs = dict(zip(pools, srv.submit_many(
+                [(name, pool[:k]) for name, pool in pools.items()])))
+            srv.run_until_drained()
+            post[g] = {name: r.answers.copy()
+                       for name, r in reqs.items()}
+        for name, ans in post[True].items():
+            np.testing.assert_array_equal(ans, post[False][name])
 
     rows = []
     for g in modes:
-        srv = ctx[g][0]
+        srv, _, churn = ctx[g]
         snap = srv.stats_snapshot()
         row = {
             "scenario": "many_tenant",
@@ -259,6 +327,10 @@ def run_many_tenant_scenario(*, tenants: int, rows_per_request: int,
             "batch_p99_ms": round(snap["batch_p99_ms"], 3),
             "plan_groups": int(snap["plan_groups"]),
         }
+        if reload_every:
+            row["reload_every"] = reload_every
+            row["reloads"] = int(snap["reloads"])
+            row["reload_p99_ms"] = round(snap["reload_p99_ms"], 3)
         if g:
             row["speedup_vs_ungrouped"] = round(med[True] / med[False], 1)
         rows.append(row)
@@ -323,10 +395,13 @@ def _print_many_tenant(rows: List[dict]) -> None:
     print(hdr)
     for r in rows:
         mode = "grouped" if r["grouped"] else "ungrouped"
+        churn = (f"  reloads={r['reloads']} "
+                 f"(p99 {r['reload_p99_ms']}ms)"
+                 if "reloads" in r else "")
         print(f"{mode:>9} {r['tenants']:>7} {r['rows_per_request']:>8} "
               f"{r['qps']:>12.0f} {r['batches']:>8} "
               f"{r['batch_occupancy']:>9} "
-              f"{r.get('speedup_vs_ungrouped', ''):>8}")
+              f"{r.get('speedup_vs_ungrouped', ''):>8}{churn}")
 
 
 def main():
@@ -334,16 +409,25 @@ def main():
     if _ARGS.smoke:
         # CI fast signal: tiny fleet, few hundred queries through BOTH
         # paths, grouped answers cross-checked bit-equal to ungrouped
+        # (post-churn too when --reload-every adds hot-swap churn; the
+        # tick budget grows so the schedule actually fires)
         many = run_many_tenant_scenario(
             tenants=_ARGS.tenants or 8,
             rows_per_request=_ARGS.rows_per_request,
             grouped=True, steps=min(_ARGS.steps, 10),
-            target_queries=384, repeats=2)
+            reload_every=_ARGS.reload_every,
+            target_queries=1024 if _ARGS.reload_every else 384,
+            repeats=2)
         print("smoke: many-tenant scenario (grouped answers verified "
-              "bit-equal to ungrouped)")
+              "bit-equal to ungrouped"
+              + (", incl. post-reload-churn)" if _ARGS.reload_every
+                 else ")"))
         _print_many_tenant(many)
         assert any(r["grouped"] and r["grouped_batches"] > 0
                    for r in many), "grouped path never megabatched"
+        if _ARGS.reload_every:
+            assert all(r["reloads"] > 0 for r in many), \
+                "churn scenario never hot-reloaded"
         rows += many
     else:
         classic = run(executor=_ARGS.executor, shards=_ARGS.shards,
@@ -368,7 +452,8 @@ def main():
                 tenants=_ARGS.tenants,
                 rows_per_request=_ARGS.rows_per_request,
                 grouped=_ARGS.grouped, steps=_ARGS.steps,
-                async_dispatch=_ARGS.async_dispatch)
+                async_dispatch=_ARGS.async_dispatch,
+                reload_every=_ARGS.reload_every)
             print(f"\nmany-tenant low-load scenario "
                   f"({_ARGS.tenants} tenants x "
                   f"{_ARGS.rows_per_request}-row requests)")

@@ -43,3 +43,21 @@ print(f"\nmemory:  LMBF {uncompressed.keras_equiv_mb:.2f}MB -> "
       f"C-LMBF {compressed.keras_equiv_mb:.2f}MB "
       f"({uncompressed.keras_equiv_mb / compressed.keras_equiv_mb:.1f}x "
       f"smaller); classic BF {bf.size_mb:.2f}MB")
+
+# 6. Serve it: one frozen ServeConfig, a declarative TenantSpec, and a
+#    lifecycle handle. Queries come back as futures; when the data
+#    drifts and the index is re-fitted, handle.reload() swaps the new
+#    fit in atomically — no drain, no dropped rows.
+from repro.serve_filter import (BucketConfig, FilterServer, ServeConfig,
+                                TenantSpec)
+
+srv = FilterServer(ServeConfig(buckets=BucketConfig((256, 1024))))
+handle = srv.admit(TenantSpec("quickstart", index=idx))
+assert srv.submit("quickstart", ds.records[:1000]).result().all()
+refit = existence.fit(ds, theta=1000, ns=2,
+                      settings=existence.TrainSettings(steps=200, seed=1))
+handle.reload(refit)                  # atomic hot-swap under live traffic
+assert handle.query(ds.records[:1000]).all()
+print(f"served via FilterServer: state={handle.state.value} "
+      f"epoch={handle.epoch} "
+      f"(batched membership queries + zero-drain reload)")

@@ -1,10 +1,16 @@
-"""Filter-serving demo: sharded tenants, async dispatch, checkpoint hydration.
+"""Filter-serving demo: lifecycle API, hot-reload, sharded tenants, fleets.
 
-Fits a C-LMBF existence index for two tenants with different schemas,
-persists one through the checkpoint manager and hydrates it back (the
-production cold-start path — on a sharded registry the tables/bitset
-land directly on their shard slices), then serves an interleaved query
-stream through the batched fused path and prints the metrics surface.
+Fits a C-LMBF existence index for two tenants with different schemas
+and declares everything up front: ONE frozen ``ServeConfig`` (placement
+/ dispatch / probe sub-configs) and one ``TenantSpec`` per tenant.
+``server.admit(spec)`` returns the tenant's lifecycle handle; queries
+are futures (``submit(...).result()``). One tenant hydrates from a
+checkpoint (the production cold-start path — on a sharded registry the
+tables/bitset land directly on their shard slices); the demo then
+serves an interleaved query stream and HOT-RELOADS a re-fitted index
+mid-stream with ``handle.reload`` — zero drain: rows dispatched before
+the swap answer from the old fit, rows after from the new one, and the
+reload latency lands in the stats surface.
 
 By default the demo runs the full mesh-scalable pipeline on a forced
 2-device CPU mesh (``--shards``): the planner assigns every tenant a
@@ -61,7 +67,10 @@ import numpy as np                                    # noqa: E402
 
 from repro.core import existence                      # noqa: E402
 from repro.data import tuples                         # noqa: E402
-from repro.serve_filter import FilterServer           # noqa: E402
+from repro.serve_filter import (BucketConfig,         # noqa: E402
+                                DispatchConfig, FilterServer,
+                                GroupingConfig, PlacementConfig,
+                                ProbeConfig, ServeConfig, TenantSpec)
 
 
 def main(args=_ARGS):
@@ -89,34 +98,54 @@ def main(args=_ARGS):
     ds_b = tuples.synthesize([50, 1200, 400], n_records=5000, seed=12)
     idx_b = existence.fit(ds_b, theta=300, settings=st)
 
-    srv = FilterServer(buckets=(64, 256, 1024),
-                       use_kernel=args.use_kernel,
-                       mesh=mesh,
-                       async_dispatch=not args.sync)
-    entry = srv.register("flights", idx_a)
+    # ONE frozen declarative config instead of the old kwarg soup
+    config = ServeConfig(
+        buckets=BucketConfig((64, 256, 1024)),
+        placement=PlacementConfig(mesh=mesh),
+        dispatch=DispatchConfig(async_dispatch=not args.sync),
+        probe=ProbeConfig(use_kernel=args.use_kernel))
+    srv = FilterServer(config)
+    flights = srv.admit(TenantSpec("flights", index=idx_a))
+    entry = flights.entry
     print(f"planner placed 'flights' as {entry.plan.placement.kind} "
           f"({entry.plan.placement.n_shards} shard(s)); "
-          f"dispatch={'sync' if args.sync else 'async double-buffered'}")
+          f"dispatch={'sync' if args.sync else 'async double-buffered'}; "
+          f"lifecycle={flights.state.value}")
 
     # cold-start path: persist + hydrate the second tenant from disk
     with tempfile.TemporaryDirectory() as tmp:
         existence.save_index(f"{tmp}/vehicles", idx_b)
-        srv.load("vehicles", tmp)
+        vehicles = srv.admit(TenantSpec("vehicles", checkpoint=tmp))
         print(f"hydrated 'vehicles' from checkpoint "
               f"({srv.registry.total_mb:.3f} MB registered)")
 
         rng = np.random.default_rng(0)
-        reqs = []
+        futs = []
         for i in range(0, args.queries, 128):
-            reqs.append(("flights", srv.submit(
-                "flights", ds_a.records[i:i + 128])))
+            futs.append(("flights", flights.submit(
+                ds_a.records[i:i + 128])))
             probe = np.stack([rng.integers(1, v, 128) for v in ds_b.cards],
                              axis=-1).astype(np.int32)
-            reqs.append(("vehicles", srv.submit("vehicles", probe)))
+            futs.append(("vehicles", vehicles.submit(probe)))
+
+        # zero-drain hot-reload: re-fit 'flights' on the SAME records
+        # and swap it in while the stream above is still being served —
+        # rows dispatched before the swap answered from the old fit,
+        # the rest answer from the new one, and the no-false-negative
+        # contract holds for both epochs (same indexed positives)
+        srv.step()                              # some batches go out...
+        refit = existence.fit(ds_a, theta=250, settings=existence.
+                              TrainSettings(steps=max(args.steps // 2, 20),
+                                            n_pos=4000, n_neg=4000,
+                                            seed=99))
+        flights.reload(refit)
+        print(f"hot-reloaded 'flights' mid-stream (epoch "
+              f"{flights.epoch}, no drain)")
         srv.run_until_drained()
 
-    # the Bloom contract survives serving: indexed rows all answer True
-    fn = sum((~r.answers[:]).sum() for t, r in reqs if t == "flights")
+    # the Bloom contract survives serving AND the mid-stream reload:
+    # indexed rows all answer True under either epoch's index
+    fn = sum((~f.answers[:]).sum() for t, f in futs if t == "flights")
     print(f"false negatives on indexed positives: {fn} (must be 0)")
     assert fn == 0
 
@@ -124,7 +153,8 @@ def main(args=_ARGS):
     for k in ("queries", "batches", "qps", "batch_occupancy",
               "model_pos_rate", "fixup_hit_rate", "positive_rate",
               "batch_p50_ms", "batch_p99_ms", "overlapped_batches",
-              "registered_filters", "registry_mb", "compiled_programs"):
+              "registered_filters", "registry_mb", "compiled_programs",
+              "reloads", "reload_p50_ms", "lifecycle_serving"):
         print(f"  {k:>20} = {snap[k]:.4g}")
 
     if args.tenants:
@@ -152,9 +182,11 @@ def fleet_demo(n_tenants, idx_a, idx_b, ds_a, ds_b):
 
     results = {}
     for grouped in (False, True):
-        srv = FilterServer(buckets=(64, 256, 1024), grouped=grouped)
+        srv = FilterServer(ServeConfig(
+            buckets=BucketConfig((64, 256, 1024)),
+            grouping=GroupingConfig(enabled=grouped)))
         for name, (_, idx) in fleet.items():
-            srv.register(name, idx)
+            srv.admit(TenantSpec(name, index=idx))
         items = [(name, pool[:16]) for name, pool in pools.items()]
         reqs = srv.submit_many(items)       # warmup tick (compiles)
         srv.run_until_drained()

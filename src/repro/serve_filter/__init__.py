@@ -2,102 +2,140 @@
 
 The paper's C-LMBF pays off "when considering a vast amount of data" —
 i.e. as a *service* answering membership queries at high QPS, not a
-one-shot ``ExistenceIndex.query``. This package is that service,
-structured as a **planner/executor** stack:
+one-shot ``ExistenceIndex.query``. This package is that service: a
+**planner/executor** stack under a **declarative config + tenant
+lifecycle** API.
 
 Module map
 ==========
 
+``config``
+    The public vocabulary: :class:`ServeConfig` — ONE frozen config
+    composed of placement / dispatch / grouping / bucket / probe /
+    metrics sub-configs (replacing the old 11-kwarg ``FilterServer``
+    constructor) — :class:`TenantSpec` (tenant id + source: in-memory
+    index or checkpoint dir + pin/grouping hints), and
+    :class:`TenantState`, the lifecycle every tenant moves through::
+
+        ADMITTED -> HYDRATING -> SERVING -> DRAINING -> RETIRED
+                        ^            |
+                        +-- reload --+
+
 ``plan``
     :class:`QueryPlan` — a frozen, hashable description of HOW a filter
     runs: plan shape (``LMBFConfig`` + ``BloomParams``), probe flavor
-    (pure-JAX vs Pallas kernel), and :class:`Placement` (local vs
-    mesh-sharded). :func:`plan_query` is the planner: config + fixup
-    params + an optional target ``Mesh`` in, plan out.
+    (:class:`ProbeConfig`: pure-JAX vs Pallas kernel), and
+    :class:`Placement` (local vs mesh-sharded). :func:`plan_query` is
+    the planner: config + fixup params + an optional target ``Mesh``
+    in, plan out.
 
 ``executors``
-    Pluggable compiled query paths behind one interface.
-    :class:`LocalExecutor` jits ``existence.query_stages`` on one
-    device (the original fused path); :class:`ShardedExecutor` runs the
-    same pipeline under ``shard_map`` with embedding tables row-sharded
-    and the fixup bitset word-sharded over a mesh axis — masked local
-    gathers + one ``psum`` rebuild the features, per-shard word-offset
-    probes + one ``psum`` combine the Bloom answer, bit-identical to
-    local by construction. :class:`GroupedExecutor` is the megabatch
-    path: one program per (group key, bucket) takes a per-row
-    ``tenant_idx`` into a stacked arena and answers MANY tenants per
-    device call — bit-identical to local, property-tested. Executors
-    are cached per plan (grouped: per group key) so tenants with equal
-    plans share compiled programs.
+    Pluggable compiled query paths behind one interface:
+    :class:`LocalExecutor` (single-device fused path),
+    :class:`ShardedExecutor` (same pipeline under ``shard_map``, tables
+    row-sharded + bitset word-sharded, bit-identical to local), and
+    :class:`GroupedExecutor` (megabatch path: one program per (group
+    key, bucket) answers MANY tenants per device call). Executors are
+    cached per plan / group key and are stateless w.r.t. tenant arrays
+    — the property that makes zero-drain hot-reload safe.
 
 ``arena``
     :class:`PlanGroupArena` — stacked device residence for a plan
-    group: embedding tables and MLP weights stacked on a leading tenant
-    axis, fixup bitsets concatenated with per-tenant word base offsets,
-    per-tenant ``tau``/``m_bits`` vectors. Slot reuse + compaction keep
-    LRU churn from leaking arena rows.
+    group (combined embedding matrix, per-slot dense weights,
+    concatenated fixup bitsets). Slot reuse + compaction keep LRU churn
+    from leaking arena rows; :meth:`~PlanGroupArena.swap` hot-reloads
+    one member's slot in place.
 
 ``registry``
-    :class:`FilterRegistry` — loads/owns many fitted ``ExistenceIndex``
-    instances keyed by tenant/dataset id. Entries carry their plan,
-    executor, and device placement (hydrated tenants land directly on
-    their shard). Per-filter memory accounting, an optional total
-    budget with LRU eviction (evicting the last tenant on a plan also
-    releases its cached executor), and checkpoint hydration.
+    :class:`FilterRegistry` — owns the tenants and DRIVES the
+    lifecycle: :meth:`~FilterRegistry.admit` takes a ``TenantSpec``
+    through ADMITTED/HYDRATING/SERVING (re-admitting a SERVING tenant
+    is the hot-reload path, epoch-bumped, atomic, no drain);
+    ``begin_drain``/``evict`` finish the retirement. Budgeted LRU
+    eviction (pinned tenants exempt), checkpoint hydration, per-plan
+    executor refcounts. Every transition is validated and reported to
+    the stats hook.
 
 ``scheduler``
     :class:`QueryScheduler` — admission queue + micro-batching with
-    padding buckets, round-robin across tenants. ``step()`` is split
-    into a host prepare half and an async device dispatch half; with
-    ``async_dispatch=True`` a double-buffered in-flight slot overlaps
-    padding batch *t+1* with computing batch *t*. Coalescing is
-    group-aware: a grouped tenant's dispatch tops its bucket up with
-    same-group siblings' rows, so fleets of lightly-loaded filters ride
-    large-bucket megabatches.
+    padding buckets, round-robin across tenants, group-aware megabatch
+    coalescing, async double-buffered dispatch. Completion is a
+    futures surface: :class:`QueryFuture` (``result(timeout)``,
+    ``exception()``, bulk :func:`wait_all`), resolved by the scheduler
+    at retire time and scoped to its own request — no
+    drain-the-world side effects.
 
 ``stats``
     :class:`ServeStats` — QPS, batch occupancy, p50/p99 latency,
-    per-stage positive counters, overlapped-batch count, feeding
-    ``runtime.MetricsLogger``'s JSONL stream.
+    per-stage positive counters, lifecycle-transition counters, reload
+    latency, feeding ``runtime.MetricsLogger``'s JSONL stream.
 
 ``server``
-    :class:`FilterServer` — the facade wiring the five together.
-
-``fused``
-    Back-compat shim: the pre-planner ``fused_query_fn`` surface,
-    delegating to ``plan`` + ``executors``.
+    :class:`FilterServer` — the facade: ``FilterServer(ServeConfig())``,
+    ``admit(spec) -> TenantHandle`` (whose headline method is
+    ``handle.reload(new_index | checkpoint=...)``), ``submit ->
+    QueryFuture``. The old ``register``/``load``/``query`` and the
+    kwarg constructor survive as thin ``DeprecationWarning`` wrappers.
 
 Entry points
 ============
 
 * demo:      ``PYTHONPATH=src python examples/serve_filter.py``
-  (``--shards N --async-dispatch`` for the mesh-sharded pipeline)
+  (``--shards N --async-dispatch`` for the mesh-sharded pipeline; the
+  demo hot-reloads a tenant under live traffic and runs the fleet
+  megabatch phase)
 * benchmark: ``PYTHONPATH=src python benchmarks/serve_filter_bench.py
-  [--executor {local,sharded}] [--async-dispatch]``
+  [--executor {local,sharded}] [--async-dispatch] [--tenants N
+  --grouped] [--reload-every N]``
 * tests:     ``tests/test_serve_filter.py`` (served answers are
   property-tested bit-identical to direct ``ExistenceIndex.query``),
+  ``tests/test_serve_grouped.py`` (grouped == local, incl. churn),
+  ``tests/test_serve_lifecycle.py`` (config/lifecycle/futures surface,
+  reload-under-traffic epoch correctness),
   ``tests/test_serve_sharded.py`` (sharded == local, multi-device).
 
-Scale work still open (see ROADMAP): tenant hot-reload (swap a
-re-fitted index without draining), cross-host registry federation.
+Migration (old API -> new)
+==========================
+
+====================================  =================================
+old                                   new
+====================================  =================================
+``FilterServer(budget_mb=..., ...)``  ``FilterServer(ServeConfig(...))``
+``server.register(t, idx)``           ``server.admit(TenantSpec(t, index=idx))``
+``server.load(t, dir)``               ``server.admit(TenantSpec(t, checkpoint=dir))``
+``server.register(t, refit_idx)``     ``handle.reload(refit_idx)``
+``server.evict(t)``                   ``handle.retire()`` (graceful)
+``req = server.submit(...); polling`` ``fut = server.submit(...); fut.result()``
+``server.query(t, ids)``              ``server.submit(t, ids).result()``
+``serve_filter.fused`` (removed)      ``plan.plan_query`` + ``executors``
+====================================  =================================
+
+Scale work still open (see ROADMAP): cross-host registry federation,
+grouped+sharded composition.
 """
 from repro.serve_filter.arena import PlanGroupArena
+from repro.serve_filter.config import (BucketConfig, DispatchConfig,
+                                       GroupingConfig, MetricsConfig,
+                                       PlacementConfig, ServeConfig,
+                                       TenantSpec, TenantState)
 from repro.serve_filter.executors import (Executor, GroupedExecutor,
                                           LocalExecutor, PlacedFilter,
                                           ShardedExecutor,
                                           acquire_executor,
                                           acquire_grouped_executor,
+                                          clear_executors,
                                           compiled_program_count,
                                           executor_for,
                                           grouped_executor_for,
                                           release_executor,
                                           release_grouped_executor,
                                           release_plan)
-from repro.serve_filter.fused import fused_query_fn
-from repro.serve_filter.plan import (GroupKey, Placement, QueryPlan,
-                                     group_key, plan_query)
+from repro.serve_filter.plan import (GroupKey, Placement, ProbeConfig,
+                                     QueryPlan, group_key, plan_query)
 from repro.serve_filter.registry import FilterEntry, FilterRegistry
-from repro.serve_filter.scheduler import (DEFAULT_BUCKETS, QueryRequest,
-                                          QueryScheduler, bucket_for)
-from repro.serve_filter.server import FilterServer
+from repro.serve_filter.scheduler import (DEFAULT_BUCKETS,
+                                          FilterServeError, QueryFuture,
+                                          QueryRequest, QueryScheduler,
+                                          bucket_for, wait_all)
+from repro.serve_filter.server import FilterServer, TenantHandle
 from repro.serve_filter.stats import ServeStats

@@ -132,12 +132,14 @@ class PlanGroupArena:
             prefix += rows
         return starts
 
-    def add(self, tenant: str, index: existence.ExistenceIndex) -> int:
-        """Stack a fitted index into the arena; returns its slot id.
-        Re-adding a tenant (hot-swap) releases its old slot first."""
-        if tenant in self._slots:
-            self.remove(tenant)
-        slot = self._free.pop() if self._free else self._grow_one()
+    def _write_slot(self, slot: int,
+                    index: existence.ExistenceIndex) -> None:
+        """Write a fitted index's payload into an OWNED slot whose
+        bitset word range is already allocated (``word_base`` /
+        ``word_len`` set for this index's filter): dense params,
+        embedding blocks, tau, bitset words, m_bits. Shared by admit
+        (:meth:`add`) and hot-reload (:meth:`swap`) so the two paths
+        can never drift."""
         for name, arr in index.params["dense"].items():
             self._params["dense"][name][slot] = np.asarray(arr)
         starts = self._emb_starts(self.capacity)
@@ -147,13 +149,55 @@ class PlanGroupArena:
                              start + (slot + 1) * rows, :e] = tbl
         self._tau[slot] = np.float32(index.tau)
         fp = index.fixup_filter.params
-        base = self._alloc_words(fp.n_words)
+        base = int(self._word_base[slot])
         self._bits[base:base + fp.n_words] = \
             np.asarray(index.fixup_filter.bits)
         self._m_bits[slot] = fp.m_bits
-        self._word_base[slot] = base
+
+    def add(self, tenant: str, index: existence.ExistenceIndex) -> int:
+        """Stack a fitted index into the arena; returns its slot id.
+        Re-adding a tenant (hot-swap) releases its old slot first."""
+        if tenant in self._slots:
+            self.remove(tenant)
+        slot = self._free.pop() if self._free else self._grow_one()
+        fp = index.fixup_filter.params
+        self._word_base[slot] = self._alloc_words(fp.n_words)
         self._word_len[slot] = fp.n_words
+        self._write_slot(slot, index)
         self._slots[tenant] = slot
+        self._touch()
+        return slot
+
+    def swap(self, tenant: str, index: existence.ExistenceIndex) -> int:
+        """Hot-reload a member IN PLACE: overwrite the tenant's slot
+        with a re-fitted index without releasing the slot id — the
+        zero-drain reload path. The group key guarantees the new
+        index's table rows and dense shapes match the arena layout, so
+        only the payloads change; the bitset word range is reused when
+        the new filter's word count matches, else reallocated (the old
+        range is freed for first-fit reuse — the registry's
+        ``maybe_compact`` bounds the waste across repeated reloads).
+
+        Host mirrors mutate, but batches already dispatched hold the
+        PREVIOUS device views (``device_arrays`` snapshots bound at
+        dispatch time) and retire against them; the next dispatch
+        materializes fresh views. Returns the (unchanged) slot id.
+        """
+        slot = self._slots[tenant]
+        fp = index.fixup_filter.params
+        base, length = int(self._word_base[slot]), int(self._word_len[slot])
+        if fp.n_words != length:
+            # allocate the NEW range before touching the old one: if
+            # allocation fails (growth OOM), the registry rolls the
+            # tenant back to SERVING on its old epoch — which is only
+            # sound if the old bitset is still intact
+            new_base = self._alloc_words(fp.n_words)
+            if length:
+                self._bits[base:base + length] = 0
+                self._free_ranges.append((base, length))
+            self._word_base[slot] = new_base
+            self._word_len[slot] = fp.n_words
+        self._write_slot(slot, index)
         self._touch()
         return slot
 
@@ -188,17 +232,30 @@ class PlanGroupArena:
         return True
 
     # ------------------------------------------------------------ serving
+    @staticmethod
+    def _snap(v: np.ndarray) -> jnp.ndarray:
+        """Device view of a PRIVATE copy of a host mirror. The copy is
+        load-bearing: JAX may perform the host->device transfer
+        asynchronously, so handing it the live mirror races an
+        in-place ``swap``/``remove`` mutating that memory right after
+        a dispatch — an in-flight batch could observe the NEXT epoch's
+        bytes. A private copy is never mutated, so batches always
+        retire against the arrays they were dispatched with (the
+        zero-drain reload guarantee)."""
+        return jnp.asarray(v.copy())
+
     def device_arrays(self):
         """(params, bits, tau, m_bits, word_base) as device arrays —
-        cached until the next mutation."""
+        snapshots of the mirrors, cached until the next mutation."""
         if self._device is None:
-            params = {g: {k: jnp.asarray(v) for k, v in d.items()}
+            snap = self._snap
+            params = {g: {k: snap(v) for k, v in d.items()}
                       for g, d in self._params.items()}
-            params["embed_flat"] = jnp.asarray(self._embed_flat)
-            self._device = (params, jnp.asarray(self._bits),
-                            jnp.asarray(self._tau),
-                            jnp.asarray(self._m_bits),
-                            jnp.asarray(self._word_base))
+            params["embed_flat"] = snap(self._embed_flat)
+            self._device = (params, snap(self._bits),
+                            snap(self._tau),
+                            snap(self._m_bits),
+                            snap(self._word_base))
         return self._device
 
     def run(self, raw_ids, tenant_idx):

@@ -1,0 +1,207 @@
+"""Declarative serving configuration and the tenant lifecycle vocabulary.
+
+``FilterServer`` used to be configured through an 11-kwarg constructor
+whose flags fanned out to the registry, scheduler, planner, and metrics
+logger by name. This module replaces that kwarg soup with a frozen
+:class:`ServeConfig` composed of small orthogonal sub-configs — each one
+names the subsystem it parameterizes:
+
+* :class:`BucketConfig`    — the scheduler's padding-bucket ladder;
+* :class:`PlacementConfig` — the planner's target mesh + shard axis
+  (``None`` = local placement);
+* :class:`DispatchConfig`  — async double-buffering and the in-flight cap;
+* :class:`GroupingConfig`  — plan-group megabatching + the tile granule;
+* :class:`~repro.serve_filter.plan.ProbeConfig` — fixup-probe flavor
+  (pure JAX vs the Pallas kernel; defined next to the planner, re-exported
+  here);
+* :class:`MetricsConfig`   — the JSONL metrics sink.
+
+Being frozen, a ``ServeConfig`` is a value: it can be built once at
+deploy time, logged, compared, and handed to any number of servers —
+nothing about it mutates as tenants come and go.
+
+Tenants are declared the same way: a :class:`TenantSpec` names the
+tenant, its **source** (exactly one of an in-memory fitted
+``ExistenceIndex`` or a checkpoint directory to hydrate from), and its
+placement hints (``pinned`` exempts it from LRU budget eviction;
+``groupable=False`` keeps a heavy tenant out of plan-group arenas even
+on a grouped server). ``server.admit(spec)`` turns the spec into a live
+:class:`~repro.serve_filter.server.TenantHandle`.
+
+:class:`TenantState` is the per-tenant lifecycle the registry drives::
+
+    ADMITTED -> HYDRATING -> SERVING -> DRAINING -> RETIRED
+                    ^            |
+                    +-- reload --+
+
+``handle.reload()`` re-enters HYDRATING from SERVING (an atomic swap —
+no drain, no dropped rows) and returns to SERVING; every transition is
+counted by ``ServeStats``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional, Sequence, Tuple
+
+from jax.sharding import Mesh
+
+from repro.core import existence
+from repro.serve_filter.plan import DEFAULT_TILE_ROWS, ProbeConfig
+
+# the scheduler's historical default ladder (re-exported by scheduler.py)
+DEFAULT_BUCKETS = (64, 256, 1024, 4096)
+
+
+class TenantState(enum.Enum):
+    """Lifecycle of one tenant inside a registry/server."""
+    ADMITTED = "admitted"      # spec accepted, nothing on device yet
+    HYDRATING = "hydrating"    # loading + placing arrays (also: reloading)
+    SERVING = "serving"        # live, accepting submissions
+    DRAINING = "draining"      # submissions rejected, queued work finishing
+    RETIRED = "retired"        # gone from the registry
+
+
+# legal transitions; None is the pre-admission pseudo-state
+LIFECYCLE_TRANSITIONS = {
+    None: (TenantState.ADMITTED,),
+    TenantState.ADMITTED: (TenantState.HYDRATING,),
+    TenantState.HYDRATING: (TenantState.SERVING,
+                            TenantState.RETIRED),  # failed fresh hydration
+    TenantState.SERVING: (TenantState.HYDRATING,   # hot-reload re-entry
+                          TenantState.DRAINING),
+    TenantState.DRAINING: (TenantState.RETIRED,),
+    TenantState.RETIRED: (),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketConfig:
+    """The scheduler's padding-bucket ladder: every dispatch is padded
+    up to the smallest bucket that fits, so the number of compiled
+    (plan-shape, batch-shape) programs stays bounded."""
+    sizes: Tuple[int, ...] = DEFAULT_BUCKETS
+
+    def __post_init__(self):
+        sizes = tuple(sorted(int(b) for b in self.sizes))
+        if not sizes or sizes[0] < 1:
+            raise ValueError("buckets must be a non-empty ladder of "
+                             "positive sizes")
+        object.__setattr__(self, "sizes", sizes)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementConfig:
+    """Where tenants' arrays live: ``mesh=None`` plans local placement;
+    a mesh whose ``shard_axis`` has >= 2 devices plans sharded placement
+    (tables row-sharded, fixup bitset word-sharded over that axis)."""
+    mesh: Optional[Mesh] = None
+    shard_axis: str = "data"
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchConfig:
+    """Host-side dispatch pipelining: ``async_dispatch=True`` keeps up
+    to ``max_inflight`` dispatched batches un-retired so host padding
+    overlaps device compute (2 = classic double buffer)."""
+    async_dispatch: bool = False
+    max_inflight: int = 2
+
+    def __post_init__(self):
+        if self.max_inflight < 1:
+            raise ValueError("max_inflight must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupingConfig:
+    """Plan-group megabatching: stack same-group-key tenants into one
+    device arena so a single dispatch answers many lightly-loaded
+    tenants. ``tile_rows`` is the single-tenant tile granule."""
+    enabled: bool = False
+    tile_rows: int = DEFAULT_TILE_ROWS
+
+    def __post_init__(self):
+        if self.tile_rows < 1:
+            raise ValueError("tile_rows must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricsConfig:
+    """JSONL metrics sink (``runtime.MetricsLogger``); both fields off
+    means no logger is constructed."""
+    path: Optional[str] = None
+    echo: bool = False
+
+    @property
+    def enabled(self) -> bool:
+        return bool(self.path or self.echo)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Frozen, declarative configuration for a whole ``FilterServer``."""
+    budget_mb: Optional[float] = None
+    buckets: BucketConfig = BucketConfig()
+    placement: PlacementConfig = PlacementConfig()
+    dispatch: DispatchConfig = DispatchConfig()
+    grouping: GroupingConfig = GroupingConfig()
+    probe: ProbeConfig = ProbeConfig()
+    metrics: MetricsConfig = MetricsConfig()
+
+    @classmethod
+    def from_kwargs(cls, *, budget_mb: Optional[float] = None,
+                    buckets: Sequence[int] = DEFAULT_BUCKETS,
+                    use_kernel: bool = False,
+                    interpret: Optional[bool] = None,
+                    block_n: int = 2048,
+                    mesh: Optional[Mesh] = None,
+                    shard_axis: str = "data",
+                    async_dispatch: bool = False,
+                    max_inflight: int = 2,
+                    grouped: bool = False,
+                    tile_rows: int = DEFAULT_TILE_ROWS,
+                    metrics_path: Optional[str] = None,
+                    metrics_echo: bool = False) -> "ServeConfig":
+        """Bridge from the legacy ``FilterServer`` kwarg surface (the
+        deprecated constructor routes through here)."""
+        return cls(
+            budget_mb=budget_mb,
+            buckets=BucketConfig(tuple(buckets)),
+            placement=PlacementConfig(mesh=mesh, shard_axis=shard_axis),
+            dispatch=DispatchConfig(async_dispatch=bool(async_dispatch),
+                                    max_inflight=int(max_inflight)),
+            grouping=GroupingConfig(enabled=bool(grouped),
+                                    tile_rows=int(tile_rows)),
+            probe=ProbeConfig(use_kernel=bool(use_kernel),
+                              interpret=interpret, block_n=int(block_n)),
+            metrics=MetricsConfig(path=metrics_path,
+                                  echo=bool(metrics_echo)))
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class TenantSpec:
+    """Declarative description of one tenant: id, source, placement
+    hints. Exactly one source must be given — an in-memory fitted
+    ``index``, or a ``checkpoint`` directory (the tenant hydrates from
+    ``<checkpoint>/<tenant>``, optionally at a specific ``step``).
+
+    ``pinned`` tenants are never LRU-evicted by the memory budget;
+    ``groupable=False`` opts a tenant out of plan-group arenas (a heavy
+    tenant that fills buckets alone gains nothing from megabatching and
+    would drag arena recompiles behind it)."""
+    tenant: str
+    index: Optional[existence.ExistenceIndex] = None
+    checkpoint: Optional[str] = None
+    step: Optional[int] = None
+    pinned: bool = False
+    groupable: bool = True
+
+    def __post_init__(self):
+        if not self.tenant or not isinstance(self.tenant, str):
+            raise ValueError("tenant must be a non-empty string")
+        if (self.index is None) == (self.checkpoint is None):
+            raise ValueError(
+                f"tenant {self.tenant!r} needs exactly one source: an "
+                "in-memory index or a checkpoint directory")
+        if self.step is not None and self.checkpoint is None:
+            raise ValueError("step only applies to a checkpoint source")

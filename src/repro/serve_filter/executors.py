@@ -44,6 +44,16 @@ programs; the registry's eviction hooks (:func:`release_plan`,
 :func:`release_grouped_executor`) drop cache entries once no tenant
 references them. :func:`compiled_program_count` sums live XLA programs
 across all cached executors for the stats surface.
+
+Hot-reload contract: executors are STATELESS with respect to tenant
+arrays — every dispatch binds the arrays it was handed (a
+:class:`PlacedFilter`, or an arena's device views) at call time, and
+JAX arrays are immutable. A tenant reload therefore never touches the
+executor or its compiled programs: the registry installs a fresh
+``PlacedFilter`` (or swaps the arena slot) and batches already
+dispatched keep computing against the arrays they captured — which is
+what lets ``TenantHandle.reload`` swap a re-fitted index with no drain
+and no misanswered in-flight rows.
 """
 from __future__ import annotations
 

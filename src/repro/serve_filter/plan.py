@@ -48,6 +48,22 @@ PROBE_KERNEL = "kernel"    # kernels/bloom_query Pallas probe
 
 
 @dataclasses.dataclass(frozen=True)
+class ProbeConfig:
+    """How the fixup Bloom filter is probed: pure JAX (default) or the
+    ``kernels/bloom_query`` Pallas kernel (``use_kernel=True``), with
+    the kernel's interpret-mode override and key-block size. One of the
+    declarative sub-configs of :class:`repro.serve_filter.config.ServeConfig`;
+    defined here because the planner consumes it directly."""
+    use_kernel: bool = False
+    interpret: Optional[bool] = None
+    block_n: int = 2048
+
+    def __post_init__(self):
+        if self.block_n < 1:
+            raise ValueError("block_n must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
 class Placement:
     """Where a tenant's arrays live.
 
@@ -146,6 +162,7 @@ def group_key(plan: QueryPlan,
 
 def plan_query(cfg: lmbf.LMBFConfig, fixup_params: bloom.BloomParams, *,
                mesh: Optional[Mesh] = None, shard_axis: str = "data",
+               probe: Optional[ProbeConfig] = None,
                use_kernel: bool = False, interpret: Optional[bool] = None,
                block_n: int = 2048) -> QueryPlan:
     """Resolve config + fixup params + target mesh into a QueryPlan.
@@ -154,12 +171,20 @@ def plan_query(cfg: lmbf.LMBFConfig, fixup_params: bloom.BloomParams, *,
     ``shard_axis`` with size >= 2; otherwise local (a 1-device mesh and
     no mesh at all plan identically, so tests/dev boxes share cache
     entries with production single-device tenants).
+
+    The probe flavor comes from ``probe`` (a :class:`ProbeConfig`, the
+    declarative form the config/lifecycle surface passes down) or, when
+    omitted, from the loose ``use_kernel``/``interpret``/``block_n``
+    kwargs.
     """
+    if probe is None:
+        probe = ProbeConfig(use_kernel=use_kernel, interpret=interpret,
+                            block_n=int(block_n))
     placement = Placement()
     if mesh is not None and mesh.shape.get(shard_axis, 1) > 1:
         placement = Placement(kind=SHARDED, axis=shard_axis,
                               n_shards=int(mesh.shape[shard_axis]))
     return QueryPlan(cfg=cfg, fixup_params=fixup_params,
-                     probe=PROBE_KERNEL if use_kernel else PROBE_JAX,
-                     interpret=interpret, block_n=int(block_n),
+                     probe=PROBE_KERNEL if probe.use_kernel else PROBE_JAX,
+                     interpret=probe.interpret, block_n=int(probe.block_n),
                      placement=placement)

@@ -1,4 +1,4 @@
-"""Multi-tenant filter registry: owns fitted indexes + their placement.
+"""Multi-tenant filter registry: placement + an explicit tenant lifecycle.
 
 Each tenant/dataset id maps to a :class:`FilterEntry` bundling the
 fitted ``ExistenceIndex``, its :class:`~repro.serve_filter.plan.QueryPlan`,
@@ -6,14 +6,33 @@ the (cached) executor compiled for that plan, the tenant's
 device-placed arrays (:class:`~repro.serve_filter.executors.PlacedFilter`
 — on a sharded registry each hydrated tenant's tables/bitset land
 directly on their shard), and per-filter memory accounting. A registry
-optionally enforces a total memory budget with LRU eviction, and
-round-trips filters through ``checkpoint/manager.py`` (``save``/
-``load``) so a serving process can hydrate tenants from disk. Evicting
-the last tenant on a plan also releases the plan's cached executor, so
-compiled-program count tracks live tenants rather than all-time churn.
+optionally enforces a total memory budget with LRU eviction (``pinned``
+tenants are exempt), and round-trips filters through
+``checkpoint/manager.py`` so a serving process can hydrate tenants from
+disk. Evicting the last tenant on a plan also releases the plan's
+cached executor, so compiled-program count tracks live tenants rather
+than all-time churn.
 
-With ``grouped=True`` the registry additionally maintains plan-group
-membership: tenants whose plans share a
+Every tenant moves through the explicit lifecycle of
+:class:`~repro.serve_filter.config.TenantState`::
+
+    ADMITTED -> HYDRATING -> SERVING -> DRAINING -> RETIRED
+
+:meth:`FilterRegistry.admit` drives the left half (a
+:class:`~repro.serve_filter.config.TenantSpec` in, a SERVING entry
+out); re-admitting a SERVING tenant is the **hot-reload** path — the
+entry re-enters HYDRATING, the re-fitted index's arrays are installed
+(an in-place arena-slot swap on the grouped path, a fresh
+``PlacedFilter`` on local/sharded), and the tenant returns to SERVING
+with its ``epoch`` bumped, all without draining: batches already
+dispatched hold the old device arrays and retire against them, batches
+prepared afterwards bind the new ones. :meth:`begin_drain` +
+:meth:`evict` drive the right half. Every transition is validated
+against ``config.LIFECYCLE_TRANSITIONS`` and reported through the
+``on_transition`` hook (the server wires it to ``ServeStats``).
+
+With grouping enabled the registry additionally maintains plan-group
+membership: groupable tenants whose plans share a
 :class:`~repro.serve_filter.plan.GroupKey` live stacked in ONE
 :class:`~repro.serve_filter.arena.PlanGroupArena` (registration and
 checkpoint hydration write straight into an arena slot), so the
@@ -27,16 +46,21 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import os
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
-from jax.sharding import Mesh
 
 from repro.core import existence, memory
 from repro.serve_filter import executors as executors_lib
 from repro.serve_filter.arena import PlanGroupArena
-from repro.serve_filter.plan import (DEFAULT_TILE_ROWS, GroupKey,
-                                     QueryPlan, group_key, plan_query)
+from repro.serve_filter.config import (GroupingConfig, LIFECYCLE_TRANSITIONS,
+                                       PlacementConfig, TenantSpec,
+                                       TenantState)
+from repro.serve_filter.plan import (GroupKey, ProbeConfig, QueryPlan,
+                                     group_key, plan_query)
+
+# hook signature: (tenant, from_state_or_None, to_state)
+TransitionHook = Callable[[str, Optional[TenantState], TenantState], None]
 
 
 @dataclasses.dataclass
@@ -51,6 +75,10 @@ class FilterEntry:
     last_used: int = 0              # registry LRU clock tick
     n_queries: int = 0
     group: Optional[PlanGroupArena] = None   # set iff grouped placement
+    state: TenantState = TenantState.SERVING
+    pinned: bool = False            # exempt from LRU budget eviction
+    groupable: bool = True          # may join a plan-group arena
+    epoch: int = 0                  # bumped on every hot-reload
 
     def run(self, raw_ids):
         """One fused dispatch: (n, n_cols) ids -> (ans, model, backup).
@@ -93,15 +121,15 @@ class FilterRegistry:
     """Loads/owns multiple fitted indexes keyed by tenant id.
 
     ``budget_mb`` bounds the summed per-filter memory (weights + packed
-    fixup bitset); registering past the budget evicts least-recently-used
-    tenants first. ``use_kernel`` selects the Pallas fixup probe for all
-    tenants' plans. Passing a ``mesh`` whose ``shard_axis`` has >= 2
-    devices makes the planner choose sharded placement: every
-    registered/hydrated tenant's embedding tables and fixup bitset are
-    scattered straight onto their shard slices. ``grouped=True`` stacks
-    same-group-key tenants into per-group device arenas so one dispatch
-    can serve many of them (local placement only — a mesh wins over
-    grouping when both are configured).
+    fixup bitset); admitting past the budget evicts least-recently-used
+    unpinned tenants first. ``probe`` selects the fixup-probe flavor for
+    all tenants' plans; ``placement`` with a mesh whose shard axis has
+    >= 2 devices makes the planner choose sharded placement (every
+    admitted/hydrated tenant's embedding tables and fixup bitset are
+    scattered straight onto their shard slices); ``grouping.enabled``
+    stacks same-group-key groupable tenants into per-group device
+    arenas so one dispatch can serve many of them (local placement only
+    — a mesh wins over grouping when both are configured).
 
     ``budget_mb`` counts NOMINAL per-filter sizes (weights + packed
     bitset). A grouped arena's real footprint carries bounded overhead
@@ -112,25 +140,36 @@ class FilterRegistry:
     """
 
     def __init__(self, budget_mb: Optional[float] = None, *,
-                 use_kernel: bool = False,
-                 interpret: Optional[bool] = None,
-                 block_n: int = 2048,
-                 mesh: Optional[Mesh] = None,
-                 shard_axis: str = "data",
-                 grouped: bool = False,
-                 tile_rows: int = DEFAULT_TILE_ROWS):
+                 probe: ProbeConfig = ProbeConfig(),
+                 placement: PlacementConfig = PlacementConfig(),
+                 grouping: GroupingConfig = GroupingConfig(),
+                 on_transition: Optional[TransitionHook] = None):
         self.budget_mb = budget_mb
-        self.use_kernel = use_kernel
-        self.interpret = interpret
-        self.block_n = block_n
-        self.mesh = mesh
-        self.shard_axis = shard_axis
-        self.grouped = bool(grouped)
-        self.tile_rows = int(tile_rows)
+        self.probe = probe
+        self.placement = placement
+        self.grouping = grouping
+        self.on_transition = on_transition
         self._entries: Dict[str, FilterEntry] = {}
         self._groups: Dict[GroupKey, PlanGroupArena] = {}
         self._clock = itertools.count(1)
         self.evictions: List[str] = []
+
+    # back-compat accessors (pre-config callers and sibling modules)
+    @property
+    def mesh(self):
+        return self.placement.mesh
+
+    @property
+    def shard_axis(self) -> str:
+        return self.placement.shard_axis
+
+    @property
+    def grouped(self) -> bool:
+        return self.grouping.enabled
+
+    @property
+    def tile_rows(self) -> int:
+        return self.grouping.tile_rows
 
     # ------------------------------------------------------------ access
     def __contains__(self, tenant: str) -> bool:
@@ -168,51 +207,175 @@ class FilterRegistry:
         """Live plan-group arenas (read-only view for stats/tests)."""
         return dict(self._groups)
 
-    # ---------------------------------------------------------- mutation
+    def state_of(self, tenant: str) -> TenantState:
+        """The tenant's lifecycle state (RETIRED once gone)."""
+        entry = self._entries.get(tenant)
+        return entry.state if entry is not None else TenantState.RETIRED
+
+    # --------------------------------------------------------- lifecycle
+    def _transition(self, tenant: str, frm: Optional[TenantState],
+                    to: TenantState) -> None:
+        if to not in LIFECYCLE_TRANSITIONS[frm]:
+            raise RuntimeError(
+                f"illegal lifecycle transition for tenant {tenant!r}: "
+                f"{frm.value if frm else None} -> {to.value}")
+        if self.on_transition is not None:
+            self.on_transition(tenant, frm, to)
+
     def plan_for(self, index: existence.ExistenceIndex) -> QueryPlan:
         """The plan this registry's planner assigns an index."""
         return plan_query(index.cfg, index.fixup_filter.params,
-                          mesh=self.mesh, shard_axis=self.shard_axis,
-                          use_kernel=self.use_kernel,
-                          interpret=self.interpret, block_n=self.block_n)
+                          mesh=self.placement.mesh,
+                          shard_axis=self.placement.shard_axis,
+                          probe=self.probe)
 
-    def register(self, tenant: str, index: existence.ExistenceIndex
-                 ) -> FilterEntry:
-        """Admit a fitted index (or replace the tenant's current one —
-        the re-fit/hot-swap path); evicts LRU tenants if over budget.
-        On a grouped registry the index lands in its plan-group arena
-        (slot reuse before growth)."""
+    def admit(self, spec: TenantSpec) -> FilterEntry:
+        """Drive a tenant spec through ADMITTED -> HYDRATING -> SERVING.
+
+        A fresh tenant is admitted; re-admitting a SERVING tenant is
+        the **hot-reload** path: the tenant re-enters HYDRATING, the
+        new source's arrays are installed atomically (arena-slot swap
+        when the plan group is unchanged, otherwise a fresh placement),
+        and the entry returns to SERVING with ``epoch + 1`` — no drain,
+        and batches already dispatched still retire against the old
+        arrays. Evicts LRU unpinned tenants if over budget.
+        """
+        tenant = spec.tenant
+        prev = self._entries.get(tenant)
+        if prev is None:
+            self._transition(tenant, None, TenantState.ADMITTED)
+            self._transition(tenant, TenantState.ADMITTED,
+                             TenantState.HYDRATING)
+        else:
+            if prev.state is not TenantState.SERVING:
+                raise RuntimeError(
+                    f"tenant {tenant!r} is {prev.state.value}; only a "
+                    "serving tenant can be reloaded")
+            self._transition(tenant, TenantState.SERVING,
+                             TenantState.HYDRATING)
+            prev.state = TenantState.HYDRATING
+        try:
+            index = spec.index
+            if index is None:
+                index = existence.load_index(
+                    os.path.join(spec.checkpoint, tenant), step=spec.step)
+            entry = self._install(tenant, index, prev,
+                                  pinned=spec.pinned,
+                                  groupable=spec.groupable)
+        except BaseException:
+            # hydration failed: a transient error (bad checkpoint
+            # path, device OOM) must not brick a live tenant. Three
+            # distinct failure points, all resolved so the tenant
+            # never dangles in HYDRATING:
+            cur = self._entries.get(tenant)
+            if prev is not None and cur is prev:
+                # failed BEFORE the swap landed: roll the old entry
+                # back to SERVING — it keeps answering on its current
+                # epoch and a later reload can retry
+                self._transition(tenant, TenantState.HYDRATING,
+                                 TenantState.SERVING)
+                prev.state = TenantState.SERVING
+            elif prev is None and cur is None:
+                # failed FRESH admission: no entry exists, terminate
+                # the lifecycle (HYDRATING -> RETIRED) so the event
+                # log matches state_of() reporting RETIRED
+                self._transition(tenant, TenantState.HYDRATING,
+                                 TenantState.RETIRED)
+            elif cur is not None and cur is not prev:
+                # the NEW entry already landed and the failure came
+                # from releasing the old one (e.g. compaction OOM in
+                # _release_entry): the swap is complete — mark the new
+                # entry SERVING rather than wedging it in HYDRATING
+                self._transition(tenant, TenantState.HYDRATING,
+                                 TenantState.SERVING)
+                cur.state = TenantState.SERVING
+            raise
+        self._transition(tenant, TenantState.HYDRATING, TenantState.SERVING)
+        entry.state = TenantState.SERVING
+        self._enforce_budget(keep=tenant)
+        return entry
+
+    # ------------------------------------------------- mutation plumbing
+    def _install(self, tenant: str, index: existence.ExistenceIndex,
+                 prev: Optional[FilterEntry], *, pinned: bool,
+                 groupable: bool) -> FilterEntry:
+        """Place an index's arrays and swap the new entry in. The swap
+        itself is a dict assignment — atomic from the scheduler's view:
+        every prepare after this call binds the new arrays, every batch
+        dispatched before it holds (and retires against) the old ones."""
         mem = memory.accounting(index.cfg)
         plan = self.plan_for(index)
-        gk = group_key(plan, self.tile_rows) if self.grouped else None
+        gk = (group_key(plan, self.grouping.tile_rows)
+              if (self.grouping.enabled and groupable) else None)
         common = dict(tenant=tenant, index=index, plan=plan,
                       model_mb=mem.weights_mb,
                       fixup_mb=index.fixup_filter.size_mb,
-                      last_used=next(self._clock))
+                      last_used=next(self._clock),
+                      state=TenantState.HYDRATING,
+                      pinned=pinned, groupable=groupable,
+                      epoch=prev.epoch + 1 if prev is not None else 0)
         if gk is not None:
             arena = self._groups.get(gk)
             if arena is None:
                 arena = PlanGroupArena(
                     gk, executors_lib.acquire_grouped_executor(gk))
                 self._groups[gk] = arena
-            arena.add(tenant, index)
+            if (prev is not None and prev.group is arena
+                    and tenant in arena):
+                # hot-reload within the same plan group: in-place slot
+                # swap — the tenant's slot id (and any tile-signature
+                # assumptions built on it) survive the reload
+                arena.swap(tenant, index)
+            else:
+                arena.add(tenant, index)
             entry = FilterEntry(executor=arena.executor, placed=None,
                                 group=arena, **common)
         else:
-            executor = executors_lib.acquire_executor(plan, self.mesh)
+            executor = executors_lib.acquire_executor(plan,
+                                                      self.placement.mesh)
             entry = FilterEntry(executor=executor,
                                 placed=executor.place(index), **common)
-        old = self._entries.get(tenant)
         self._entries[tenant] = entry
-        if old is not None:     # replaced: give back the old entry's ref
-            self._release_entry(old, replaced_by=entry)
-        self._enforce_budget(keep=tenant)
+        if prev is not None:    # replaced: give back the old entry's ref
+            self._release_entry(prev, replaced_by=entry)
         return entry
 
+    def register(self, tenant: str, index: existence.ExistenceIndex,
+                 *, pinned: bool = False, groupable: bool = True
+                 ) -> FilterEntry:
+        """Admit a fitted in-memory index (or hot-reload the tenant's
+        current one) — shorthand for :meth:`admit` with an in-memory
+        source."""
+        return self.admit(TenantSpec(tenant=tenant, index=index,
+                                     pinned=pinned, groupable=groupable))
+
+    def begin_drain(self, tenant: str) -> None:
+        """SERVING -> DRAINING: the scheduler keeps answering the
+        tenant's already-queued rows but rejects new submissions; call
+        :meth:`evict` once drained to finish the retirement."""
+        entry = self._entries.get(tenant)
+        if entry is None or entry.state is TenantState.DRAINING:
+            return
+        self._transition(tenant, entry.state, TenantState.DRAINING)
+        entry.state = TenantState.DRAINING
+
     def evict(self, tenant: str) -> None:
-        entry = self._entries.pop(tenant, None)
+        """Drop a tenant (-> RETIRED). Queued requests the scheduler
+        still holds fail on its next pass; spans already dispatched
+        retire normally against the arrays they were bound to."""
+        entry = self._entries.get(tenant)
         if entry is None:
             return
+        if entry.state is TenantState.SERVING:
+            self._transition(tenant, TenantState.SERVING,
+                             TenantState.DRAINING)
+            entry.state = TenantState.DRAINING
+        # validate against the entry's REAL state — anything but
+        # DRAINING here (admit() rolls failed hydrations back) is an
+        # illegal jump and must fail loudly, not fabricate events
+        self._transition(tenant, entry.state, TenantState.RETIRED)
+        entry.state = TenantState.RETIRED
+        del self._entries[tenant]
         self.evictions.append(tenant)
         self._release_entry(entry)
 
@@ -225,9 +388,9 @@ class FilterRegistry:
         if entry.group is not None:
             arena = entry.group
             if replaced_by is not None and replaced_by.group is arena:
-                # hot-swap in place: arena.add already reused the slot,
-                # but a re-fit whose bitset GREW left the old word range
-                # dead — compact when that waste piles up, or repeated
+                # hot-swap in place: the slot was reused, but a re-fit
+                # whose bitset GREW left the old word range dead —
+                # compact when that waste piles up, or repeated
                 # hot-swaps would leak arena words
                 arena.maybe_compact()
                 return
@@ -241,16 +404,17 @@ class FilterRegistry:
             # drop this tenant's reference; the cache entry (and compiled
             # programs) go away with the LAST reference process-wide, so
             # other registries serving the same plan are unaffected
-            executors_lib.release_executor(entry.plan, self.mesh)
+            executors_lib.release_executor(entry.plan, self.placement.mesh)
 
     def _enforce_budget(self, keep: str) -> None:
         if self.budget_mb is None:
             return
         while self.total_mb > self.budget_mb and len(self._entries) > 1:
             victim = min(
-                (e for t, e in self._entries.items() if t != keep),
+                (e for t, e in self._entries.items()
+                 if t != keep and not e.pinned),
                 key=lambda e: e.last_used, default=None)
-            if victim is None:
+            if victim is None:      # everything else is pinned
                 return
             self.evict(victim.tenant)
 
@@ -263,8 +427,7 @@ class FilterRegistry:
 
     def load(self, tenant: str, directory: str,
              step: Optional[int] = None) -> FilterEntry:
-        """Hydrate a tenant from ``directory/<tenant>`` and register it
+        """Hydrate a tenant from ``directory/<tenant>`` and admit it
         (on a sharded registry the arrays land directly on-shard)."""
-        idx = existence.load_index(os.path.join(directory, tenant),
-                                   step=step)
-        return self.register(tenant, idx)
+        return self.admit(TenantSpec(tenant=tenant, checkpoint=directory,
+                                     step=step))

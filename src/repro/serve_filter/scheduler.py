@@ -42,6 +42,17 @@ Bucket policy: the smallest bucket that fits the coalesced rows; rows
 beyond the largest bucket stay queued for the next step (bounded
 per-dispatch latency). Occupancy (valid/padded) is tracked per batch by
 ``ServeStats`` — the classic throughput-vs-padding trade.
+
+Completion surface: callers no longer poll ``QueryRequest.done`` — a
+submission is observed through a :class:`QueryFuture` (``result``,
+``exception``, bulk :func:`wait_all`). The scheduler resolves each
+future at RETIRE time — the instant its request's last span lands (or
+fails) — and, because serving is single-threaded, ``result()`` drives
+``step()`` itself until that instant, dispatching whatever batches are
+ahead of it in ring order but leaving every other queued request
+queued (no drain-the-world side effect). Admission is
+lifecycle-gated: only SERVING tenants accept submissions — a DRAINING
+tenant's queued rows still complete, but new rows are rejected.
 """
 from __future__ import annotations
 
@@ -49,14 +60,14 @@ import collections
 import dataclasses
 import itertools
 import time
-from typing import Deque, Dict, List, Optional, Sequence, Set, Tuple
+from typing import Deque, Dict, Iterable, List, Optional, Sequence, Set, \
+    Tuple
 
 import numpy as np
 
+from repro.serve_filter.config import DEFAULT_BUCKETS, TenantState
 from repro.serve_filter.registry import FilterEntry, FilterRegistry
 from repro.serve_filter.stats import ServeStats
-
-DEFAULT_BUCKETS = (64, 256, 1024, 4096)
 
 
 def bucket_for(n: int, buckets: Sequence[int]) -> int:
@@ -83,6 +94,7 @@ class QueryRequest:
     backup_yes: Optional[np.ndarray] = None
     t_done: Optional[float] = None
     error: Optional[str] = None           # set when failed (e.g. eviction)
+    future: Optional["QueryFuture"] = None  # resolved at retire time
 
     @property
     def done(self) -> bool:
@@ -95,6 +107,131 @@ class QueryRequest:
     def latency_s(self) -> float:
         assert self.t_done is not None
         return self.t_done - self.t_submit
+
+    def _complete(self, t_done: float, error: Optional[str] = None) -> None:
+        """Mark done (once) and resolve the attached future, if any."""
+        if self.t_done is None:
+            if error is not None:
+                self.error = error
+            self.t_done = t_done
+        if self.future is not None:
+            self.future._resolve()
+
+
+class FilterServeError(RuntimeError):
+    """A submission failed inside the serving path (tenant evicted with
+    rows queued, dispatch fault, ...). ``QueryFuture.result`` raises
+    it; ``QueryFuture.exception`` returns it."""
+
+
+class QueryFuture:
+    """Completion handle for one submitted query block.
+
+    Serving is single-threaded, so the future is also the pump:
+    ``result()``/``exception()`` drive ``scheduler.step()`` until THIS
+    request retires — batches ahead of it in ring order get dispatched
+    (the device must answer them anyway), but every other queued
+    request stays queued. That scoping is the fix for the old
+    ``FilterServer.query`` convenience, which drained the entire
+    scheduler (silently retiring OTHER tenants' pending requests) as a
+    side effect of answering one block.
+
+    The scheduler resolves the future at retire time; after that,
+    ``answers`` / ``model_yes`` / ``backup_yes`` expose the scheduler-
+    owned result arrays (treat as read-only — see ``QueryRequest``).
+
+    Migration note: ``done`` here is a METHOD (``concurrent.futures``
+    idiom), unlike the old ``QueryRequest.done`` property — a
+    transplanted ``while not req.done`` poll over a future is always
+    falsy-negated-truthy and exits immediately. It then fails fast
+    (``answers`` is still None), but prefer ``result()``/``wait_all``
+    over polling entirely.
+    """
+
+    def __init__(self, request: QueryRequest, scheduler: "QueryScheduler"):
+        self._request = request
+        self._scheduler = scheduler
+        self._resolved = request.done       # zero-row fast path
+        request.future = self
+
+    def _resolve(self) -> None:
+        """Called by the scheduler the instant the request retires (or
+        fails) — the ONLY thing that completes a future: ``done()`` and
+        the waiters observe this flag, not the request's fields."""
+        self._resolved = True
+
+    # ------------------------------------------------------------- state
+    @property
+    def tenant(self) -> str:
+        return self._request.tenant
+
+    @property
+    def request(self) -> QueryRequest:
+        """The underlying request (scheduler-internal surface)."""
+        return self._request
+
+    def done(self) -> bool:
+        return self._resolved
+
+    @property
+    def error(self) -> Optional[str]:
+        return self._request.error
+
+    @property
+    def answers(self) -> Optional[np.ndarray]:
+        return self._request.answers
+
+    @property
+    def model_yes(self) -> Optional[np.ndarray]:
+        return self._request.model_yes
+
+    @property
+    def backup_yes(self) -> Optional[np.ndarray]:
+        return self._request.backup_yes
+
+    # -------------------------------------------------------- completion
+    def _wait(self, deadline: Optional[float]) -> None:
+        while not self._resolved:
+            if deadline is not None and time.monotonic() >= deadline:
+                raise TimeoutError(
+                    f"request {self._request.rid} (tenant "
+                    f"{self._request.tenant!r}) not retired in time")
+            if not self._scheduler.step():
+                # nothing queued, nothing in flight, yet unresolved:
+                # the rows were lost upstream — fail loudly
+                raise FilterServeError(
+                    "scheduler drained without resolving this future")
+
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        """Block (driving the scheduler) until this request retires;
+        return its (n,) bool answers or raise its failure."""
+        self._wait(None if timeout is None
+                   else time.monotonic() + timeout)
+        if self._request.error is not None:
+            raise FilterServeError(self._request.error)
+        return self._request.answers
+
+    def exception(self, timeout: Optional[float] = None
+                  ) -> Optional[Exception]:
+        """Like :meth:`result`, but return the failure (or None)."""
+        self._wait(None if timeout is None
+                   else time.monotonic() + timeout)
+        if self._request.error is not None:
+            return FilterServeError(self._request.error)
+        return None
+
+
+def wait_all(futures: Iterable[QueryFuture],
+             timeout: Optional[float] = None) -> List[QueryFuture]:
+    """Drive the scheduler until every future is resolved (one shared
+    ``timeout`` across the batch); returns the futures for chaining.
+    Failures surface when each future's ``result()`` is read — a failed
+    request does not abort the rest of the batch here."""
+    futures = list(futures)
+    deadline = None if timeout is None else time.monotonic() + timeout
+    for fut in futures:
+        fut._wait(deadline)
+    return futures
 
 
 @dataclasses.dataclass(slots=True)
@@ -171,6 +308,10 @@ class QueryScheduler:
             entry = registry.peek(tenant)
             if entry is None:
                 raise KeyError(f"unknown tenant {tenant!r}")
+            if entry.state is not TenantState.SERVING:
+                raise FilterServeError(
+                    f"tenant {tenant!r} is {entry.state.value}, not "
+                    "serving — submissions rejected")
             ids = np.asarray(ids, np.int32)
             if ids.ndim == 1:
                 ids = ids[None, :]
@@ -209,6 +350,27 @@ class QueryScheduler:
     @property
     def inflight_batches(self) -> int:
         return len(self._inflight)
+
+    def pending_rows_for(self, tenant: str) -> int:
+        """Rows queued (not yet dispatched) for ONE tenant — the drain
+        condition the tenant-retirement path watches."""
+        return sum(req.ids.shape[0] - off
+                   for req, off in self._queues.get(tenant, ()))
+
+    def has_inflight(self, tenant: str) -> bool:
+        """True while any dispatched-but-unretired batch carries the
+        tenant's rows (they retire against the arrays bound at
+        dispatch, so draining must outlast them)."""
+        return any(e.tenant == tenant
+                   for inf in self._inflight
+                   for e in inf.prep.span_entries)
+
+    def cancel_tenant(self, tenant: str, reason: str) -> None:
+        """Fail a tenant's QUEUED requests now (their futures resolve
+        with ``reason``); spans already in flight still retire with
+        answers. The force-retire path — graceful retirement drains
+        instead."""
+        self._fail_tenant(tenant, reason)
 
     # ---------------------------------------------------------- dispatch
     def step(self) -> bool:
@@ -418,10 +580,9 @@ class QueryScheduler:
             # the async computation itself failed: the rows are gone
             # from the queue, so fail their requests rather than hang
             # their owners on req.done forever
+            t = self._clock()
             for req, _, _ in prep.take:
-                if not req.done:
-                    req.error = f"dispatch failed: {e!r}"
-                    req.t_done = self._clock()
+                req._complete(t, error=f"dispatch failed: {e!r}")
             raise
         latency = self._clock() - inf.t_dispatch
         if prep.valid_idx is not None:     # tile-alignment gaps present
@@ -454,7 +615,7 @@ class QueryScheduler:
                 req.model_yes[off:off + n] = full_model[p:p + n]
                 req.backup_yes[off:off + n] = full_backup[p:p + n]
             if off + n >= req.ids.shape[0]:   # last span: request done
-                req.t_done = t_done
+                req._complete(t_done)         # resolves the future too
                 record_request(t_done - req.t_submit)
         per_tenant: Dict[str, int] = {}
         for e, (_, _, n) in zip(prep.span_entries, prep.take):
@@ -487,9 +648,9 @@ class QueryScheduler:
         sees ``req.done`` with ``req.error`` set instead of answers).
         Spans already in flight still retire with answers — they ran
         against the entry as placed at dispatch time."""
+        t = self._clock()
         for req, _ in self._queues.pop(tenant, ()):
-            req.error = reason
-            req.t_done = self._clock()
+            req._complete(t, error=reason)
 
     def run_until_drained(self, max_steps: int = 100_000) -> int:
         """Steps until queues AND the in-flight buffer are empty (the

@@ -1,87 +1,264 @@
-"""Top-level filter server: registry + scheduler + stats in one object.
+"""Top-level filter server: declarative config, tenant handles, futures.
 
-``FilterServer`` is the serving-subsystem facade: register (or hydrate
-from checkpoint) fitted indexes per tenant, submit query blocks, drive
-``step()``/``run_until_drained()``, and read the metrics surface. The
-synchronous convenience ``query()`` is the one-shot path used by tests
-and notebooks; production callers submit and drain in their own loop
-(mirroring ``launch/serve.py``).
+``FilterServer`` is the serving-subsystem facade, configured by ONE
+frozen :class:`~repro.serve_filter.config.ServeConfig` (placement,
+dispatch, grouping, buckets, probe, metrics sub-configs — the old
+11-kwarg constructor survives only as a deprecated shim). Tenants are
+declared as :class:`~repro.serve_filter.config.TenantSpec`\\ s and
+admitted through :meth:`FilterServer.admit`, which returns a
+:class:`TenantHandle` — the live control surface for that tenant's
+lifecycle (``ADMITTED -> HYDRATING -> SERVING -> DRAINING ->
+RETIRED``):
 
-Scale knobs: pass ``mesh`` (+ ``shard_axis``) to have the planner place
-every tenant's embedding tables and fixup bitset sharded over that mesh
-axis (the ``ShardedExecutor`` path), ``async_dispatch=True`` to
-double-buffer dispatches so host-side padding overlaps device compute,
-and ``grouped=True`` to stack same-plan-shape tenants into plan-group
-arenas so one device dispatch answers many lightly-loaded tenants (the
-many-tenant/low-per-tenant-load regime where per-tenant dispatches
-cannot fill a bucket).
+* ``handle.reload(new_index | checkpoint=...)`` — the headline
+  operation: atomically swap in a re-fitted index under live traffic
+  (arena-slot hot-swap on the grouped path, fresh ``PlacedFilter`` on
+  local/sharded) with **no drain** — batches dispatched before the
+  swap retire against the old arrays, batches prepared after bind the
+  new ones, and not a row is dropped or misanswered;
+* ``handle.retire()`` — graceful shutdown: submissions stop, queued
+  and in-flight rows finish, then the tenant leaves the registry;
+* ``handle.submit`` / ``handle.query`` — per-tenant shorthand for the
+  futures surface below.
+
+Queries are observed through futures: :meth:`FilterServer.submit`
+returns a :class:`~repro.serve_filter.scheduler.QueryFuture` whose
+``result(timeout)`` drives the scheduler only until THAT request
+retires — unlike the deprecated ``query()``, it does not drain (and
+silently retire) other tenants' pending work. Fleet drivers keep using
+``submit_many`` + ``step()``/``run_until_drained()`` loops (mirroring
+``launch/serve.py``) or ``scheduler.wait_all``.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence
+import time
+import warnings
+from typing import Dict, List, Optional
 
 import numpy as np
-from jax.sharding import Mesh
 
 from repro.core import existence
 from repro.runtime.metrics import MetricsLogger
 from repro.serve_filter import executors as executors_lib
-from repro.serve_filter.plan import DEFAULT_TILE_ROWS
+from repro.serve_filter.config import ServeConfig, TenantSpec, TenantState
 from repro.serve_filter.registry import FilterEntry, FilterRegistry
-from repro.serve_filter.scheduler import (DEFAULT_BUCKETS, QueryRequest,
-                                          QueryScheduler)
+from repro.serve_filter.scheduler import QueryFuture, QueryScheduler
 from repro.serve_filter.stats import ServeStats
 
 
+class TenantHandle:
+    """Live control surface for one admitted tenant.
+
+    Returned by :meth:`FilterServer.admit`; stays valid across
+    reloads (the tenant's ``epoch`` counts them) and reports
+    ``TenantState.RETIRED`` once the tenant has left the registry.
+    """
+
+    def __init__(self, server: "FilterServer", spec: TenantSpec):
+        self._server = server
+        self._spec = spec
+        self._last_epoch = 0
+
+    def __repr__(self) -> str:
+        return (f"TenantHandle({self.tenant!r}, state="
+                f"{self.state.value}, epoch={self.epoch})")
+
+    # ------------------------------------------------------------- state
+    @property
+    def tenant(self) -> str:
+        return self._spec.tenant
+
+    @property
+    def spec(self) -> TenantSpec:
+        """The most recent spec admitted for this tenant (reloads
+        update it)."""
+        return self._spec
+
+    @property
+    def state(self) -> TenantState:
+        return self._server.registry.state_of(self.tenant)
+
+    @property
+    def entry(self) -> Optional[FilterEntry]:
+        """The current registry entry (None once retired)."""
+        return self._server.registry.peek(self.tenant)
+
+    @property
+    def epoch(self) -> int:
+        """How many reloads this tenant has seen (0 = as admitted);
+        the last live epoch once retired."""
+        entry = self.entry
+        if entry is not None:
+            self._last_epoch = entry.epoch
+        return self._last_epoch
+
+    # ----------------------------------------------------------- queries
+    def submit(self, ids: np.ndarray) -> QueryFuture:
+        return self._server.submit(self.tenant, ids)
+
+    def query(self, ids: np.ndarray) -> np.ndarray:
+        """Synchronous convenience, scoped to this request: submit one
+        block and drive the scheduler until IT retires (other tenants'
+        pending work stays queued)."""
+        return self.submit(ids).result()
+
+    # --------------------------------------------------------- lifecycle
+    def reload(self, index: Optional[existence.ExistenceIndex] = None, *,
+               checkpoint: Optional[str] = None,
+               step: Optional[int] = None) -> "TenantHandle":
+        """Atomically swap in a re-fitted index — from memory or from
+        ``<checkpoint>/<tenant>`` — under live traffic, with no drain:
+        rows dispatched before the swap answer from the old index,
+        rows prepared after answer from the new one, none are dropped.
+        The tenant passes SERVING -> HYDRATING -> SERVING and its
+        ``epoch`` increments; swap latency lands in
+        ``ServeStats.record_reload``.
+        """
+        if self._server.registry.peek(self.tenant) is None:
+            # RETIRED is terminal: resurrecting through a stale handle
+            # would silently reset the epoch and bypass the lifecycle —
+            # a retired tenant comes back only via an explicit admit()
+            raise RuntimeError(
+                f"tenant {self.tenant!r} is retired; admit a new "
+                "TenantSpec instead of reloading a stale handle")
+        spec = TenantSpec(tenant=self.tenant, index=index,
+                          checkpoint=checkpoint, step=step,
+                          pinned=self._spec.pinned,
+                          groupable=self._spec.groupable)
+        # server.admit owns the reload bookkeeping (metrics + spec
+        # update) and returns the tenant's live handle — this object
+        return self._server.admit(spec)
+
+    def retire(self, *, drain: bool = True,
+               max_steps: int = 100_000) -> None:
+        """Remove the tenant. ``drain=True`` (default) first moves it
+        to DRAINING — new submissions are rejected while its queued
+        and in-flight rows finish answering — then retires it.
+        ``drain=False`` force-retires: queued requests fail now (their
+        futures resolve with an error); spans already dispatched still
+        retire with answers. Idempotent once retired."""
+        server = self._server
+        entry = server.registry.peek(self.tenant)
+        if entry is None:
+            return
+        self._last_epoch = entry.epoch  # snapshot before the entry goes
+        sched = server.scheduler
+        if drain:
+            server.registry.begin_drain(self.tenant)
+            steps = 0
+            while (sched.pending_rows_for(self.tenant)
+                   or sched.has_inflight(self.tenant)):
+                if steps >= max_steps or not sched.step():
+                    break
+                steps += 1
+        else:
+            sched.cancel_tenant(
+                self.tenant, f"tenant {self.tenant!r} force-retired")
+        server.registry.evict(self.tenant)   # RETIRED hook reaps the handle
+
+    # ------------------------------------------------------- persistence
+    def save(self, directory: str, *, step: int = 0) -> str:
+        """Persist the CURRENT epoch's index under
+        ``directory/<tenant>``."""
+        return self._server.registry.save(self.tenant, directory,
+                                          step=step)
+
+
 class FilterServer:
-    def __init__(self, *, budget_mb: Optional[float] = None,
-                 buckets: Sequence[int] = DEFAULT_BUCKETS,
-                 use_kernel: bool = False,
-                 interpret: Optional[bool] = None,
-                 block_n: int = 2048,
-                 mesh: Optional[Mesh] = None,
-                 shard_axis: str = "data",
-                 async_dispatch: bool = False,
-                 max_inflight: int = 2,
-                 grouped: bool = False,
-                 tile_rows: int = DEFAULT_TILE_ROWS,
-                 metrics_path: Optional[str] = None,
-                 metrics_echo: bool = False):
-        self.registry = FilterRegistry(budget_mb, use_kernel=use_kernel,
-                                       interpret=interpret, block_n=block_n,
-                                       mesh=mesh, shard_axis=shard_axis,
-                                       grouped=grouped, tile_rows=tile_rows)
+    """Registry + scheduler + stats behind one declarative config."""
+
+    def __init__(self, config: Optional[ServeConfig] = None, **legacy):
+        if legacy:
+            if config is not None:
+                raise TypeError("pass either a ServeConfig or legacy "
+                                "kwargs, not both")
+            warnings.warn(
+                "FilterServer(**kwargs) is deprecated; build a frozen "
+                "ServeConfig (repro.serve_filter.config) and pass it as "
+                "the single argument", DeprecationWarning, stacklevel=2)
+            config = ServeConfig.from_kwargs(**legacy)
+        elif config is None:
+            config = ServeConfig()
+        self.config = config
         self.stats = ServeStats()
-        self.scheduler = QueryScheduler(self.registry, buckets=buckets,
-                                        stats=self.stats,
-                                        async_dispatch=async_dispatch,
-                                        max_inflight=max_inflight)
-        self.metrics = (MetricsLogger(metrics_path, echo=metrics_echo)
-                        if (metrics_path or metrics_echo) else None)
+        self.registry = FilterRegistry(
+            config.budget_mb, probe=config.probe,
+            placement=config.placement, grouping=config.grouping,
+            on_transition=self._on_transition)
+        self.scheduler = QueryScheduler(
+            self.registry, buckets=config.buckets.sizes, stats=self.stats,
+            async_dispatch=config.dispatch.async_dispatch,
+            max_inflight=config.dispatch.max_inflight)
+        self.metrics = (MetricsLogger(config.metrics.path,
+                                      echo=config.metrics.echo)
+                        if config.metrics.enabled else None)
+        self._handles: Dict[str, TenantHandle] = {}
         self._log_step = 0
 
-    # ----------------------------------------------------------- tenants
-    def register(self, tenant: str, index: existence.ExistenceIndex
-                 ) -> FilterEntry:
-        return self.registry.register(tenant, index)
+    def _on_transition(self, tenant: str, frm, to: TenantState) -> None:
+        """Registry lifecycle hook: count the transition and, at
+        RETIRED, reap the tenant's handle — budget-LRU evictions retire
+        tenants without going through ``handle.retire``/``evict``, and
+        a leaked handle would pin the spec's whole in-memory index."""
+        self.stats.record_transition(tenant, frm, to)
+        if to is TenantState.RETIRED:
+            handle = self._handles.pop(tenant, None)
+            if handle is not None:
+                entry = self.registry.peek(tenant)   # still present here
+                if entry is not None:
+                    handle._last_epoch = entry.epoch
 
-    def load(self, tenant: str, directory: str,
-             step: Optional[int] = None) -> FilterEntry:
-        return self.registry.load(tenant, directory, step=step)
+    # ----------------------------------------------------------- tenants
+    def admit(self, spec: TenantSpec) -> TenantHandle:
+        """Admit a declared tenant (hydrating from its spec'd source)
+        and return its lifecycle handle. Admitting an already-serving
+        tenant IS a hot-reload: the swap latency lands in the reload
+        metrics and the tenant's EXISTING handle is updated and
+        returned, so every reference stays coherent."""
+        live = self.registry.peek(spec.tenant) is not None
+        t0 = time.perf_counter()
+        self.registry.admit(spec)
+        if live:
+            self.stats.record_reload(time.perf_counter() - t0)
+        handle = self._handles.get(spec.tenant)
+        if handle is None:
+            handle = TenantHandle(self, spec)
+            self._handles[spec.tenant] = handle
+        else:
+            handle._spec = spec
+        return handle
+
+    def handle(self, tenant: str) -> TenantHandle:
+        """The lifecycle handle for an admitted tenant."""
+        return self._handles[tenant]
+
+    @property
+    def handles(self) -> Dict[str, TenantHandle]:
+        """Live handles by tenant id (read-only view)."""
+        return dict(self._handles)
 
     def save(self, tenant: str, directory: str, *, step: int = 0) -> str:
         return self.registry.save(tenant, directory, step=step)
 
     def evict(self, tenant: str) -> None:
-        self.registry.evict(tenant)
+        """Drop a tenant immediately (queued requests fail on the
+        scheduler's next pass). Prefer ``handle(tenant).retire()`` for
+        the graceful, drain-then-retire path."""
+        self.registry.evict(tenant)          # RETIRED hook reaps the handle
 
     # ------------------------------------------------------------ queries
-    def submit(self, tenant: str, ids: np.ndarray) -> QueryRequest:
-        return self.scheduler.submit(tenant, ids)
+    def submit(self, tenant: str, ids: np.ndarray) -> QueryFuture:
+        """Admit one query block; returns its future (resolved by the
+        scheduler at retire time)."""
+        return QueryFuture(self.scheduler.submit(tenant, ids),
+                           self.scheduler)
 
-    def submit_many(self, items):
-        """Bulk admission for fleet clients: ``[(tenant, ids), ...]``."""
-        return self.scheduler.submit_many(items)
+    def submit_many(self, items) -> List[QueryFuture]:
+        """Bulk admission for fleet clients: ``[(tenant, ids), ...]``
+        -> futures, in order."""
+        sched = self.scheduler
+        return [QueryFuture(req, sched)
+                for req in sched.submit_many(items)]
 
     def step(self) -> bool:
         return self.scheduler.step()
@@ -92,17 +269,6 @@ class FilterServer:
             self._log_step += 1
             self.stats.log_to(self.metrics, self._log_step)
         return n
-
-    def query(self, tenant: str, ids: np.ndarray) -> np.ndarray:
-        """Synchronous convenience: submit one block, drain, return
-        (n,) bool answers."""
-        req = self.submit(tenant, ids)
-        self.run_until_drained()
-        if req.error is not None:
-            raise RuntimeError(req.error)
-        if not req.done:
-            raise RuntimeError("scheduler drained without answering")
-        return req.answers
 
     # ------------------------------------------------------------ readout
     def stats_snapshot(self) -> Dict[str, float]:
@@ -118,3 +284,39 @@ class FilterServer:
         snap["arena_mb"] = sum(a.nbytes for a in
                                self.registry.groups.values()) / 2 ** 20
         return snap
+
+    # ------------------------------------------------- deprecated surface
+    def register(self, tenant: str, index: existence.ExistenceIndex
+                 ) -> FilterEntry:
+        """.. deprecated:: PR 4
+            Use ``admit(TenantSpec(tenant, index=...))`` — the handle
+            it returns is the lifecycle surface (reload/retire)."""
+        warnings.warn(
+            "FilterServer.register is deprecated; use "
+            "admit(TenantSpec(tenant, index=...)) and keep the returned "
+            "TenantHandle", DeprecationWarning, stacklevel=2)
+        return self.admit(TenantSpec(tenant=tenant, index=index)).entry
+
+    def load(self, tenant: str, directory: str,
+             step: Optional[int] = None) -> FilterEntry:
+        """.. deprecated:: PR 4
+            Use ``admit(TenantSpec(tenant, checkpoint=...))``."""
+        warnings.warn(
+            "FilterServer.load is deprecated; use "
+            "admit(TenantSpec(tenant, checkpoint=directory, step=...))",
+            DeprecationWarning, stacklevel=2)
+        return self.admit(TenantSpec(tenant=tenant, checkpoint=directory,
+                                     step=step)).entry
+
+    def query(self, tenant: str, ids: np.ndarray) -> np.ndarray:
+        """.. deprecated:: PR 4
+            Use ``submit(tenant, ids).result()``. The old implementation
+            drained the ENTIRE scheduler to answer one block — silently
+            retiring other tenants' pending requests; the future-backed
+            path is scoped to the submitted request."""
+        warnings.warn(
+            "FilterServer.query is deprecated; use "
+            "submit(tenant, ids).result() — it completes this request "
+            "without draining other tenants' pending work",
+            DeprecationWarning, stacklevel=2)
+        return self.submit(tenant, ids).result()

@@ -11,16 +11,28 @@ Per-stage positive counters let operators read the composite-FPR
 decomposition the paper's §3.3 analysis predicts: ``model_pos_rate`` is
 the learned model's yes-rate at tau, ``fixup_hit_rate`` the backup
 Bloom filter's, and ``positive_rate`` their union.
+
+Lifecycle observability: the registry reports every tenant-state
+transition (``ADMITTED -> HYDRATING -> SERVING -> DRAINING ->
+RETIRED``) through :meth:`ServeStats.record_transition` — cumulative
+per-state counters land in the snapshot (``lifecycle_*``), and a
+bounded event log keeps the most recent transitions inspectable.
+Hot-reloads (the SERVING -> HYDRATING -> SERVING loop) additionally
+record their swap latency via :meth:`ServeStats.record_reload`
+(``reloads``, ``reload_p50_ms``/``p99``/``max``), so re-fit churn shows
+up in the same JSONL stream as throughput.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from repro.runtime.metrics import LatencyWindow, MetricsLogger
+from repro.serve_filter.config import TenantState
 
 
 @dataclasses.dataclass
@@ -34,6 +46,7 @@ class _Counters:
     final_pos: int = 0
     overlapped: int = 0         # batches retired with another in flight
     grouped: int = 0            # batches whose rows spanned > 1 tenant
+    reloads: int = 0            # zero-drain hot-swaps completed
 
 
 class ServeStats:
@@ -44,8 +57,14 @@ class ServeStats:
         self.totals = _Counters()
         self.batch_latency = LatencyWindow(latency_maxlen)
         self.request_latency = LatencyWindow(latency_maxlen)
+        self.reload_latency = LatencyWindow(latency_maxlen)
         self.per_tenant: Dict[str, int] = {}
         self.last_bucket: Optional[int] = None
+        # cumulative per-target-state transition counts + bounded log
+        self.lifecycle: Dict[TenantState, int] = \
+            {s: 0 for s in TenantState}
+        self.lifecycle_events: collections.deque = \
+            collections.deque(maxlen=256)    # (tenant, frm, to)
 
     # ---------------------------------------------------------- recording
     def record_batch(self, tenant: str, n_valid: int, bucket: int,
@@ -81,6 +100,28 @@ class ServeStats:
         self.totals.requests += 1
         self.request_latency.record(latency_s)
 
+    def record_transition(self, tenant: str,
+                          frm: Optional[TenantState],
+                          to: TenantState):
+        """One tenant lifecycle transition (the registry's
+        ``on_transition`` hook points here)."""
+        self.lifecycle[to] += 1
+        self.lifecycle_events.append((tenant, frm, to))
+
+    def record_reload(self, latency_s: float):
+        """One completed zero-drain hot-reload (swap latency = admit
+        call time: hydrate + place + install)."""
+        self.totals.reloads += 1
+        self.reload_latency.record(latency_s)
+
+    def transitions_of(self, tenant: str
+                       ) -> Tuple[Tuple[Optional[TenantState],
+                                        TenantState], ...]:
+        """The (frm, to) transitions recorded for one tenant, oldest
+        first (bounded by the event-log window)."""
+        return tuple((frm, to) for t, frm, to in self.lifecycle_events
+                     if t == tenant)
+
     # ----------------------------------------------------------- readout
     def snapshot(self) -> Dict[str, float]:
         t = self.totals
@@ -98,9 +139,13 @@ class ServeStats:
             "tenants_served": float(len(self.per_tenant)),
             "overlapped_batches": float(t.overlapped),
             "grouped_batches": float(t.grouped),
+            "reloads": float(t.reloads),
         }
+        for state, n in self.lifecycle.items():
+            out[f"lifecycle_{state.value}"] = float(n)
         out.update(self.batch_latency.summary("batch_"))
         out.update(self.request_latency.summary("request_"))
+        out.update(self.reload_latency.summary("reload_"))
         return out
 
     def log_to(self, logger: MetricsLogger, step: int = 0) -> Dict:

@@ -10,11 +10,15 @@ import pytest
 
 from repro.core import existence
 from repro.data import tuples
-from repro.serve_filter import (FilterRegistry, FilterServer, ServeStats,
-                                bucket_for)
+from repro.serve_filter import (FilterRegistry, FilterServer, ServeConfig,
+                                ServeStats, TenantSpec, bucket_for)
 from repro.serve_filter import executors as executors_lib
-from repro.serve_filter import fused as fused_lib
 from repro.serve_filter.scheduler import QueryScheduler
+
+
+def _cfg(**kw) -> ServeConfig:
+    """Compact ServeConfig builder for tests (the legacy-kwarg bridge)."""
+    return ServeConfig.from_kwargs(**kw)
 
 
 @pytest.fixture(scope="module")
@@ -72,7 +76,7 @@ def test_evict_releases_unshared_executor_cache(fitted):
     executor; evicting one of several sharers must not."""
     _, idx_a = fitted["a"]
     _, idx_b = fitted["b"]
-    fused_lib.clear_cache()     # forget refs from earlier tests' tenants
+    executors_lib.clear_executors()   # forget earlier tests' tenant refs
     reg = FilterRegistry()
     reg.register("t1", idx_a)
     reg.register("t2", idx_a)           # shares t1's plan
@@ -103,7 +107,7 @@ def test_reregister_releases_replaced_entry_ref(fitted):
     back the OLD plan's executor reference, or the cache leaks."""
     _, idx_a = fitted["a"]
     _, idx_b = fitted["b"]
-    fused_lib.clear_cache()
+    executors_lib.clear_executors()
     reg = FilterRegistry()
     reg.register("t", idx_a)
     plan_old = reg.get("t").plan
@@ -146,13 +150,13 @@ def test_dispatch_failure_keeps_rows_answerable(fitted):
 def test_compiled_program_count_observable(fitted):
     """stats_snapshot must track live compiled programs through
     register -> query -> evict, so cache growth is observable."""
-    fused_lib.clear_cache()
+    executors_lib.clear_executors()
     _, idx = fitted["a"]
-    srv = FilterServer(buckets=(32,))
-    srv.register("t", idx)
-    srv.query("t", fitted["a"][0].records[:8])
+    srv = FilterServer(_cfg(buckets=(32,)))
+    handle = srv.admit(TenantSpec("t", index=idx))
+    handle.query(fitted["a"][0].records[:8])
     assert srv.stats_snapshot()["compiled_programs"] >= 1
-    srv.evict("t")
+    handle.retire()
     assert srv.stats_snapshot()["compiled_programs"] == 0
 
 
@@ -162,19 +166,20 @@ def test_lru_evict_then_rehydrate_bit_identical(fitted, tmp_path):
     ds_a, idx_a = fitted["a"]
     _, idx_b = fitted["b"]
     probes, _ = _corpus(ds_a, 200, seed=21)
-    srv = FilterServer(budget_mb=idx_a.total_mb + idx_b.total_mb / 2,
-                       buckets=(64, 256))
-    srv.register("t1", idx_a)
-    before = srv.query("t1", probes).copy()
-    srv.save("t1", str(tmp_path))
+    srv = FilterServer(_cfg(budget_mb=idx_a.total_mb + idx_b.total_mb / 2,
+                            buckets=(64, 256)))
+    h1 = srv.admit(TenantSpec("t1", index=idx_a))
+    before = h1.query(probes).copy()
+    h1.save(str(tmp_path))
 
-    srv.register("t2", idx_b)           # over budget: t1 is LRU, evicted
+    srv.admit(TenantSpec("t2", index=idx_b))  # over budget: t1 LRU, evicted
     assert "t1" not in srv.registry
     assert srv.registry.evictions == ["t1"]
 
-    srv.load("t1", str(tmp_path))       # re-hydrate (evicts t2 in turn)
+    # re-hydrate from checkpoint (evicts t2 in turn)
+    h1 = srv.admit(TenantSpec("t1", checkpoint=str(tmp_path)))
     assert "t1" in srv.registry
-    after = srv.query("t1", probes)
+    after = h1.query(probes)
     np.testing.assert_array_equal(after, before)
 
 
@@ -307,11 +312,11 @@ def test_round_robin_no_starvation(fitted):
 def test_async_dispatch_matches_sync_bit_identical(fitted):
     """Double-buffered dispatch must not change one answer bit vs the
     synchronous path, across interleaved tenants and odd row counts."""
-    srv_sync = FilterServer(buckets=(32, 128))
-    srv_async = FilterServer(buckets=(32, 128), async_dispatch=True)
+    srv_sync = FilterServer(_cfg(buckets=(32, 128)))
+    srv_async = FilterServer(_cfg(buckets=(32, 128), async_dispatch=True))
     for name, (_, idx) in fitted.items():
-        srv_sync.register(name, idx)
-        srv_async.register(name, idx)
+        srv_sync.admit(TenantSpec(name, index=idx))
+        srv_async.admit(TenantSpec(name, index=idx))
 
     got = {}
     for srv in (srv_sync, srv_async):
@@ -321,7 +326,7 @@ def test_async_dispatch_matches_sync_bit_identical(fitted):
             for start, size in [(0, 41), (41, 97), (138, 162)]:
                 reqs.append((name, srv.submit(name, ids[start:start + size])))
         srv.run_until_drained()
-        assert all(r.done and r.error is None for _, r in reqs)
+        assert all(r.done() and r.error is None for _, r in reqs)
         got[srv] = np.concatenate([r.answers for _, r in reqs])
     np.testing.assert_array_equal(got[srv_sync], got[srv_async])
     # the double buffer actually overlapped dispatches
@@ -350,9 +355,9 @@ def test_served_matches_direct_property(fitted):
     """Served answers == direct ExistenceIndex.query, bit-identical,
     across interleaved tenants, coalescing, and padding; zero false
     negatives on indexed positives."""
-    srv = FilterServer(buckets=(32, 128))
+    srv = FilterServer(_cfg(buckets=(32, 128)))
     for name, (_, idx) in fitted.items():
-        srv.register(name, idx)
+        srv.admit(TenantSpec(name, index=idx))
 
     reqs = {"a": [], "b": []}
     corpora = {}
@@ -385,20 +390,21 @@ def test_kernel_probe_path_bit_identical(fitted):
     change a single answer bit."""
     ds, idx = fitted["a"]
     ids, _ = _corpus(ds, 200, seed=9)
-    srv_ref = FilterServer(buckets=(64, 256))
-    srv_ref.register("t", idx)
-    srv_ker = FilterServer(buckets=(64, 256), use_kernel=True, block_n=64)
-    srv_ker.register("t", idx)
-    np.testing.assert_array_equal(srv_ref.query("t", ids),
-                                  srv_ker.query("t", ids))
+    srv_ref = FilterServer(_cfg(buckets=(64, 256)))
+    ref = srv_ref.admit(TenantSpec("t", index=idx))
+    srv_ker = FilterServer(_cfg(buckets=(64, 256), use_kernel=True,
+                                block_n=64))
+    ker = srv_ker.admit(TenantSpec("t", index=idx))
+    np.testing.assert_array_equal(ref.query(ids), ker.query(ids))
 
 
 def test_stats_latency_and_metrics_feed(fitted, tmp_path):
     ds, idx = fitted["a"]
     path = str(tmp_path / "serve.jsonl")
-    srv = FilterServer(buckets=(64,), metrics_path=path)
-    srv.register("t", idx)
-    srv.query("t", ds.records[:50])
+    srv = FilterServer(_cfg(buckets=(64,), metrics_path=path))
+    srv.admit(TenantSpec("t", index=idx))
+    srv.submit("t", ds.records[:50])
+    srv.run_until_drained()             # the metrics-logging drain path
     snap = srv.stats_snapshot()
     assert snap["batch_p50_ms"] > 0
     assert snap["request_p99_ms"] >= snap["request_p50_ms"] > 0

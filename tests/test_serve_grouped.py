@@ -13,10 +13,15 @@ import pytest
 from repro.core import bloom, existence
 from repro.data import tuples
 from repro.kernels.bloom_query import ops as bloom_ops
-from repro.serve_filter import FilterServer, group_key, plan_query
+from repro.serve_filter import (FilterServer, ServeConfig, TenantSpec,
+                                group_key, plan_query)
 from repro.serve_filter import executors as executors_lib
-from repro.serve_filter import fused as fused_lib
 from repro.serve_filter.arena import PlanGroupArena
+
+
+def _cfg(**kw) -> ServeConfig:
+    """Compact ServeConfig builder for tests (the legacy-kwarg bridge)."""
+    return ServeConfig.from_kwargs(**kw)
 
 
 @pytest.fixture(scope="module")
@@ -150,15 +155,15 @@ def test_arena_slot_reuse_and_compaction(fleet):
 
 
 def test_grouped_executor_refcount_released_on_last_evict(fleet):
-    fused_lib.clear_cache()
+    executors_lib.clear_executors()
     _, idx = fleet["s0j0"]
-    srv = FilterServer(buckets=(32,), grouped=True)
-    srv.register("t1", idx)
-    srv.register("t2", fleet["s0j1"][1])
+    srv = FilterServer(_cfg(buckets=(32,), grouped=True))
+    h1 = srv.admit(TenantSpec("t1", index=idx))
+    srv.admit(TenantSpec("t2", index=fleet["s0j1"][1]))
     assert len(srv.registry.groups) == 1
     key = next(iter(srv.registry.groups))
     assert key in executors_lib._GROUPED
-    srv.query("t1", fleet["s0j0"][0].records[:8])
+    h1.query(fleet["s0j0"][0].records[:8])
     assert srv.stats_snapshot()["compiled_programs"] >= 1
     srv.evict("t1")
     assert key in executors_lib._GROUPED     # t2 still holds the group
@@ -179,7 +184,7 @@ def _drive(srv, fleet, plan_rows, seed):
         for t in fleet:
             reqs.append(srv.submit(t, corpora[t][start:start + size]))
     srv.run_until_drained()
-    assert all(r.done and r.error is None for r in reqs)
+    assert all(r.done() and r.error is None for r in reqs)
     return [(r.answers, r.model_yes, r.backup_yes) for r in reqs]
 
 
@@ -194,11 +199,12 @@ def test_grouped_matches_local_bit_identical(fleet, buckets, use_kernel,
     one bit of any stage output vs per-tenant LocalExecutor serving —
     odd request sizes, cross-tenant coalescing, both probe flavors."""
     kw = dict(buckets=buckets, use_kernel=use_kernel, block_n=64)
-    srv_l = FilterServer(**kw)
-    srv_g = FilterServer(grouped=True, async_dispatch=async_dispatch, **kw)
+    srv_l = FilterServer(_cfg(**kw))
+    srv_g = FilterServer(_cfg(grouped=True, async_dispatch=async_dispatch,
+                              **kw))
     for t, (_, idx) in fleet.items():
-        srv_l.register(t, idx)
-        srv_g.register(t, idx)
+        srv_l.admit(TenantSpec(t, index=idx))
+        srv_g.admit(TenantSpec(t, index=idx))
     plan_rows = [(0, 13), (13, 57), (70, 128), (198, 202)]
     got_l = _drive(srv_l, fleet, plan_rows, seed=5)
     got_g = _drive(srv_g, fleet, plan_rows, seed=5)
@@ -215,11 +221,11 @@ def test_grouped_churn_mid_stream_bit_identical(fleet, tmp_path):
     """evict -> compact -> rehydrate between (and amid) request waves
     must not change one answer bit: slots are reused/renumbered under a
     live scheduler."""
-    srv_l = FilterServer(buckets=(32, 128))
-    srv_g = FilterServer(buckets=(32, 128), grouped=True)
+    srv_l = FilterServer(_cfg(buckets=(32, 128)))
+    srv_g = FilterServer(_cfg(buckets=(32, 128), grouped=True))
     for t, (_, idx) in fleet.items():
-        srv_l.register(t, idx)
-        srv_g.register(t, idx)
+        srv_l.admit(TenantSpec(t, index=idx))
+        srv_g.admit(TenantSpec(t, index=idx))
 
     wave1_l = _drive(srv_l, fleet, [(0, 41)], seed=6)
     wave1_g = _drive(srv_g, fleet, [(0, 41)], seed=6)
@@ -232,8 +238,8 @@ def test_grouped_churn_mid_stream_bit_identical(fleet, tmp_path):
     arena = next(a for a in srv_g.registry.groups.values()
                  if "s0j2" in a)
     assert "s0j0" not in arena and len(arena) == 1
-    srv_g.load("s0j0", str(tmp_path))            # lands back in the arena
-    srv_g.register("s0j1", fleet["s0j1"][1])
+    srv_g.admit(TenantSpec("s0j0", checkpoint=str(tmp_path)))  # back in
+    srv_g.admit(TenantSpec("s0j1", index=fleet["s0j1"][1]))
     assert len(arena) == 3 or "s0j0" in srv_g.registry.groups[arena.key]
 
     # second wave mixes churned and untouched tenants mid-stream:
@@ -242,12 +248,12 @@ def test_grouped_churn_mid_stream_bit_identical(fleet, tmp_path):
     reqs_g = [srv_g.submit(t, corpora[t][:150]) for t in fleet]
     assert srv_g.step()
     srv_g.evict("s1j1")
-    srv_g.register("s1j1", fleet["s1j1"][1])
+    srv_g.admit(TenantSpec("s1j1", index=fleet["s1j1"][1]))
     srv_g.run_until_drained()
     reqs_l = [srv_l.submit(t, corpora[t][:150]) for t in fleet]
     srv_l.run_until_drained()
     for g, l in zip(reqs_g, reqs_l):
-        assert g.done and g.error is None
+        assert g.done() and g.error is None
         np.testing.assert_array_equal(g.answers, l.answers)
         np.testing.assert_array_equal(g.model_yes, l.model_yes)
         np.testing.assert_array_equal(g.backup_yes, l.backup_yes)
@@ -261,17 +267,17 @@ def test_out_of_vocab_ids_grouped_matches_local(fleet):
     """Ids past the fitted cardinality must clamp exactly like the
     local path's per-table gather — never walk into a neighbor tenant's
     block of the combined embedding matrix."""
-    srv_l = FilterServer(buckets=(64,))
-    srv_g = FilterServer(buckets=(64,), grouped=True)
+    srv_l = FilterServer(_cfg(buckets=(64,)))
+    srv_g = FilterServer(_cfg(buckets=(64,), grouped=True))
     for t, (_, idx) in fleet.items():
-        srv_l.register(t, idx)
-        srv_g.register(t, idx)
+        srv_l.admit(TenantSpec(t, index=idx))
+        srv_g.admit(TenantSpec(t, index=idx))
     rng = np.random.default_rng(11)
     for t, (ds, _) in fleet.items():
         wild = rng.integers(0, 10 ** 6,
                             size=(40, ds.records.shape[1])).astype(np.int32)
-        np.testing.assert_array_equal(srv_g.query(t, wild),
-                                      srv_l.query(t, wild))
+        np.testing.assert_array_equal(srv_g.handle(t).query(wild),
+                                      srv_l.handle(t).query(wild))
 
 
 def test_hot_swap_does_not_leak_arena_words(fleet):
@@ -279,12 +285,13 @@ def test_hot_swap_does_not_leak_arena_words(fleet):
     path) must not grow the bitset arena without bound: the in-place
     swap still compacts when dead words pile up."""
     idxs = [fleet[f"s0j{j}"][1] for j in range(3)]
-    srv = FilterServer(buckets=(32,), grouped=True)
-    for j, idx in enumerate(idxs):
-        srv.register(f"t{j}", idx)
+    srv = FilterServer(_cfg(buckets=(32,), grouped=True))
+    handles = [srv.admit(TenantSpec(f"t{j}", index=idx))
+               for j, idx in enumerate(idxs)]
     arena = next(iter(srv.registry.groups.values()))
     for rep in range(30):       # alternate sizes so ranges can't reuse
-        srv.register("t0", idxs[rep % 2])
+        handles[0].reload(idxs[rep % 2])
+    assert handles[0].epoch == 30
     live = arena.live_words
     assert arena._bits_used <= 2 * max(live, 32), \
         f"bitset arena leaked: used {arena._bits_used} vs live {live}"
@@ -296,8 +303,8 @@ def test_submit_many_atomic_on_bad_item(fleet):
     handle lost."""
     _, idx = fleet["s0j0"]
     ds = fleet["s0j0"][0]
-    srv = FilterServer(buckets=(32,), grouped=True)
-    srv.register("t", idx)
+    srv = FilterServer(_cfg(buckets=(32,), grouped=True))
+    srv.admit(TenantSpec("t", index=idx))
     with pytest.raises(KeyError):
         srv.submit_many([("t", ds.records[:4]), ("ghost", ds.records[:4])])
     assert srv.scheduler.pending_rows == 0      # nothing half-admitted
@@ -308,8 +315,8 @@ def test_submit_many_atomic_on_bad_item(fleet):
 
 
 def test_arena_footprint_observable(fleet):
-    srv = FilterServer(buckets=(32,), grouped=True)
-    srv.register("t", fleet["s0j0"][1])
+    srv = FilterServer(_cfg(buckets=(32,), grouped=True))
+    srv.admit(TenantSpec("t", index=fleet["s0j0"][1]))
     snap = srv.stats_snapshot()
     assert snap["arena_mb"] > 0
     assert snap["plan_groups"] == 1
@@ -322,41 +329,22 @@ def test_run_until_drained_retires_inflight_past_step_budget(fleet):
     when max_steps cuts the stepping loop short — and the forced retires
     must land in ServeStats (batch count + latency)."""
     ds, idx = fleet["s0j0"]
-    srv = FilterServer(buckets=(16,), async_dispatch=True)
-    srv.register("t", idx)
+    srv = FilterServer(_cfg(buckets=(16,), async_dispatch=True))
+    srv.admit(TenantSpec("t", index=idx))
     reqs = [srv.submit("t", ds.records[i * 16:(i + 1) * 16])
             for i in range(4)]
     steps = srv.scheduler.run_until_drained(max_steps=2)
     assert steps == 2
     assert srv.scheduler.inflight_batches == 0       # the drain contract
-    done = [r for r in reqs if r.done]
+    done = [r for r in reqs if r.done()]
     assert len(done) == 2                            # 2 dispatched batches
     assert srv.stats.totals.batches == 2             # ...both accounted
     assert srv.stats.batch_latency.summary("b_")["b_p50_ms"] > 0
     srv.run_until_drained()                          # the rest still serve
-    assert all(r.done and r.answers.all() for r in reqs)
+    assert all(r.done() and r.answers.all() for r in reqs)
     assert srv.scheduler.inflight_batches == 0
 
 
-# ------------------------------------------------------- back-compat shim
-
-def test_fused_shim_warns_and_delegates(fleet):
-    """fused.fused_query_fn must keep its pre-planner contract (same
-    callable for equal signatures, shared with the executor cache) while
-    warning that it is a shim — pinned so a later PR can remove it."""
-    _, idx = fleet["s0j0"]
-    cfg, fp = idx.cfg, idx.fixup_filter.params
-    fused_lib.clear_cache()
-    with pytest.warns(DeprecationWarning, match="back-compat shim"):
-        fn = fused_lib.fused_query_fn(cfg, fp)
-    with pytest.warns(DeprecationWarning):
-        assert fused_lib.fused_query_fn(cfg, fp) is fn   # shared callable
-    plan = plan_query(cfg, fp)
-    assert executors_lib.executor_for(plan).fn is fn     # same cache
-    ans, model, backup = fn(idx.params, idx.fixup_filter.bits, idx.tau,
-                            fleet["s0j0"][0].records[:32])
-    want = np.asarray(idx.query(fleet["s0j0"][0].records[:32]))
-    np.testing.assert_array_equal(np.asarray(ans), want)
-    assert fused_lib.compiled_program_count() >= 1
-    fused_lib.clear_cache()
-    assert fused_lib.compiled_program_count() == 0
+# the deprecated serve_filter.fused shim is GONE — its import-error pin
+# lives in tests/test_serve_lifecycle.py next to the rest of the
+# API-surface tests

@@ -1,0 +1,580 @@
+"""Tenant-lifecycle serving API: ServeConfig, handles, futures, hot-reload.
+
+The load-bearing property: ``handle.reload()`` under LIVE grouped
+traffic (submit -> step interleaved) is a zero-drain atomic swap —
+every row answers bit-identically to the CORRECT epoch's index (rows
+dispatched before the swap from the old index, rows after from the new
+one), none are dropped, and the guarantee survives an
+evict -> compact -> reload churn sequence and async in-flight batches.
+
+Also pinned here: the declarative config surface (frozen ServeConfig /
+TenantSpec validation), the lifecycle state machine (ADMITTED ->
+HYDRATING -> SERVING -> DRAINING -> RETIRED, transition counters),
+QueryFuture semantics (retire-time resolution, request-scoped
+``result()`` — no drain-the-world side effect), the deprecated
+``FilterServer`` wrappers (DeprecationWarning + behavior preserved),
+and the removal of the old ``serve_filter.fused`` shim.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import existence
+from repro.data import tuples
+from repro.serve_filter import (BucketConfig, DispatchConfig, FilterEntry,
+                                FilterServeError, FilterServer,
+                                GroupingConfig, ProbeConfig, ServeConfig,
+                                TenantSpec, TenantState, wait_all)
+
+
+def _cfg(**kw) -> ServeConfig:
+    """Compact ServeConfig builder for tests (the legacy-kwarg bridge)."""
+    return ServeConfig.from_kwargs(**kw)
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    """Four cheap fitted indexes sharing ONE plan shape (one group),
+    fitted on distinct record sets — distinct weights/tau/bitsets, so
+    reloading tenant X from fit i to fit j visibly changes answers."""
+    st = existence.TrainSettings(steps=15, n_pos=800, n_neg=800)
+    out = {}
+    for j in range(4):
+        ds = tuples.synthesize([300, 200, 80], n_records=900, seed=20 + j)
+        out[f"f{j}"] = (ds, existence.fit(ds, theta=100, settings=st))
+    return out
+
+
+def _probes(ds, n, seed):
+    rng = np.random.default_rng(seed)
+    pos = ds.records[rng.integers(0, len(ds.records), n // 2)]
+    neg = np.stack([rng.integers(1, v, n - n // 2) for v in ds.cards],
+                   axis=-1).astype(np.int32)
+    return np.concatenate([pos, neg])
+
+
+def _grouped_srv(fleet, tenants, **kw):
+    srv = FilterServer(_cfg(grouped=True, **kw))
+    handles = {t: srv.admit(TenantSpec(t, index=fleet[f][1]))
+               for t, f in tenants.items()}
+    return srv, handles
+
+
+# ------------------------------------------------------------ config surface
+
+def test_serve_config_frozen_and_validated():
+    cfg = ServeConfig(buckets=BucketConfig((128, 32)))
+    assert cfg.buckets.sizes == (32, 128)       # normalized, sorted
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.budget_mb = 12.0
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.buckets.sizes = (64,)
+    with pytest.raises(ValueError):
+        BucketConfig(())
+    with pytest.raises(ValueError):
+        DispatchConfig(max_inflight=0)
+    with pytest.raises(ValueError):
+        GroupingConfig(tile_rows=0)
+    with pytest.raises(ValueError):
+        ProbeConfig(block_n=0)
+    # the legacy bridge reproduces the old kwarg surface faithfully
+    legacy = ServeConfig.from_kwargs(buckets=(16,), grouped=True,
+                                     use_kernel=True, block_n=64,
+                                     async_dispatch=True, budget_mb=3.5)
+    assert legacy.buckets.sizes == (16,)
+    assert legacy.grouping.enabled and legacy.probe.use_kernel
+    assert legacy.dispatch.async_dispatch and legacy.budget_mb == 3.5
+
+
+def test_tenant_spec_validates_source(fleet):
+    _, idx = fleet["f0"]
+    with pytest.raises(ValueError):
+        TenantSpec("t")                          # no source
+    with pytest.raises(ValueError):
+        TenantSpec("t", index=idx, checkpoint="somewhere")  # both
+    with pytest.raises(ValueError):
+        TenantSpec("t", index=idx, step=3)       # step w/o checkpoint
+    with pytest.raises(ValueError):
+        TenantSpec("", index=idx)
+    spec = TenantSpec("t", index=idx, pinned=True, groupable=False)
+    assert spec.pinned and not spec.groupable
+
+
+# -------------------------------------------------------- lifecycle machine
+
+def test_admit_records_lifecycle_transitions(fleet):
+    ds, idx = fleet["f0"]
+    srv = FilterServer(_cfg(buckets=(32,)))
+    h = srv.admit(TenantSpec("t", index=idx))
+    assert h.state is TenantState.SERVING and h.epoch == 0
+    assert srv.stats.transitions_of("t") == (
+        (None, TenantState.ADMITTED),
+        (TenantState.ADMITTED, TenantState.HYDRATING),
+        (TenantState.HYDRATING, TenantState.SERVING))
+    h.reload(fleet["f1"][1])
+    assert h.epoch == 1
+    assert srv.stats.transitions_of("t")[-2:] == (
+        (TenantState.SERVING, TenantState.HYDRATING),
+        (TenantState.HYDRATING, TenantState.SERVING))
+    h.retire()
+    assert h.state is TenantState.RETIRED
+    assert srv.stats.transitions_of("t")[-2:] == (
+        (TenantState.SERVING, TenantState.DRAINING),
+        (TenantState.DRAINING, TenantState.RETIRED))
+    snap = srv.stats_snapshot()
+    assert snap["lifecycle_admitted"] == 1.0
+    assert snap["lifecycle_serving"] == 2.0      # admit + reload
+    assert snap["lifecycle_retired"] == 1.0
+    assert snap["reloads"] == 1.0 and snap["reload_p50_ms"] > 0
+    # retire is idempotent; handles of retired tenants keep reporting
+    h.retire()
+    assert h.state is TenantState.RETIRED and h.epoch == 1
+
+
+def test_draining_rejects_submissions_but_finishes_queued(fleet):
+    ds, idx = fleet["f0"]
+    srv = FilterServer(_cfg(buckets=(16,)))
+    h = srv.admit(TenantSpec("t", index=idx))
+    fut = srv.submit("t", ds.records[:40])       # 3 spans of <= 16
+    srv.registry.begin_drain("t")
+    assert h.state is TenantState.DRAINING
+    with pytest.raises(FilterServeError, match="draining"):
+        srv.submit("t", ds.records[:4])
+    # queued rows still answer — draining is graceful
+    assert fut.result().all() and fut.done()
+    h.retire()                                   # nothing left to drain
+    assert h.state is TenantState.RETIRED
+    with pytest.raises(KeyError):
+        srv.submit("t", ds.records[:4])
+    # a draining (or retired) tenant cannot be reloaded
+    srv2 = FilterServer(_cfg(buckets=(16,)))
+    h2 = srv2.admit(TenantSpec("t", index=idx))
+    srv2.registry.begin_drain("t")
+    with pytest.raises(RuntimeError, match="draining"):
+        h2.reload(fleet["f1"][1])
+
+
+def test_retire_drains_queued_and_inflight_rows(fleet):
+    ds, idx = fleet["f0"]
+    srv = FilterServer(_cfg(buckets=(16,), async_dispatch=True))
+    h = srv.admit(TenantSpec("t", index=idx))
+    futs = [srv.submit("t", ds.records[i * 16:(i + 1) * 16])
+            for i in range(4)]
+    srv.step()                                   # one batch in flight
+    h.retire()                                   # graceful: no row lost
+    assert h.state is TenantState.RETIRED
+    assert all(f.done() and f.error is None for f in futs)
+    assert all(f.answers.all() for f in futs)
+    assert srv.scheduler.inflight_batches == 0
+
+
+def test_force_retire_fails_queued_futures_promptly(fleet):
+    ds, idx = fleet["f0"]
+    srv = FilterServer(_cfg(buckets=(16,)))
+    h = srv.admit(TenantSpec("t", index=idx))
+    fut = srv.submit("t", ds.records[:8])
+    h.retire(drain=False)
+    assert fut.done() and fut.error is not None
+    with pytest.raises(FilterServeError, match="force-retired"):
+        fut.result()
+    assert isinstance(fut.exception(), FilterServeError)
+
+
+def test_failed_reload_rolls_back_to_serving(fleet, tmp_path):
+    """A transient hydration error (bad checkpoint path) during reload
+    must NOT brick the tenant: it rolls back to SERVING on its current
+    epoch, keeps answering, and a later reload can retry."""
+    ds, idx = fleet["f0"]
+    probes = _probes(ds, 32, seed=41)
+    srv = FilterServer(_cfg(buckets=(32,), grouped=True))
+    h = srv.admit(TenantSpec("t", index=idx))
+    before = h.query(probes).copy()
+    with pytest.raises(FileNotFoundError):
+        h.reload(checkpoint=str(tmp_path / "nowhere"))
+    assert h.state is TenantState.SERVING and h.epoch == 0
+    np.testing.assert_array_equal(h.query(probes), before)  # old epoch
+    assert srv.stats.transitions_of("t")[-2:] == (
+        (TenantState.SERVING, TenantState.HYDRATING),
+        (TenantState.HYDRATING, TenantState.SERVING))       # rolled back
+    h.reload(fleet["f1"][1])                                # retry works
+    assert h.epoch == 1
+    np.testing.assert_array_equal(
+        h.query(probes), np.asarray(fleet["f1"][1].query(probes)))
+
+
+def test_admit_on_serving_tenant_is_a_recorded_reload(fleet):
+    """Re-admitting a live tenant (the deprecated register() refit
+    idiom routes here too) must count as a reload and return the
+    tenant's EXISTING handle with its spec updated — not a second,
+    divergent handle."""
+    _, idx = fleet["f0"]
+    srv = FilterServer(_cfg(buckets=(32,)))
+    h = srv.admit(TenantSpec("t", index=idx))
+    h2 = srv.admit(TenantSpec("t", index=fleet["f1"][1]))
+    assert h2 is h and h.epoch == 1
+    assert h.spec.index is fleet["f1"][1]
+    assert srv.stats_snapshot()["reloads"] == 1.0
+    probes = _probes(fleet["f0"][0], 32, seed=37)
+    np.testing.assert_array_equal(
+        h.query(probes), np.asarray(fleet["f1"][1].query(probes)))
+
+
+def test_release_failure_mid_reload_does_not_wedge_tenant(fleet):
+    """If the NEW entry lands but releasing the OLD one fails (e.g.
+    compaction OOM), the tenant must come out SERVING on the new epoch
+    — not wedged in HYDRATING with no legal exit."""
+    srv = FilterServer(_cfg(buckets=(32,), grouped=True))
+    h = srv.admit(TenantSpec("t", index=fleet["f0"][1]))
+    (arena,) = srv.registry.groups.values()
+    orig = arena.maybe_compact
+    arena.maybe_compact = lambda: (_ for _ in ()).throw(
+        MemoryError("injected compaction failure"))
+    try:
+        with pytest.raises(MemoryError):
+            h.reload(fleet["f1"][1])
+    finally:
+        arena.maybe_compact = orig
+    assert h.state is TenantState.SERVING     # swap landed, not wedged
+    assert h.epoch == 1
+    probes = _probes(fleet["f0"][0], 32, seed=39)
+    np.testing.assert_array_equal(           # serving the NEW epoch
+        h.query(probes), np.asarray(fleet["f1"][1].query(probes)))
+    h.reload(fleet["f2"][1])                 # and reloadable again
+    assert h.epoch == 2
+
+
+def test_reload_on_retired_handle_raises(fleet):
+    """RETIRED is terminal: a stale handle must not silently resurrect
+    the tenant (epoch reset, untracked handle) — it raises, and only an
+    explicit admit() brings the tenant back."""
+    _, idx = fleet["f0"]
+    srv = FilterServer(_cfg(buckets=(32,)))
+    h = srv.admit(TenantSpec("t", index=idx))
+    h.retire()
+    with pytest.raises(RuntimeError, match="retired"):
+        h.reload(fleet["f1"][1])
+    assert "t" not in srv.registry and "t" not in srv.handles
+    h2 = srv.admit(TenantSpec("t", index=fleet["f1"][1]))   # explicit path
+    assert h2.state is TenantState.SERVING and h2.epoch == 0
+
+
+def test_failed_fresh_admission_terminates_lifecycle(fleet, tmp_path):
+    """A fresh admission that fails to hydrate must leave a CONSISTENT
+    lifecycle trail: ... -> HYDRATING -> RETIRED, matching state_of()
+    reporting RETIRED (no tenant dangling in HYDRATING forever)."""
+    srv = FilterServer(_cfg(buckets=(32,)))
+    with pytest.raises(FileNotFoundError):
+        srv.admit(TenantSpec("ghost", checkpoint=str(tmp_path / "nope")))
+    assert "ghost" not in srv.registry and "ghost" not in srv.handles
+    assert srv.registry.state_of("ghost") is TenantState.RETIRED
+    assert srv.stats.transitions_of("ghost") == (
+        (None, TenantState.ADMITTED),
+        (TenantState.ADMITTED, TenantState.HYDRATING),
+        (TenantState.HYDRATING, TenantState.RETIRED))
+
+
+def test_swap_allocates_before_freeing_old_words(fleet):
+    """A size-changing swap must claim the new word range BEFORE
+    zeroing/freeing the old one, so an allocation failure under the
+    reload-rollback path leaves the old bitset intact (no silent
+    false negatives on the rolled-back epoch)."""
+    srv = FilterServer(_cfg(buckets=(32,), grouped=True))
+    h = srv.admit(TenantSpec("t", index=fleet["f0"][1]))
+    (arena,) = srv.registry.groups.values()
+
+    boom = MemoryError("injected allocation failure")
+    orig_alloc = arena._alloc_words
+
+    def failing_alloc(n):
+        raise boom
+    old_words = np.asarray(fleet["f0"][1].fixup_filter.bits)
+    # a reload target whose bitset SIZE differs (forces reallocation)
+    target = next(fleet[f][1] for f in ("f1", "f2", "f3")
+                  if fleet[f][1].fixup_filter.params.n_words
+                  != fleet["f0"][1].fixup_filter.params.n_words)
+    arena._alloc_words = failing_alloc
+    try:
+        with pytest.raises(MemoryError):
+            h.reload(target)
+    finally:
+        arena._alloc_words = orig_alloc
+    # rolled back to SERVING on the old epoch with the old bits INTACT
+    assert h.state is TenantState.SERVING and h.epoch == 0
+    slot = arena.slot_of("t")
+    base = int(arena._word_base[slot])
+    np.testing.assert_array_equal(
+        arena._bits[base:base + old_words.size], old_words)
+    probes = _probes(fleet["f0"][0], 32, seed=43)
+    np.testing.assert_array_equal(
+        h.query(probes), np.asarray(fleet["f0"][1].query(probes)))
+
+
+def test_budget_eviction_reaps_server_handles(fleet):
+    """Registry-driven LRU eviction must not leak TenantHandles in the
+    server (a leaked handle pins the spec's whole in-memory index)."""
+    _, idx = fleet["f0"]
+    srv = FilterServer(_cfg(budget_mb=2.5 * idx.total_mb, buckets=(32,)))
+    h1 = srv.admit(TenantSpec("t1", index=idx))
+    h1.reload(fleet["f1"][1])
+    srv.admit(TenantSpec("t2", index=idx))
+    srv.admit(TenantSpec("t3", index=idx))       # budget evicts t1
+    assert srv.registry.evictions == ["t1"]
+    assert set(srv.handles) == {"t2", "t3"}      # t1's handle reaped
+    assert h1.state is TenantState.RETIRED
+    assert h1.epoch == 1                         # snapshotted at eviction
+    with pytest.raises(KeyError):
+        srv.handle("t1")
+
+
+def test_pinned_tenant_survives_budget_pressure(fleet):
+    _, idx = fleet["f0"]
+    mb = idx.total_mb
+    srv = FilterServer(_cfg(budget_mb=2.5 * mb, buckets=(32,)))
+    srv.admit(TenantSpec("pinned", index=idx, pinned=True))
+    srv.admit(TenantSpec("lru", index=idx))
+    srv.admit(TenantSpec("fresh", index=idx))    # over budget
+    # 'pinned' is the least recently used, but exempt: 'lru' goes
+    assert set(srv.registry.tenants) == {"pinned", "fresh"}
+    assert srv.registry.evictions == ["lru"]
+
+
+def test_ungroupable_tenant_stays_out_of_arena(fleet):
+    srv = FilterServer(_cfg(buckets=(32,), grouped=True))
+    srv.admit(TenantSpec("g1", index=fleet["f0"][1]))
+    srv.admit(TenantSpec("g2", index=fleet["f1"][1]))
+    heavy = srv.admit(TenantSpec("heavy", index=fleet["f2"][1],
+                                 groupable=False))
+    assert heavy.entry.group is None and heavy.entry.placed is not None
+    (arena,) = srv.registry.groups.values()
+    assert set(arena.tenants) == {"g1", "g2"}
+    # ungroupable still answers bit-identically to a direct query
+    ds = fleet["f2"][0]
+    probes = _probes(ds, 64, seed=3)
+    np.testing.assert_array_equal(
+        heavy.query(probes), np.asarray(fleet["f2"][1].query(probes)))
+
+
+# ------------------------------------------------------------ futures surface
+
+def test_result_scoped_to_request_not_drain_the_world(fleet):
+    """The old FilterServer.query drained the ENTIRE scheduler; the
+    futures path must complete its own request and leave other tenants'
+    later-queued requests queued."""
+    srv = FilterServer(_cfg(buckets=(16,)))
+    srv.admit(TenantSpec("a", index=fleet["f0"][1]))
+    srv.admit(TenantSpec("b", index=fleet["f1"][1]))
+    fut_a = srv.submit("a", fleet["f0"][0].records[:16])
+    futs_b = [srv.submit("b", fleet["f1"][0].records[i * 16:(i + 1) * 16])
+              for i in range(3)]
+    assert fut_a.result().all()
+    assert not any(f.done() for f in futs_b)     # behind in ring: queued
+    assert srv.scheduler.pending_rows == 48
+    done = wait_all(futs_b)
+    assert all(f.done() and f.answers.all() for f in done)
+    assert srv.scheduler.pending_rows == 0
+
+
+def test_future_timeout_and_drained_failure(fleet):
+    ds, idx = fleet["f0"]
+    srv = FilterServer(_cfg(buckets=(16,)))
+    srv.admit(TenantSpec("t", index=idx))
+    fut = srv.submit("t", ds.records[:8])
+    with pytest.raises(TimeoutError):
+        fut.result(timeout=0)
+    assert fut.result(timeout=30).all()          # still completable after
+    # zero-row requests resolve immediately, no stepping required
+    empty = srv.submit("t", np.empty((0, ds.n_cols), np.int32))
+    assert empty.done() and empty.result().shape == (0,)
+
+
+# ------------------------------------- the acceptance property: hot-reload
+
+def test_reload_under_live_grouped_traffic_epoch_exact(fleet):
+    """submit -> step interleaved, reload mid-request: rows dispatched
+    before the swap answer from the OLD index, rows after from the NEW
+    one — bit-identically, with live same-group sibling traffic, and
+    no row dropped."""
+    srv, handles = _grouped_srv(
+        fleet, {"main": "f0", "sib1": "f1", "sib2": "f2"}, buckets=(16,))
+    ds = fleet["f0"][0]
+    old_idx, new_idx = fleet["f0"][1], fleet["f3"][1]
+    probes = _probes(ds, 48, seed=11)
+    want_old = np.asarray(old_idx.query(probes))
+    want_new = np.asarray(new_idx.query(probes))
+    assert (want_old != want_new).any()          # epochs distinguishable
+
+    sib_probes = {t: _probes(fleet[f][0], 32, seed=12)
+                  for t, f in (("sib1", "f1"), ("sib2", "f2"))}
+    fut = srv.submit("main", probes)             # 3 spans of 16
+    sib_futs = {t: srv.submit(t, p) for t, p in sib_probes.items()}
+    assert srv.step()                            # span 1 dispatched+retired
+    handles["main"].reload(new_idx)              # swap mid-request
+    wait_all([fut, *sib_futs.values()])
+
+    ans = fut.answers
+    assert fut.done() and fut.error is None and ans.shape == (48,)
+    np.testing.assert_array_equal(ans[:16], want_old[:16])   # pre-swap rows
+    np.testing.assert_array_equal(ans[16:], want_new[16:])   # post-swap rows
+    for t, f in (("sib1", "f1"), ("sib2", "f2")):            # bystanders
+        np.testing.assert_array_equal(
+            sib_futs[t].answers,
+            np.asarray(fleet[f][1].query(sib_probes[t])))
+    assert srv.stats_snapshot()["reloads"] == 1.0
+
+
+def test_reload_with_async_inflight_batch_retires_old_epoch(fleet):
+    """A batch IN FLIGHT at swap time must retire against the arrays it
+    was dispatched with (the old epoch) even though it materializes
+    after the swap."""
+    srv, handles = _grouped_srv(fleet, {"main": "f0"}, buckets=(16,),
+                                async_dispatch=True, max_inflight=2)
+    ds = fleet["f0"][0]
+    old_idx, new_idx = fleet["f0"][1], fleet["f1"][1]
+    probes = _probes(ds, 32, seed=13)
+    want_old = np.asarray(old_idx.query(probes))
+    want_new = np.asarray(new_idx.query(probes))
+
+    fut = srv.submit("main", probes)             # 2 spans of 16
+    assert srv.step()
+    assert srv.scheduler.inflight_batches == 1   # span 1 NOT yet retired
+    handles["main"].reload(new_idx)
+    srv.run_until_drained()
+    ans = fut.answers
+    assert fut.done() and ans.shape == (32,)
+    np.testing.assert_array_equal(ans[:16], want_old[:16])
+    np.testing.assert_array_equal(ans[16:], want_new[16:])
+
+
+def test_reload_churn_evict_compact_reload_epoch_exact(fleet):
+    """The churn gauntlet: grow the arena, retire tenants until it
+    COMPACTS (slots renumber), reload mid-request on the survivor —
+    answers stay epoch-exact through slot renumbering, and repeated
+    reloads keep the arena bounded."""
+    tenants = {"main": "f0", "sib1": "f1", "sib2": "f2"}
+    extras = {f"extra{j}": f"f{j % 4}" for j in range(5)}
+    srv, handles = _grouped_srv(fleet, {**tenants, **extras},
+                                buckets=(16,))
+    (arena,) = srv.registry.groups.values()
+    assert arena.capacity == 8                   # grew past the minimum
+
+    ds = fleet["f0"][0]
+    old_idx, new_idx = fleet["f0"][1], fleet["f3"][1]
+    probes = _probes(ds, 48, seed=17)
+    want_old = np.asarray(old_idx.query(probes))
+    want_new = np.asarray(new_idx.query(probes))
+
+    fut = srv.submit("main", probes)
+    assert srv.step()                            # span 1 under epoch 0
+    version = arena.version
+    for name in extras:                          # evict -> compact
+        handles[name].retire()
+    assert arena.capacity == 4                   # compaction repacked
+    assert arena.version > version
+    handles["main"].reload(new_idx)              # reload post-compaction
+    late = srv.submit("main", _probes(ds, 16, seed=18))
+    wait_all([fut, late])
+
+    ans = fut.answers
+    assert ans.shape == (48,) and fut.error is None
+    np.testing.assert_array_equal(ans[:16], want_old[:16])
+    np.testing.assert_array_equal(ans[16:], want_new[16:])
+    np.testing.assert_array_equal(
+        late.answers, np.asarray(new_idx.query(late.request.ids)))
+
+    # churn on: alternate reloads under traffic never leak the arena
+    for rep in range(12):
+        srv.submit("main", probes[:16])
+        srv.step()
+        handles["main"].reload(fleet[f"f{rep % 2}"][1])
+    srv.run_until_drained()
+    assert handles["main"].epoch == 13
+    assert arena._bits_used <= 2 * max(arena.live_words, 32)
+    final = srv.submit("main", probes).result()
+    np.testing.assert_array_equal(
+        final, np.asarray(fleet["f1"][1].query(probes)))
+
+
+# -------------------------------------------- v1 -> v2 checkpoint hydration
+
+def test_v1_checkpoint_reload_warns_and_serves_like_fresh_v2(fleet,
+                                                             tmp_path):
+    """A v1-era checkpoint hydrated through handle.reload() must fire
+    the upgrade warning and then serve bit-identically to the same
+    index freshly admitted as v2 (same arrays, current MLP head)."""
+    ds, idx = fleet["f0"]
+    probes = _probes(ds, 96, seed=23)
+    srv = FilterServer(_cfg(buckets=(32, 128), grouped=True))
+    h = srv.admit(TenantSpec("t", index=idx))
+    baseline = h.query(probes).copy()            # fresh v2 registration
+    h.save(str(tmp_path))
+
+    meta_path = tmp_path / "t" / "step_0" / "meta.json"
+    meta = json.loads(meta_path.read_text())
+    assert meta["extra"]["kind"] == "existence_index_v2"
+    meta["extra"]["kind"] = "existence_index_v1"  # demote to the old kind
+    meta_path.write_text(json.dumps(meta))
+
+    with pytest.warns(UserWarning, match="existence_index_v1"):
+        h.reload(checkpoint=str(tmp_path))
+    assert h.epoch == 1
+    np.testing.assert_array_equal(h.query(probes), baseline)
+
+
+# --------------------------------------------------- deprecated old surface
+
+def test_legacy_wrappers_warn_with_behavior_pinned(fleet, tmp_path):
+    """FilterServer's kwarg constructor and register/load/query must
+    emit DeprecationWarning while behaving exactly like the new
+    surface they wrap."""
+    ds, idx = fleet["f0"]
+    probes = _probes(ds, 48, seed=29)
+    with pytest.warns(DeprecationWarning, match="ServeConfig"):
+        srv = FilterServer(buckets=(16, 64), grouped=True)
+    assert srv.config.buckets.sizes == (16, 64)
+    assert srv.config.grouping.enabled
+
+    with pytest.warns(DeprecationWarning, match="admit"):
+        entry = srv.register("t", idx)
+    assert isinstance(entry, FilterEntry)
+    assert entry.state is TenantState.SERVING
+    assert srv.handle("t").state is TenantState.SERVING
+
+    with pytest.warns(DeprecationWarning, match="submit"):
+        got = srv.query("t", probes)
+    np.testing.assert_array_equal(got, np.asarray(idx.query(probes)))
+    # the deprecated query is now request-scoped: other tenants' queued
+    # work survives it (groupable=False keeps the bystander out of
+    # 't's arena — same-group rows are FAIR GAME for megabatch
+    # coalescing, which is batching, not draining)
+    srv.admit(TenantSpec("other", index=fleet["f1"][1], groupable=False))
+    srv.submit("t", probes[:16])                 # 't' ahead in the ring
+    pending = srv.submit("other", _probes(fleet["f1"][0], 16, seed=31))
+    with pytest.warns(DeprecationWarning):
+        srv.query("t", probes[:8])
+    assert not pending.done()
+
+    srv.save("t", str(tmp_path))
+    srv2 = FilterServer(_cfg(buckets=(16, 64)))
+    with pytest.warns(DeprecationWarning, match="checkpoint"):
+        entry2 = srv2.load("t", str(tmp_path))
+    np.testing.assert_array_equal(
+        srv2.submit("t", probes).result(),
+        np.asarray(idx.query(probes)))
+    assert entry2.epoch == 0
+
+    with pytest.raises(TypeError):               # config XOR kwargs
+        FilterServer(ServeConfig(), buckets=(16,))
+
+
+def test_fused_shim_removed():
+    """The PR-3 deprecation shim is gone: importing it errors, and the
+    package no longer exports its surface."""
+    with pytest.raises(ImportError):
+        import repro.serve_filter.fused          # noqa: F401
+    import repro.serve_filter as sf
+    assert not hasattr(sf, "fused_query_fn")
+    # its useful aliases live on the executors module
+    assert callable(sf.clear_executors) and callable(
+        sf.compiled_program_count)

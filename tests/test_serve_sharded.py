@@ -149,7 +149,9 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
 import jax, numpy as np
 from repro.core import existence
 from repro.data import tuples
-from repro.serve_filter import FilterServer
+from repro.serve_filter import (BucketConfig, DispatchConfig, FilterServer,
+                                PlacementConfig, ProbeConfig, ServeConfig,
+                                TenantSpec)
 
 mesh = jax.make_mesh((2,), ("data",))
 st = existence.TrainSettings(steps=25, n_pos=1200, n_neg=1200)
@@ -167,13 +169,16 @@ def corpus(ds, n, seed):
     return np.concatenate([pos, neg]), n // 2
 
 for use_kernel in (False, True):
-    local = FilterServer(buckets=(32, 128), use_kernel=use_kernel,
-                         block_n=64)
-    shard = FilterServer(buckets=(32, 128), use_kernel=use_kernel,
-                         block_n=64, mesh=mesh, async_dispatch=True)
+    probe = ProbeConfig(use_kernel=use_kernel, block_n=64)
+    local = FilterServer(ServeConfig(buckets=BucketConfig((32, 128)),
+                                     probe=probe))
+    shard = FilterServer(ServeConfig(
+        buckets=BucketConfig((32, 128)), probe=probe,
+        placement=PlacementConfig(mesh=mesh),
+        dispatch=DispatchConfig(async_dispatch=True)))
     for name, (_, idx) in tenants.items():
-        local.register(name, idx)
-        entry = shard.register(name, idx)
+        local.admit(TenantSpec(name, index=idx))
+        entry = shard.admit(TenantSpec(name, index=idx)).entry
         assert entry.plan.placement.sharded
         assert entry.plan.placement.n_shards == 2
         spec = entry.bits.sharding.spec
@@ -181,22 +186,32 @@ for use_kernel in (False, True):
     for name, (ds, idx) in tenants.items():
         ids, n_pos = corpus(ds, 300, seed=7)
         want_direct = np.asarray(idx.query(ids))
-        got_local = local.query(name, ids)
-        got_shard = shard.query(name, ids)
+        got_local = local.submit(name, ids).result()
+        got_shard = shard.submit(name, ids).result()
         np.testing.assert_array_equal(got_local, want_direct)
         np.testing.assert_array_equal(got_shard, want_direct)
         assert got_shard[:n_pos].all(), "sharded false negative"
 
-# checkpoint hydration lands on-shard and stays bit-identical
+# checkpoint hydration lands on-shard and stays bit-identical — and a
+# hot-reload from checkpoint installs fresh on-shard arrays (the
+# sharded-path leg of the zero-drain reload contract)
 import tempfile
 ds, idx = tenants["a"]
 with tempfile.TemporaryDirectory() as tmp:
     existence.save_index(f"{tmp}/a", idx)
-    srv = FilterServer(buckets=(32, 128), mesh=mesh)
-    entry = srv.load("a", tmp)
+    srv = FilterServer(ServeConfig(buckets=BucketConfig((32, 128)),
+                                   placement=PlacementConfig(mesh=mesh)))
+    handle = srv.admit(TenantSpec("a", checkpoint=tmp))
+    entry = handle.entry
     assert tuple(entry.bits.sharding.spec) == ("data",)
     ids, _ = corpus(ds, 200, seed=9)
-    np.testing.assert_array_equal(srv.query("a", ids),
+    np.testing.assert_array_equal(handle.query(ids),
+                                  np.asarray(idx.query(ids)))
+    handle.reload(checkpoint=tmp)
+    assert handle.epoch == 1
+    assert handle.entry is not entry            # fresh PlacedFilter
+    assert tuple(handle.entry.bits.sharding.spec) == ("data",)
+    np.testing.assert_array_equal(handle.query(ids),
                                   np.asarray(idx.query(ids)))
 print("SHARDED_SERVE_OK")
 """
