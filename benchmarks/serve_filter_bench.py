@@ -15,7 +15,11 @@ Tracks the batched-query serving trajectory of ``repro.serve_filter``:
   each submitting K-row requests, where per-tenant dispatches can never
   fill a big bucket. ``--grouped`` additionally serves the same stream
   through plan-group megabatching (a grouped ``ServeConfig``) and
-  reports the grouped-vs-ungrouped speedup,
+  reports the grouped-vs-ungrouped speedup. Combined with ``--executor
+  sharded`` the scenario runs the COMPOSED path: megabatch arenas that
+  are themselves mesh-sharded (combined embedding matrix row-sharded,
+  concatenated bitsets word-sharded) — the dispatch-count collapse must
+  survive sharding,
 * ``--reload-every N`` turns the many-tenant scenario into a CHURN
   scenario: every N fleet ticks one tenant hot-reloads to a re-fitted
   index via ``TenantHandle.reload`` — under live traffic, mid-queue —
@@ -32,7 +36,10 @@ Tracks the batched-query serving trajectory of ``repro.serve_filter``:
 
 Every scripted run appends one entry per bucket/scenario (q/s,
 occupancy, p99) to ``BENCH_serve_filter.json`` next to the repo root,
-so the perf trajectory across PRs is recorded, not anecdotal.
+so the perf trajectory across PRs is recorded, not anecdotal. Every
+row carries the hardware/placement context (``devices`` =
+``jax.device_count()``, ``mesh``, ``placement``) so sharded/grouped
+trajectories stay comparable across boxes.
 
 Usage: PYTHONPATH=src python benchmarks/serve_filter_bench.py
            [--executor {local,sharded}] [--shards N] [--async-dispatch]
@@ -111,6 +118,20 @@ def _serve_mesh(executor: str, shards: int):
             f"--executor sharded needs {shards} devices but found "
             f"{len(jax.devices())}; XLA_FLAGS was set too late?")
     return jax.make_mesh((shards,), ("data",))
+
+
+def _env_fields(mesh) -> dict:
+    """Hardware/placement context stamped on every recorded row:
+    sharded and grouped trajectories are only comparable across boxes
+    when the device count, mesh shape, and placement mode ride along
+    with the numbers."""
+    import jax
+    return {
+        "devices": int(jax.device_count()),
+        "mesh": {k: int(v) for k, v in mesh.shape.items()}
+                if mesh is not None else None,
+        "placement": "sharded" if mesh is not None else "local",
+    }
 
 
 def fit_tenants(steps: int = 60) -> Dict[str, tuple]:
@@ -247,7 +268,7 @@ def run_many_tenant_scenario(*, tenants: int, rows_per_request: int,
                              async_dispatch: bool = False,
                              reload_every: int = 0,
                              target_queries: int = 16384,
-                             repeats: int = 3) -> List[dict]:
+                             repeats: int = 3, mesh=None) -> List[dict]:
     """The many-tenant low-load regime: every tenant lightly loaded
     (one small request outstanding), where per-tenant dispatches can
     never fill a big bucket. Ungrouped always runs (the 'before');
@@ -255,7 +276,9 @@ def run_many_tenant_scenario(*, tenants: int, rows_per_request: int,
     bit-equal on a verification tick and tagged with the speedup.
     ``reload_every`` > 0 adds hot-reload churn to every mode on a
     shared deterministic schedule — a post-churn verification tick
-    re-checks grouped bit-equal to ungrouped AFTER the swaps.
+    re-checks grouped bit-equal to ungrouped AFTER the swaps. With a
+    ``mesh``, every mode runs sharded — grouped mode then exercises the
+    composed path (mesh-sharded megabatch arenas).
 
     The two modes are measured in INTERLEAVED windows and summarized by
     the median, so an episodic slowdown of the host lands on both modes
@@ -267,7 +290,8 @@ def run_many_tenant_scenario(*, tenants: int, rows_per_request: int,
     answers: Dict[bool, dict] = {}
     for g in modes:
         srv = FilterServer(ServeConfig.from_kwargs(
-            buckets=BUCKETS, grouped=g, async_dispatch=async_dispatch))
+            buckets=BUCKETS, grouped=g, async_dispatch=async_dispatch,
+            mesh=mesh))
         for name, (_, idx) in fleet.items():
             srv.admit(TenantSpec(name, index=idx))
         pools = {name: _query_pool(ds, max(k * 4, 64), seed=3)
@@ -351,8 +375,10 @@ def bench_python_loop(tenants: Dict[str, tuple], n: int = 64) -> dict:
 
 
 def run(*, executor: str = "local", shards: int = 2,
-        async_dispatch: bool = False, steps: int = 60) -> List[dict]:
-    mesh = _serve_mesh(executor, shards)
+        async_dispatch: bool = False, steps: int = 60,
+        mesh=None) -> List[dict]:
+    if mesh is None:
+        mesh = _serve_mesh(executor, shards)
     tenants = fit_tenants(steps)
     rows = [bench_served(tenants, b, mesh=mesh,
                          async_dispatch=async_dispatch) for b in BUCKETS]
@@ -366,7 +392,8 @@ def run(*, executor: str = "local", shards: int = 2,
                                             r["us_per_query"], 1)
     rows.append({"bucket": 1, "filters": len(tenants),
                  "qps": base["qps"], "us_per_query": base["us_per_query"],
-                 "executor": "python_loop",
+                 "executor": "python_loop", "mesh": None,
+                 "placement": "local",      # eager per-row, never sharded
                  "note": "per-query Python loop (baseline)"})
     return rows
 
@@ -406,20 +433,24 @@ def _print_many_tenant(rows: List[dict]) -> None:
 
 def main():
     rows: List[dict] = []
+    mesh = _serve_mesh(_ARGS.executor, _ARGS.shards)
     if _ARGS.smoke:
         # CI fast signal: tiny fleet, few hundred queries through BOTH
         # paths, grouped answers cross-checked bit-equal to ungrouped
         # (post-churn too when --reload-every adds hot-swap churn; the
-        # tick budget grows so the schedule actually fires)
+        # tick budget grows so the schedule actually fires). With
+        # --executor sharded this covers the composed path: megabatch
+        # arenas that are themselves mesh-sharded.
         many = run_many_tenant_scenario(
             tenants=_ARGS.tenants or 8,
             rows_per_request=_ARGS.rows_per_request,
             grouped=True, steps=min(_ARGS.steps, 10),
             reload_every=_ARGS.reload_every,
             target_queries=1024 if _ARGS.reload_every else 384,
-            repeats=2)
-        print("smoke: many-tenant scenario (grouped answers verified "
-              "bit-equal to ungrouped"
+            repeats=2, mesh=mesh)
+        print("smoke: many-tenant scenario "
+              + ("(sharded arenas) " if mesh is not None else "")
+              + "(grouped answers verified bit-equal to ungrouped"
               + (", incl. post-reload-churn)" if _ARGS.reload_every
                  else ")"))
         _print_many_tenant(many)
@@ -432,7 +463,7 @@ def main():
     else:
         classic = run(executor=_ARGS.executor, shards=_ARGS.shards,
                       async_dispatch=_ARGS.async_dispatch,
-                      steps=_ARGS.steps)
+                      steps=_ARGS.steps, mesh=mesh)
         hdr = f"{'bucket':>7} {'filters':>7} {'qps':>12} " \
               f"{'us/query':>10} {'occupancy':>9} {'speedup':>8}"
         print(f"executor={_ARGS.executor} async={_ARGS.async_dispatch}")
@@ -453,12 +484,17 @@ def main():
                 rows_per_request=_ARGS.rows_per_request,
                 grouped=_ARGS.grouped, steps=_ARGS.steps,
                 async_dispatch=_ARGS.async_dispatch,
-                reload_every=_ARGS.reload_every)
+                reload_every=_ARGS.reload_every, mesh=mesh)
             print(f"\nmany-tenant low-load scenario "
                   f"({_ARGS.tenants} tenants x "
-                  f"{_ARGS.rows_per_request}-row requests)")
+                  f"{_ARGS.rows_per_request}-row requests"
+                  + (", sharded arenas)" if mesh is not None else ")"))
             _print_many_tenant(many)
             rows += many
+    env = _env_fields(mesh)
+    for r in rows:              # stamp the hardware/placement context
+        for k, v in env.items():
+            r.setdefault(k, v)
     record(rows, _ARGS.json_out)
     return rows
 

@@ -158,15 +158,24 @@ def main(args=_ARGS):
         print(f"  {k:>20} = {snap[k]:.4g}")
 
     if args.tenants:
-        fleet_demo(args.tenants, idx_a, idx_b, ds_a, ds_b)
+        fleet_demo(args.tenants, idx_a, idx_b, ds_a, ds_b,
+                   mesh=mesh, refit_a=refit)
 
 
-def fleet_demo(n_tenants, idx_a, idx_b, ds_a, ds_b):
+def fleet_demo(n_tenants, idx_a, idx_b, ds_a, ds_b, mesh=None,
+               refit_a=None):
     """The many-tenant low-load regime: a fleet of lightly-loaded
     tenants (16-row requests) sharing two plan shapes. Grouped serving
     stacks each plan group into one device arena and answers the whole
     fleet in a handful of megabatch dispatches — vs one lonely
-    smallest-bucket dispatch per tenant ungrouped."""
+    smallest-bucket dispatch per tenant ungrouped. With a mesh, a third
+    mode runs the COMPOSED path: the arenas themselves are mesh-sharded
+    (combined embedding matrix row-sharded, concatenated fixup bitsets
+    word-sharded), so one dispatch serves many tenants AND splits their
+    storage. Every mode hot-reloads one tenant MID-STREAM on the same
+    schedule (``handle.reload`` — the zero-drain slot swap, in place on
+    the arenas, sharded ones included), so the final bit-equality check
+    also covers reload-under-churn on the composed path."""
     import time
 
     import numpy as np
@@ -180,33 +189,60 @@ def fleet_demo(n_tenants, idx_a, idx_b, ds_a, ds_b):
                             axis=-1).astype(np.int32)
              for name, (ds, _) in fleet.items()}
 
-    results = {}
-    for grouped in (False, True):
-        srv = FilterServer(ServeConfig(
+    modes = [("ungrouped", ServeConfig(
+                  buckets=BucketConfig((64, 256, 1024)))),
+             ("grouped", ServeConfig(
+                  buckets=BucketConfig((64, 256, 1024)),
+                  grouping=GroupingConfig(enabled=True)))]
+    if mesh is not None:
+        # the composed mode: grouped megabatches over mesh-sharded
+        # arenas — GroupingConfig(placement="auto") is the default, so
+        # enabling both knobs IS the composition
+        modes.append(("grouped+sharded", ServeConfig(
             buckets=BucketConfig((64, 256, 1024)),
-            grouping=GroupingConfig(enabled=grouped)))
+            placement=PlacementConfig(mesh=mesh),
+            grouping=GroupingConfig(enabled=True))))
+
+    results = {}
+    for mode, config in modes:
+        srv = FilterServer(config)
         for name, (_, idx) in fleet.items():
             srv.admit(TenantSpec(name, index=idx))
         items = [(name, pool[:16]) for name, pool in pools.items()]
-        reqs = srv.submit_many(items)       # warmup tick (compiles)
+        srv.submit_many(items)              # warmup tick (compiles)
         srv.run_until_drained()
-        results[grouped] = np.concatenate([r.answers for r in reqs])
+        if refit_a is not None:
+            # mid-stream zero-drain reload, same schedule every mode:
+            # a tick is submitted, ONE batch dispatches against the old
+            # epoch, then the swap lands (in place on the arena slot —
+            # sharded arenas included) and the tick finishes on the new
+            srv.submit_many(items)
+            srv.step()
+            srv.handle("tenant000").reload(refit_a)
+            srv.run_until_drained()
         t0 = time.perf_counter()
         rounds = 8
         for _ in range(rounds):
             srv.submit_many(items)
             srv.run_until_drained()
         dt = time.perf_counter() - t0
+        reqs = srv.submit_many(items)       # verification tick
+        srv.run_until_drained()
+        results[mode] = np.concatenate([r.answers for r in reqs])
         snap = srv.stats_snapshot()
-        mode = "grouped" if grouped else "ungrouped"
-        print(f"  {mode:>9}: {rounds * len(fleet) * 16 / dt:>10,.0f} q/s"
+        print(f"  {mode:>15}: {rounds * len(fleet) * 16 / dt:>10,.0f} q/s"
               f"  batches={snap['batches']:.0f}"
               f"  grouped_batches={snap['grouped_batches']:.0f}"
               f"  plan_groups={snap['plan_groups']:.0f}"
-              f"  occupancy={snap['batch_occupancy']:.2f}")
-    assert np.array_equal(results[False], results[True]), \
-        "grouped answers must be bit-identical to ungrouped"
-    print("  grouped answers bit-identical to ungrouped: OK")
+              f"  occupancy={snap['batch_occupancy']:.2f}"
+              f"  arena_mb/shard={snap['arena_mb']:.2f}"
+              + (f"  reloads={snap['reloads']:.0f}"
+                 if refit_a is not None else ""))
+    want = results[modes[0][0]]
+    for mode, _ in modes[1:]:
+        assert np.array_equal(want, results[mode]), \
+            f"{mode} answers must be bit-identical to ungrouped"
+    print("  all modes bit-identical post-reload: OK")
 
 
 if __name__ == "__main__":

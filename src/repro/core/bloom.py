@@ -150,6 +150,44 @@ def grouped_query(bits, ids, n_hashes: int, m_bits, word_base) -> jax.Array:
     return jnp.all(hit, axis=-1)
 
 
+def grouped_shard_miss_count(bits_local, ids, n_hashes: int, m_bits,
+                             word_base, word_offset) -> jax.Array:
+    """Misses among the probes a shard of a CONCATENATED arena owns.
+
+    The grouping x sharding composition of :func:`grouped_query` and
+    :func:`shard_miss_count`: ``bits_local`` is the contiguous word
+    slice ``bits[word_offset : word_offset + n_local]`` of a combined
+    multi-filter arena, and each row carries its own filter geometry
+    (``m_bits``, ``word_base``) exactly as in :func:`grouped_query` —
+    the per-slot word base is rebased per shard by subtracting
+    ``word_offset``. Probes landing outside the slice are skipped.
+    Every probe word belongs to exactly one shard, so
+
+        psum(grouped_shard_miss_count(...)) == 0
+            <=>  grouped_query(...)
+            <=>  per-filter query(...)   (row by row, bit-for-bit)
+
+    which is what lets a mesh-sharded plan-group arena answer a
+    megabatch with ONE cross-shard combine.
+    """
+    bits_local = jnp.asarray(bits_local)
+    n_local = bits_local.shape[0]
+    ids = jnp.asarray(ids)
+    m_bits = jnp.asarray(m_bits).astype(jnp.uint32)
+    word_base = jnp.asarray(word_base).astype(jnp.int32)
+    h1 = hash_tuples(ids, seed=0x0000A5A5)
+    h2 = hash_tuples(ids, seed=0x00005EED) | jnp.uint32(1)
+    ks = jnp.arange(n_hashes, dtype=jnp.uint32)
+    pos = (h1[..., None] + ks * h2[..., None]) % m_bits[..., None]
+    words = (pos >> jnp.uint32(5)).astype(jnp.int32) + word_base[..., None]
+    masks = jnp.uint32(1) << (pos & jnp.uint32(31))
+    local = words - word_offset
+    owned = (local >= 0) & (local < n_local)
+    w = jnp.take(bits_local, jnp.clip(local, 0, n_local - 1), axis=0)
+    miss = owned & ((w & masks) == jnp.uint32(0))
+    return jnp.sum(miss, axis=-1).astype(jnp.int32)
+
+
 def shard_miss_count(bits_local, ids, params: BloomParams,
                      word_offset) -> jax.Array:
     """Misses among the probes owned by one bitset slice.

@@ -122,6 +122,83 @@ def _grouped_kernel(ids_ref, base_ref, mbits_ref, bits_ref, out_ref, *,
     out_ref[...] = hit_all
 
 
+def _grouped_partial_kernel(off_ref, ids_ref, base_ref, mbits_ref,
+                            bits_ref, out_ref, *, n_hashes: int,
+                            n_local: int):
+    """Per-row-rebased probe against ONE word slice of a concatenation.
+
+    The grouping x sharding composition of :func:`_grouped_kernel` and
+    :func:`_partial_kernel`: ``bits_ref`` holds words ``[off, off +
+    n_local)`` of a combined multi-filter arena, each key row carries
+    its own geometry (``base_ref``/``mbits_ref``), and the per-row word
+    base is rebased per shard by subtracting ``off``. Probes outside
+    the slice are skipped; the emitted per-key MISS counts combine
+    across shards with ``psum(miss) == 0``, matching
+    ``core.bloom.grouped_shard_miss_count``.
+    """
+    off = off_ref[0]
+    ids = ids_ref[...].astype(jnp.uint32)               # (bn, n_cols)
+    base = base_ref[...]                                # (bn,) int32
+    mb = mbits_ref[...]                                 # (bn,) uint32
+    bits = bits_ref[...]                                # (n_local,) uint32
+    h1 = _hash_block(ids, 0x0000A5A5)
+    h2 = _hash_block(ids, 0x00005EED) | jnp.uint32(1)
+    miss = jnp.zeros(ids.shape[:1], jnp.int32)
+    for k in range(n_hashes):
+        pos = (h1 + jnp.uint32(k) * h2) % mb
+        local = (pos >> jnp.uint32(5)).astype(jnp.int32) + base - off
+        owned = (local >= 0) & (local < n_local)
+        word = jnp.take(bits, jnp.clip(local, 0, n_local - 1), axis=0)
+        bit = (word >> (pos & jnp.uint32(31))) & jnp.uint32(1)
+        miss = miss + (owned & (bit == jnp.uint32(0))).astype(jnp.int32)
+    out_ref[...] = miss
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_hashes", "block_n", "interpret"))
+def bloom_query_grouped_partial_call(ids, bits_local, word_base, m_bits,
+                                     word_offset, *, n_hashes: int,
+                                     block_n: int = 2048,
+                                     interpret: bool = True):
+    """ids: (N, n_cols) int32; bits_local: (n_local,) uint32 slice of a
+    concatenated arena; word_base: (N,) int32; m_bits: (N,) uint32;
+    word_offset: (1,) int32 -> (N,) int32 miss counts over owned probes.
+
+    The sharded flavor of :func:`bloom_query_grouped_call`: safe inside
+    ``shard_map`` (the offset is a traced per-shard scalar operand), and
+    one compiled program serves any tenant mix in the batch.
+    """
+    n, n_cols = ids.shape
+    n_local = bits_local.shape[0]
+    bn = min(block_n, n)
+    pad = (-n) % bn
+    word_base = jnp.asarray(word_base, jnp.int32)
+    m_bits = jnp.asarray(m_bits, jnp.uint32)
+    if pad:
+        ids = jnp.pad(ids, ((0, pad), (0, 0)))
+        word_base = jnp.pad(word_base, (0, pad))
+        # pad rows still compute pos % m_bits — keep the modulo nonzero
+        m_bits = jnp.pad(m_bits, (0, pad), constant_values=32)
+    word_offset = jnp.asarray(word_offset, jnp.int32).reshape((1,))
+    grid = (ids.shape[0] // bn,)
+    out = pl.pallas_call(
+        functools.partial(_grouped_partial_kernel, n_hashes=n_hashes,
+                          n_local=n_local),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((bn, n_cols), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec(bits_local.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((ids.shape[0],), jnp.int32),
+        interpret=interpret,
+    )(word_offset, ids, word_base, m_bits, bits_local)
+    return out[:n] if pad else out
+
+
 @functools.partial(jax.jit,
                    static_argnames=("n_hashes", "block_n", "interpret"))
 def bloom_query_grouped_call(ids, bits, word_base, m_bits, *,

@@ -6,9 +6,9 @@ from typing import Optional
 import jax
 
 from repro.core import bloom
-from repro.kernels.bloom_query.bloom_query import (bloom_query_call,
-                                                  bloom_query_grouped_call,
-                                                  bloom_query_partial_call)
+from repro.kernels.bloom_query.bloom_query import (
+    bloom_query_call, bloom_query_grouped_call,
+    bloom_query_grouped_partial_call, bloom_query_partial_call)
 
 
 def default_interpret() -> bool:
@@ -55,6 +55,28 @@ def bloom_query_grouped(ids, bits, word_base, m_bits, *,
     return bloom_query_grouped_call(ids, bits, word_base, m_bits,
                                     n_hashes=n_hashes, block_n=block_n,
                                     interpret=interpret)
+
+
+def bloom_query_grouped_shard(ids, bits_local, word_base, m_bits,
+                              word_offset, *, n_hashes: int,
+                              block_n: int = 2048,
+                              interpret: Optional[bool] = None):
+    """Per-shard multi-tenant probe against one slice of a bitset arena.
+
+    Kernel counterpart of ``core.bloom.grouped_shard_miss_count``
+    (validated bit-exact in tests): row ``r`` probes its own
+    ``m_bits[r]``-bit filter whose words start at ``word_base[r]`` of
+    the CONCATENATED arena, of which ``bits_local`` holds words
+    ``[word_offset, word_offset + len(bits_local))``. Returns (N,)
+    int32 miss counts over owned probes; the caller combines shards
+    with ``psum(miss) == 0``. ``word_offset`` may be a traced scalar
+    (e.g. ``axis_index * words_per_shard`` inside ``shard_map``).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return bloom_query_grouped_partial_call(
+        ids, bits_local, word_base, m_bits, word_offset,
+        n_hashes=n_hashes, block_n=block_n, interpret=interpret)
 
 
 def bloom_query_shard(ids, bits_local, word_offset,

@@ -30,21 +30,29 @@ Module map
     in, plan out.
 
 ``executors``
-    Pluggable compiled query paths behind one interface:
-    :class:`LocalExecutor` (single-device fused path),
-    :class:`ShardedExecutor` (same pipeline under ``shard_map``, tables
-    row-sharded + bitset word-sharded, bit-identical to local), and
-    :class:`GroupedExecutor` (megabatch path: one program per (group
-    key, bucket) answers MANY tenants per device call). Executors are
-    cached per plan / group key and are stateless w.r.t. tenant arrays
-    — the property that makes zero-drain hot-reload safe.
+    ONE composed core with two orthogonal axes — grouping (per-tenant
+    vs megabatch arena program) x placement (local vs mesh-sharded) —
+    behind three facade classes: :class:`LocalExecutor` (grouping off
+    x local), :class:`ShardedExecutor` (grouping off x sharded: tables
+    row-sharded + bitset word-sharded under ``shard_map``, one psum
+    per stage), and :class:`GroupedExecutor` (grouping on x EITHER
+    placement: one program per (group key, bucket) answers MANY
+    tenants per device call; with a sharded group key the arena itself
+    is mesh-sharded and per-slot word bases are rebased per shard).
+    Every leg is bit-identical to local by construction. Executors are
+    cached per (plan, mesh) / (group key, mesh) and are stateless
+    w.r.t. tenant arrays — the property that makes zero-drain
+    hot-reload safe.
 
 ``arena``
     :class:`PlanGroupArena` — stacked device residence for a plan
     group (combined embedding matrix, per-slot dense weights,
     concatenated fixup bitsets). Slot reuse + compaction keep LRU churn
     from leaking arena rows; :meth:`~PlanGroupArena.swap` hot-reloads
-    one member's slot in place.
+    one member's slot in place. On a sharded group key the device
+    views are ``device_put`` with ``NamedSharding`` per slice (matrix
+    row-sharded, bitsets word-sharded, padded to divide the shard
+    count) — no full replica ever materializes on one device.
 
 ``registry``
     :class:`FilterRegistry` — owns the tenants and DRIVES the
@@ -111,10 +119,12 @@ old                                   new
 ====================================  =================================
 
 Scale work still open (see ROADMAP): cross-host registry federation,
-grouped+sharded composition.
+sharded-executor batch sharding (split rows AND storage).
 """
 from repro.serve_filter.arena import PlanGroupArena
-from repro.serve_filter.config import (BucketConfig, DispatchConfig,
+from repro.serve_filter.config import (GROUP_PLACEMENT_AUTO,
+                                       GROUP_PLACEMENT_LOCAL,
+                                       BucketConfig, DispatchConfig,
                                        GroupingConfig, MetricsConfig,
                                        PlacementConfig, ServeConfig,
                                        TenantSpec, TenantState)

@@ -32,13 +32,27 @@ authoritative; device views are materialized lazily and invalidated on
 every mutation. Capacity and bitset allocation grow geometrically so
 the compiled program's shapes (and thus recompiles) change
 O(log tenants) times, not per registration.
+
+Grouping composes with placement: when the arena's
+:class:`~repro.serve_filter.plan.GroupKey` carries a SHARDED placement,
+the device views are laid out for the grouped ``shard_map`` program —
+the combined embedding matrix row-sharded and the concatenated bitsets
+word-sharded over the mesh axis (each padded so the leading dim divides
+the shard count; pad rows/words are zero and never gathered/probed),
+dense stacks and per-slot vectors replicated. Every view is
+``device_put`` with an explicit ``NamedSharding`` straight from the
+(padded copy of the) host mirror, so growth, compaction, and reload
+repacking never materialize a full-size replica on any one device —
+each shard only ever receives its own slice.
 """
 from __future__ import annotations
 
 from typing import Dict, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import existence, lmbf
 from repro.serve_filter.plan import GroupKey
@@ -51,9 +65,23 @@ class PlanGroupArena:
     """Stacked device residence for every tenant sharing one GroupKey."""
 
     def __init__(self, key: GroupKey, executor,
-                 min_capacity: int = MIN_CAPACITY):
+                 min_capacity: int = MIN_CAPACITY, mesh=None):
         self.key = key
         self.executor = executor            # GroupedExecutor (owns .fn)
+        # placement axis: a sharded group key means the device views
+        # live split over this mesh (normally the executor's own)
+        self.mesh = mesh if mesh is not None \
+            else getattr(executor, "mesh", None)
+        if key.placement.sharded:
+            if self.mesh is None:
+                raise ValueError("a sharded group key needs a mesh (none "
+                                 "on the executor and none passed)")
+            found = self.mesh.shape.get(key.placement.axis, 1)
+            if found != key.placement.n_shards:
+                raise ValueError(
+                    f"mesh axis {key.placement.axis!r} has size {found} "
+                    f"but the group key expects "
+                    f"{key.placement.n_shards} shards")
         self.min_capacity = max(1, int(min_capacity))
         self.capacity = 0
         self.version = 0                    # bumped on every mutation
@@ -116,6 +144,34 @@ class PlanGroupArena:
             for arr in d.values():
                 n += arr.nbytes
         return n
+
+    @property
+    def n_shards(self) -> int:
+        """Shards the device views are split over (1 on a local arena)."""
+        p = self.key.placement
+        return p.n_shards if p.sharded else 1
+
+    @property
+    def device_nbytes(self) -> int:
+        """TRUE per-shard device footprint of the arena's device views:
+        the sharded arrays (combined embedding matrix, concatenated
+        bitsets) contribute their padded per-shard slice, the
+        replicated ones (dense stacks, per-slot vectors) their full
+        size. Equals the device-view total on a local arena. This —
+        not :attr:`nbytes`, the whole-arena host-mirror total — is
+        what HBM capacity planning must watch on a sharded fleet:
+        charging the full arena to every device overstates pressure by
+        ~the shard count exactly where sharding is the point."""
+        n = self.n_shards
+        per_shard = -(-self._embed_flat.shape[0] // n) * \
+            self._e_max * self._embed_flat.itemsize
+        per_shard += -(-self._bits.size // n) * self._bits.itemsize
+        per_shard += self._tau.nbytes + self._m_bits.nbytes + \
+            self._word_base.nbytes
+        for d in self._params.values():
+            for arr in d.values():
+                per_shard += arr.nbytes
+        return per_shard
 
     @property
     def live_words(self) -> int:
@@ -232,8 +288,7 @@ class PlanGroupArena:
         return True
 
     # ------------------------------------------------------------ serving
-    @staticmethod
-    def _snap(v: np.ndarray) -> jnp.ndarray:
+    def _snap(self, v: np.ndarray, spec: Optional[P] = None):
         """Device view of a PRIVATE copy of a host mirror. The copy is
         load-bearing: JAX may perform the host->device transfer
         asynchronously, so handing it the live mirror races an
@@ -241,18 +296,37 @@ class PlanGroupArena:
         a dispatch — an in-flight batch could observe the NEXT epoch's
         bytes. A private copy is never mutated, so batches always
         retire against the arrays they were dispatched with (the
-        zero-drain reload guarantee)."""
-        return jnp.asarray(v.copy())
+        zero-drain reload guarantee — placement does not change it).
+
+        On a sharded arena, ``spec`` names the array's mesh layout:
+        arrays split on their leading dim are zero-padded so it divides
+        the shard count, then ``device_put`` with ``NamedSharding``
+        straight onto their slices (no full replica on one device);
+        everything else is replicated."""
+        if self.mesh is None:
+            return jnp.asarray(v.copy())
+        if spec is not None and spec and spec[0] is not None:
+            pad = (-v.shape[0]) % self.key.placement.n_shards
+            # one pass: the zero-padded buffer IS the private copy
+            arr = np.zeros((v.shape[0] + pad,) + v.shape[1:], v.dtype)
+            arr[:v.shape[0]] = v
+        else:
+            arr = v.copy()
+        return jax.device_put(arr, NamedSharding(self.mesh, spec or P()))
 
     def device_arrays(self):
         """(params, bits, tau, m_bits, word_base) as device arrays —
-        snapshots of the mirrors, cached until the next mutation."""
+        snapshots of the mirrors, cached until the next mutation. On a
+        sharded arena the combined embedding matrix is row-sharded and
+        the concatenated bitsets word-sharded over the group key's mesh
+        axis; dense stacks and per-slot vectors are replicated."""
         if self._device is None:
             snap = self._snap
+            axis = self.key.placement.axis      # None on a local arena
             params = {g: {k: snap(v) for k, v in d.items()}
                       for g, d in self._params.items()}
-            params["embed_flat"] = snap(self._embed_flat)
-            self._device = (params, snap(self._bits),
+            params["embed_flat"] = snap(self._embed_flat, P(axis, None))
+            self._device = (params, snap(self._bits, P(axis)),
                             snap(self._tau),
                             snap(self._m_bits),
                             snap(self._word_base))

@@ -112,17 +112,52 @@ class DispatchConfig:
             raise ValueError("max_inflight must be >= 1")
 
 
+# GroupingConfig.placement values: how grouping composes with the
+# server's PlacementConfig (the two are orthogonal axes of the executor
+# core — see repro.serve_filter.executors)
+GROUP_PLACEMENT_AUTO = "auto"    # arenas follow the plan placement:
+                                 # on a sharded server the arenas are
+                                 # themselves mesh-sharded
+GROUP_PLACEMENT_LOCAL = "local"  # arenas only for local plans: a mesh
+                                 # wins over grouping (the pre-composition
+                                 # behavior, for fleets that want sharded
+                                 # tenants served per-tenant)
+
+
 @dataclasses.dataclass(frozen=True)
 class GroupingConfig:
     """Plan-group megabatching: stack same-group-key tenants into one
     device arena so a single dispatch answers many lightly-loaded
-    tenants. ``tile_rows`` is the single-tenant tile granule."""
+    tenants. ``tile_rows`` is the single-tenant tile granule.
+
+    ``placement`` is the composition knob: ``"auto"`` (default) lets
+    arenas follow the plan placement — on a mesh-sharded server the
+    combined embedding matrix is row-sharded and the concatenated
+    fixup bitsets word-sharded, so one megabatch dispatch serves many
+    tenants AND splits their storage; ``"local"`` restores the old
+    gating (sharded plans never group)."""
     enabled: bool = False
     tile_rows: int = DEFAULT_TILE_ROWS
+    placement: str = GROUP_PLACEMENT_AUTO
 
     def __post_init__(self):
         if self.tile_rows < 1:
             raise ValueError("tile_rows must be >= 1")
+        if self.placement not in (GROUP_PLACEMENT_AUTO,
+                                  GROUP_PLACEMENT_LOCAL):
+            raise ValueError(
+                f"unknown grouping placement {self.placement!r}: "
+                f"expected {GROUP_PLACEMENT_AUTO!r} or "
+                f"{GROUP_PLACEMENT_LOCAL!r}")
+
+    def groups_plan(self, plan) -> bool:
+        """Whether a tenant on ``plan`` may join a plan-group arena
+        under this config (the tenant's own ``groupable`` hint still
+        applies on top)."""
+        if not self.enabled:
+            return False
+        return (not plan.placement.sharded
+                or self.placement == GROUP_PLACEMENT_AUTO)
 
 
 @dataclasses.dataclass(frozen=True)

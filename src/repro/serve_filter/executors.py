@@ -1,46 +1,56 @@
-"""Pluggable query executors: one interface, local and mesh-sharded.
+"""One executor core, two orthogonal axes: grouping x placement.
 
-An :class:`Executor` turns a :class:`~repro.serve_filter.plan.QueryPlan`
-into a compiled callable with the fused-path signature
+The executor layer used to be three sibling classes each owning a whole
+compilation recipe. It is now ONE composed core with two independent
+axes, and the classes are thin facades over it:
 
-    ``fn(params, bits, tau, raw_ids) -> (answers, model_yes, backup_yes)``
+* the **grouping axis** decides the program *signature* and how model
+  weights / fixup geometry are bound — per-tenant operands
+  (``params, bits, tau``) for a single-tenant program, arena operands
+  (stacked params, concatenated bitsets, per-row ``tenant_idx`` +
+  geometry vectors) for a megabatch program;
+* the **placement axis** decides where each array's elements live and
+  how a stage rebuilds a full answer — plain gathers/probes on one
+  device, or masked local gathers / word-slice probes + ONE ``psum``
+  under ``shard_map`` over a mesh axis.
 
-plus a :meth:`~Executor.place` hook that lays a fitted index's arrays
-out on device(s) the way that callable expects them. Two implementations:
+The four combinations share the same pipeline body
+(``existence.query_stages``) and the same placement ingredients:
 
-:class:`LocalExecutor`
-    Today's single-device fused path, behavior-preserving: one
-    ``jax.jit`` of ``existence.query_stages`` per plan, specialized per
-    padding bucket by jit's shape cache, with the fixup probe optionally
-    dispatched to the ``kernels/bloom_query`` Pallas kernel.
+===============  ==========================  ===========================
+                 local                       sharded
+===============  ==========================  ===========================
+single-tenant    :class:`LocalExecutor`      :class:`ShardedExecutor`
+                 (plain jit)                 (tables row-sharded, bitset
+                                             word-sharded, one psum per
+                                             stage)
+grouped          :class:`GroupedExecutor`    :class:`GroupedExecutor`
+                 (arena operands)            with a sharded
+                                             :class:`~repro.serve_filter
+                                             .plan.GroupKey`: the
+                                             COMBINED embedding matrix is
+                                             row-sharded, the
+                                             CONCATENATED bitsets are
+                                             word-sharded (per-slot word
+                                             bases rebased per shard),
+                                             probes combine with ONE psum
+===============  ==========================  ===========================
 
-:class:`ShardedExecutor`
-    The same pipeline under ``shard_map`` over one mesh axis: embedding
-    tables are row-sharded (masked gather + one ``psum`` rebuilds the
-    concatenated feature row), the fixup bitset is word-sharded (each
-    shard probes only its slice via ``bloom.shard_miss_count`` — or the
-    Pallas word-offset kernel — and answers combine with a single
-    ``psum``), and the tiny dense MLP weights are replicated. Answers
-    are bit-identical to :class:`LocalExecutor` by construction: every
-    probe word and every table row belongs to exactly one shard.
+Program builders: :func:`_tenant_program` (grouping off) and
+:func:`_grouped_program` (grouping on), each taking the placement from
+the plan / group key and reusing ``bloom.shard_miss_count`` /
+``bloom.grouped_shard_miss_count`` and the word-offset Pallas probes.
+Answers are bit-identical to :class:`LocalExecutor` by construction on
+every leg: gathers/one-hots/probe rebasing are integer-exact, every
+table row and probe word is owned by exactly one shard (the psum adds
+one real term and zeros), and the output layer shares the
+multiply+reduce form of ``lmbf.mlp_head`` — property-tested in
+tests/test_serve_sharded.py, tests/test_serve_grouped.py, and
+tests/test_serve_grouped_sharded.py.
 
-:class:`GroupedExecutor`
-    The megabatch path: ONE compiled program per
-    (:class:`~repro.serve_filter.plan.GroupKey`, bucket) answers rows
-    from MANY tenants at once. Tenants' parameters live stacked in a
-    :class:`~repro.serve_filter.arena.PlanGroupArena`; the program takes
-    a per-row ``tenant_idx`` and gathers each row's embedding table
-    slab, MLP weights, ``tau``, and fixup-bitset base offset. Answers
-    are bit-identical to :class:`LocalExecutor`: gathers/one-hots/probe
-    rebasing are integer-exact, the output layer shares the
-    multiply+reduce form of ``lmbf.mlp_head`` whose lowering is
-    identical batched or not, and the hidden-layer batched contraction
-    is property-tested bit-equal to the plain matmul
-    (tests/test_serve_grouped.py).
-
-Executors are cached per plan (and mesh) — grouped ones per group key —
-so heterogeneous tenants whose filters share a plan share compiled
-programs; the registry's eviction hooks (:func:`release_plan`,
+Executors are cached per (plan, mesh) — grouped ones per (group key,
+mesh) — so heterogeneous tenants whose filters share a plan share
+compiled programs; the registry's eviction hooks (:func:`release_plan`,
 :func:`release_grouped_executor`) drop cache entries once no tenant
 references them. :func:`compiled_program_count` sums live XLA programs
 across all cached executors for the stats surface.
@@ -53,7 +63,7 @@ executor or its compiled programs: the registry installs a fresh
 ``PlacedFilter`` (or swaps the arena slot) and batches already
 dispatched keep computing against the arrays they captured — which is
 what lets ``TenantHandle.reload`` swap a re-fitted index with no drain
-and no misanswered in-flight rows.
+and no misanswered in-flight rows, on every placement.
 """
 from __future__ import annotations
 
@@ -113,12 +123,78 @@ class Executor:
             return 0
 
 
-class LocalExecutor(Executor):
-    """Single-device fused path (the pre-planner behavior)."""
+# ===================================================================== core
+# placement-axis ingredients, shared by the single-tenant and grouped
+# program builders
 
-    def __init__(self, plan: QueryPlan):
-        self.plan = plan
-        cfg, fp = plan.cfg, plan.fixup_params
+def _shard_wrap(mesh: Mesh, body, in_specs, out_specs, *,
+                check_rep: bool):
+    """The sharded placement's program wrapper: ``jit(shard_map(...))``
+    with the replication-check kwarg resolved for this JAX version
+    (``check_rep=False`` for the Pallas probe flavor — pallas_call has
+    no replication rule)."""
+    kw = {}
+    if _CHECK_KW:
+        kw[_CHECK_KW] = check_rep
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw))
+
+
+def _tenant_param_specs(plan: QueryPlan, mesh: Mesh):
+    """PartitionSpec tree for a single tenant's (padded) param pytree,
+    resolved through sharding/rules.py: 'vocab' (table rows) -> the
+    shard axis, every other logical axis replicated."""
+    axis = plan.placement.axis
+    table = {"vocab": (axis,)}
+    spec_tree = lmbf.params_spec(plan.cfg)
+
+    def one(s):
+        shape = list(s.shape)
+        if s.axes and s.axes[0] == "vocab":
+            shape[0] = (plan.table_rows_per_shard(shape[0])
+                        * plan.placement.n_shards)
+        return rules.spec_for(shape, s.axes, mesh, table)
+
+    return jax.tree.map(one, spec_tree, is_leaf=is_spec)
+
+
+def _sharded_tenant_predict(cfg, axis: str):
+    """lmbf.predict over vocab-sharded per-tenant tables: masked local
+    gathers, ONE psum to rebuild the feature row, replicated MLP head.
+    One-hot columns have no table — compute them on shard 0 only so
+    the psum is exact (no 1/n rescaling)."""
+
+    def predict_fn(params, cfg_, enc):
+        shard = jax.lax.axis_index(axis)
+        feats = []
+        for i, (rows, e) in enumerate(cfg_.column_encodings):
+            ids = enc[..., i]
+            if e is None:
+                oh = jax.nn.one_hot(ids, rows, dtype=cfg_.dtype)
+                feats.append(jnp.where(shard == 0, oh,
+                                       jnp.zeros_like(oh)))
+            else:
+                tbl = params["embed"][f"col{i}"]    # (rows_local, e)
+                rl = tbl.shape[0]
+                lid = ids - shard * rl
+                ok = (lid >= 0) & (lid < rl)
+                g = jnp.take(tbl, jnp.clip(lid, 0, rl - 1), axis=0)
+                feats.append(jnp.where(ok[..., None], g,
+                                       jnp.zeros_like(g)))
+        x = jax.lax.psum(jnp.concatenate(feats, axis=-1), axis)
+        return jax.nn.sigmoid(lmbf.mlp_head(params, cfg_, x))
+
+    return predict_fn
+
+
+# ------------------------------------------- single-tenant (grouping off)
+
+def _tenant_program(plan: QueryPlan, mesh: Optional[Mesh]):
+    """One compiled program for one tenant's arrays, on either
+    placement: the grouping-OFF leg of the composed core."""
+    cfg, fp = plan.cfg, plan.fixup_params
+
+    if not plan.placement.sharded:
         if plan.probe == PROBE_KERNEL:
             def probe(bits, ids):
                 return bloom_ops.bloom_query(ids, bits, fp,
@@ -132,15 +208,290 @@ class LocalExecutor(Executor):
             return existence.query_stages(params, cfg, tau, bits, fp,
                                           raw_ids, probe_fn=probe)
 
-        self.fn = fused
+        return fused
+
+    axis = plan.placement.axis
+    wl = plan.words_per_shard()
+    predict_fn = _sharded_tenant_predict(cfg, axis)
+
+    if plan.probe == PROBE_KERNEL:
+        def local_miss(bits_local, ids):
+            off = (jax.lax.axis_index(axis) * wl).astype(jnp.int32)
+            return bloom_ops.bloom_query_shard(
+                ids, bits_local, off[None], fp,
+                block_n=plan.block_n, interpret=plan.interpret)
+    else:
+        def local_miss(bits_local, ids):
+            off = jax.lax.axis_index(axis) * wl
+            return bloom.shard_miss_count(bits_local, ids, fp, off)
+
+    def probe_fn(bits_local, ids):
+        # each probe word is owned by exactly one shard: zero
+        # misses across all shards <=> every probed bit is set
+        miss = jax.lax.psum(local_miss(bits_local, ids), axis)
+        return miss == 0
+
+    def body(params, bits_local, tau, raw_ids):
+        return existence.query_stages(params, cfg, tau, bits_local,
+                                      fp, raw_ids, probe_fn=probe_fn,
+                                      predict_fn=predict_fn)
+
+    return _shard_wrap(mesh, body,
+                       (_tenant_param_specs(plan, mesh), P(axis), P(), P()),
+                       (P(), P(), P()),
+                       check_rep=plan.probe != PROBE_KERNEL)
+
+
+def _place_local(index: existence.ExistenceIndex) -> PlacedFilter:
+    return PlacedFilter(params=index.params,
+                        bits=jnp.asarray(index.fixup_filter.bits))
+
+
+def _place_sharded(plan: QueryPlan, mesh: Mesh,
+                   index: existence.ExistenceIndex) -> PlacedFilter:
+    """Pad + scatter a fitted index onto the mesh: each shard gets its
+    table-row and bitset-word slice directly (no full-size replica
+    materializes on any one device)."""
+    cfg = plan.cfg
+    n = plan.placement.n_shards
+    axis = plan.placement.axis
+    shard1d = NamedSharding(mesh, P(axis))
+    repl = NamedSharding(mesh, P())
+
+    embed = {}
+    for i, (rows, e) in enumerate(cfg.column_encodings):
+        if e is None:
+            continue
+        tbl = np.asarray(index.params["embed"][f"col{i}"])
+        rl = plan.table_rows_per_shard(rows)
+        padded = np.zeros((rl * n,) + tbl.shape[1:], tbl.dtype)
+        padded[:rows] = tbl
+        embed[f"col{i}"] = jax.device_put(
+            padded, NamedSharding(mesh, P(axis, None)))
+    dense = {k: jax.device_put(np.asarray(v), repl)
+             for k, v in index.params["dense"].items()}
+
+    bits = np.asarray(index.fixup_filter.bits)
+    padded_bits = np.zeros(plan.words_per_shard() * n, np.uint32)
+    padded_bits[:bits.size] = bits
+    return PlacedFilter(params={"embed": embed, "dense": dense},
+                        bits=jax.device_put(padded_bits, shard1d))
+
+
+# ------------------------------------------------- grouped (grouping on)
+
+def _grouped_program(key: GroupKey, mesh: Optional[Mesh]):
+    """The megabatch program for a whole plan group, on either
+    placement: the grouping-ON leg of the composed core. Returns
+    ``(fused, gather_tiles)``.
+
+    Signature (all but the group key traced, so one program serves any
+    tenant mix)::
+
+        fused(params, tiles, bits, tau_vec, m_bits_vec, base_vec,
+              tenant_idx, raw_ids) -> (answers, model_yes, backup_yes)
+
+    ``params`` is the arena's stacked pytree (combined embedding matrix
+    + dense stacks), ``bits`` the concatenated fixup bitsets, and the
+    three vectors are indexed by each row's ``tenant_idx``: its
+    threshold, its filter's modulo, and its bitset's first word. Under
+    a sharded placement the combined embedding matrix arrives
+    row-sharded and the concatenated bitsets word-sharded over the mesh
+    axis; the gather and the probe each rebase their global index into
+    the local slice, mask what the shard does not own, and combine with
+    ONE ``psum`` — exactly the single-tenant sharded recipe, applied to
+    arena-global indices.
+    """
+    cfg, nh, tile = key.cfg, key.n_hashes, key.tile_rows
+    n_hidden = len(cfg.hidden)
+    sharded = key.placement.sharded
+    axis = key.placement.axis
+    # combined-embedding layout (must mirror PlanGroupArena's):
+    # embedded columns' tables live back to back in one row-padded
+    # matrix so ONE gather serves every subcolumn
+    emb_cols = [(i, rows, e)
+                for i, (rows, e) in enumerate(cfg.column_encodings)
+                if e is not None]
+
+    @jax.jit
+    def gather_tiles(params, tile_idx):
+        """Per-tile dense-stack weights: {w{li}: (g, i, o), b{li}:
+        (g, o), w_out: (g, prev), b_out: (g,)}. Indices are
+        scheduler-controlled live slots, so the bounds check is
+        safely skipped. Dense stacks are replicated on every
+        placement (tables + bitsets carry the bytes), so the tiles
+        are too."""
+        tiles = {}
+        for li in range(n_hidden):
+            tiles[f"w{li}"] = params["dense"][f"w{li}"] \
+                .at[tile_idx].get(mode="promise_in_bounds")
+            tiles[f"b{li}"] = params["dense"][f"b{li}"] \
+                .at[tile_idx].get(mode="promise_in_bounds")
+        tiles["w_out"] = params["dense"]["w_out"] \
+            .at[tile_idx].get(mode="promise_in_bounds")[..., 0]
+        tiles["b_out"] = params["dense"]["b_out"] \
+            .at[tile_idx].get(mode="promise_in_bounds")[..., 0]
+        return tiles
+
+    # probe flavor x placement: whole-arena probe locally, word-slice
+    # miss counts (per-slot bases rebased by the shard's offset) +
+    # ONE psum when sharded
+    if key.probe == PROBE_KERNEL:
+        if sharded:
+            def slice_miss(bits_local, ids, mb_rows, base_rows, off):
+                return bloom_ops.bloom_query_grouped_shard(
+                    ids, bits_local, base_rows, mb_rows, off[None],
+                    n_hashes=nh, block_n=key.block_n,
+                    interpret=key.interpret)
+        else:
+            def whole_probe(bits, ids, mb_rows, base_rows):
+                return bloom_ops.bloom_query_grouped(
+                    ids, bits, base_rows, mb_rows, n_hashes=nh,
+                    block_n=key.block_n, interpret=key.interpret)
+    else:
+        if sharded:
+            def slice_miss(bits_local, ids, mb_rows, base_rows, off):
+                return bloom.grouped_shard_miss_count(
+                    bits_local, ids, nh, mb_rows, base_rows, off)
+        else:
+            def whole_probe(bits, ids, mb_rows, base_rows):
+                return bloom.grouped_query(bits, ids, nh, mb_rows,
+                                           base_rows)
+
+    def fused_body(params, tiles, bits, tau_vec, m_bits_vec, base_vec,
+                   tenant_idx, raw_ids):
+        def predict_fn(p, cfg_, enc):
+            gathered = None
+            valids = []
+            if emb_cols:
+                flat = p["embed_flat"]
+                # the per-slot vectors are replicated and slot-indexed,
+                # so their length IS the arena capacity — the combined
+                # matrix itself may carry shard-padding rows
+                cap = tau_vec.shape[0]
+                parts, prefix = [], 0
+                for i, rows, _ in emb_cols:
+                    # reproduce the local path's jnp.take semantics
+                    # EXACTLY — negative ids wrap pythonically,
+                    # out-of-bounds ids become NaN rows — while
+                    # keeping the combined-matrix index inside THIS
+                    # tenant's block (an out-of-vocab id must never
+                    # read a neighbor tenant's rows)
+                    ids = enc[..., i]
+                    wrapped = jnp.where(ids < 0, ids + rows, ids)
+                    valids.append((wrapped >= 0) & (wrapped < rows))
+                    safe = jnp.clip(wrapped, 0, rows - 1)
+                    parts.append(cap * prefix + tenant_idx * rows
+                                 + safe)
+                    prefix += rows
+                idx = jnp.stack(parts, axis=-1)     # (n, C) global rows
+                if sharded:
+                    # row-sharded combined matrix: every global row is
+                    # owned by exactly one shard — masked local gather,
+                    # ONE psum (adds the owned row + zeros, exact)
+                    rl = flat.shape[0]
+                    local = idx - jax.lax.axis_index(axis) * rl
+                    owned = (local >= 0) & (local < rl)
+                    g = flat.at[jnp.clip(local, 0, rl - 1).reshape(-1)] \
+                        .get(mode="promise_in_bounds") \
+                        .reshape(idx.shape[0], len(emb_cols), -1)
+                    gathered = jax.lax.psum(
+                        jnp.where(owned[..., None], g,
+                                  jnp.zeros_like(g)), axis)
+                else:
+                    gathered = flat.at[idx.reshape(-1)] \
+                        .get(mode="promise_in_bounds") \
+                        .reshape(idx.shape[0], len(emb_cols), -1)
+            feats, gi = [], 0
+            for i, (rows, e) in enumerate(cfg_.column_encodings):
+                if e is None:
+                    # no table: the one-hot depends only on the
+                    # (replicated) encoded ids, so every shard computes
+                    # it identically — no psum term needed
+                    feats.append(jax.nn.one_hot(enc[..., i], rows,
+                                                dtype=cfg_.dtype))
+                else:               # exact table rows, e_max-padded
+                    feats.append(jnp.where(
+                        valids[gi][..., None], gathered[:, gi, :e],
+                        jnp.asarray(jnp.nan, cfg_.dtype)))
+                    gi += 1
+            x = jnp.concatenate(feats, axis=-1)
+            # hidden stack on TILES: the scheduler guarantees every
+            # tile_rows-row tile is single-tenant, so weights come
+            # pre-gathered per tile (``tiles``, memoized by the
+            # arena) and each tile runs a real (tile, i) @ (i, o)
+            # GEMM — bit-equal to the local matmul (row count does
+            # not change the k-reduction order; property-tested),
+            # and ~10x faster than per-row weight gathers, which
+            # turn the dense stack into pure memory traffic
+            for li in range(len(cfg_.hidden)):
+                w = tiles[f"w{li}"]                 # (g, prev, width)
+                b = tiles[f"b{li}"]                 # (g, width)
+                x = x.reshape(-1, tile, x.shape[-1])
+                x = jax.nn.relu(
+                    jnp.einsum("gti,gio->gto", x, w) + b[:, None, :])
+                x = x.reshape(-1, x.shape[-1])
+            # output layer: the same multiply+reduce as
+            # lmbf.mlp_head. The weight row is gathered per TILE
+            # and broadcast to rows — each row still multiplies its
+            # own tenant's w_out and the (n, prev) -> (n,) reduce is
+            # unchanged, so this stays bit-identical while gathering
+            # 1/tile_rows as many weight rows
+            w_out = jnp.repeat(tiles["w_out"], tile, axis=0)  # (n, prev)
+            b_out = jnp.repeat(tiles["b_out"], tile, axis=0)  # (n,)
+            return jax.nn.sigmoid(
+                jnp.sum(x * w_out, axis=-1) + b_out)
+
+        def probe_fn(bits_, ids):
+            mb_rows = jnp.take(m_bits_vec, tenant_idx)
+            base_rows = jnp.take(base_vec, tenant_idx)
+            if sharded:
+                # word-sharded concatenated bitsets: rebase each row's
+                # word base into this shard's slice, count the misses
+                # the slice owns, combine with ONE psum
+                wl = bits_.shape[0]
+                off = (jax.lax.axis_index(axis) * wl).astype(jnp.int32)
+                miss = slice_miss(bits_, ids, mb_rows, base_rows, off)
+                return jax.lax.psum(miss, axis) == 0
+            return whole_probe(bits_, ids, mb_rows, base_rows)
+
+        tau_rows = jnp.take(tau_vec, tenant_idx)
+        return existence.query_stages(params, cfg, tau_rows, bits,
+                                      None, raw_ids,
+                                      probe_fn=probe_fn,
+                                      predict_fn=predict_fn)
+
+    if not sharded:
+        return jax.jit(fused_body), gather_tiles
+
+    in_specs = ({"dense": P(), "embed_flat": P(axis, None)},  # params
+                P(),                                          # tiles
+                P(axis),                                      # bits
+                P(), P(), P(), P(), P())
+    fused = _shard_wrap(mesh, fused_body, in_specs, (P(), P(), P()),
+                        check_rep=key.probe != PROBE_KERNEL)
+    return fused, gather_tiles
+
+
+# ================================================================= facades
+
+class LocalExecutor(Executor):
+    """Facade: grouping OFF x local placement (the pre-planner fused
+    path, behavior-preserving)."""
+
+    def __init__(self, plan: QueryPlan):
+        if plan.placement.sharded:
+            raise ValueError("LocalExecutor needs a local placement")
+        self.plan = plan
+        self.fn = _tenant_program(plan, None)
 
     def place(self, index: existence.ExistenceIndex) -> PlacedFilter:
-        return PlacedFilter(params=index.params,
-                            bits=jnp.asarray(index.fixup_filter.bits))
+        return _place_local(index)
 
 
 class ShardedExecutor(Executor):
-    """Mesh-sharded fused path: tables + bitset split over one axis."""
+    """Facade: grouping OFF x sharded placement (tables + bitset split
+    over one mesh axis)."""
 
     def __init__(self, plan: QueryPlan, mesh: Mesh):
         if not plan.placement.sharded:
@@ -152,129 +503,16 @@ class ShardedExecutor(Executor):
                 f"expects {plan.placement.n_shards} shards")
         self.plan = plan
         self.mesh = mesh
-        axis = plan.placement.axis
-        cfg, fp = plan.cfg, plan.fixup_params
-        wl = plan.words_per_shard()
-
-        def predict_fn(params, cfg_, enc):
-            """lmbf.predict over vocab-sharded tables: masked local
-            gathers, ONE psum to rebuild the feature row, replicated
-            MLP head. One-hot columns have no table — compute them on
-            shard 0 only so the psum is exact (no 1/n rescaling)."""
-            shard = jax.lax.axis_index(axis)
-            feats = []
-            for i, (rows, e) in enumerate(cfg_.column_encodings):
-                ids = enc[..., i]
-                if e is None:
-                    oh = jax.nn.one_hot(ids, rows, dtype=cfg_.dtype)
-                    feats.append(jnp.where(shard == 0, oh,
-                                           jnp.zeros_like(oh)))
-                else:
-                    tbl = params["embed"][f"col{i}"]    # (rows_local, e)
-                    rl = tbl.shape[0]
-                    lid = ids - shard * rl
-                    ok = (lid >= 0) & (lid < rl)
-                    g = jnp.take(tbl, jnp.clip(lid, 0, rl - 1), axis=0)
-                    feats.append(jnp.where(ok[..., None], g,
-                                           jnp.zeros_like(g)))
-            x = jax.lax.psum(jnp.concatenate(feats, axis=-1), axis)
-            return jax.nn.sigmoid(lmbf.mlp_head(params, cfg_, x))
-
-        if plan.probe == PROBE_KERNEL:
-            def local_miss(bits_local, ids):
-                off = (jax.lax.axis_index(axis) * wl).astype(jnp.int32)
-                return bloom_ops.bloom_query_shard(
-                    ids, bits_local, off[None], fp,
-                    block_n=plan.block_n, interpret=plan.interpret)
-        else:
-            def local_miss(bits_local, ids):
-                off = jax.lax.axis_index(axis) * wl
-                return bloom.shard_miss_count(bits_local, ids, fp, off)
-
-        def probe_fn(bits_local, ids):
-            # each probe word is owned by exactly one shard: zero
-            # misses across all shards <=> every probed bit is set
-            miss = jax.lax.psum(local_miss(bits_local, ids), axis)
-            return miss == 0
-
-        def body(params, bits_local, tau, raw_ids):
-            return existence.query_stages(params, cfg, tau, bits_local,
-                                          fp, raw_ids, probe_fn=probe_fn,
-                                          predict_fn=predict_fn)
-
-        sm_kwargs = {}
-        if _CHECK_KW:
-            # pallas_call has no replication rule — disable the check
-            # only for the kernel probe flavor
-            sm_kwargs[_CHECK_KW] = plan.probe != PROBE_KERNEL
-        self.fn = jax.jit(shard_map(
-            body, mesh=mesh,
-            in_specs=(self._param_specs(), P(axis), P(), P()),
-            out_specs=(P(), P(), P()), **sm_kwargs))
-
-    # ------------------------------------------------------------ layout
-    def _param_specs(self):
-        """PartitionSpec tree for the (padded) param pytree, resolved
-        through sharding/rules.py: 'vocab' (table rows) -> the shard
-        axis, every other logical axis replicated."""
-        axis = self.plan.placement.axis
-        table = {"vocab": (axis,)}
-        spec_tree = lmbf.params_spec(self.plan.cfg)
-
-        def one(s):
-            shape = list(s.shape)
-            if s.axes and s.axes[0] == "vocab":
-                shape[0] = (self.plan.table_rows_per_shard(shape[0])
-                            * self.plan.placement.n_shards)
-            return rules.spec_for(shape, s.axes, self.mesh, table)
-
-        return jax.tree.map(one, spec_tree, is_leaf=is_spec)
+        self.fn = _tenant_program(plan, mesh)
 
     def place(self, index: existence.ExistenceIndex) -> PlacedFilter:
-        """Pad + scatter a fitted index onto the mesh: each shard gets
-        its table-row and bitset-word slice directly (no full-size
-        replica materializes on any one device)."""
-        cfg = self.plan.cfg
-        n = self.plan.placement.n_shards
-        axis = self.plan.placement.axis
-        shard1d = NamedSharding(self.mesh, P(axis))
-        repl = NamedSharding(self.mesh, P())
-
-        embed = {}
-        for i, (rows, e) in enumerate(cfg.column_encodings):
-            if e is None:
-                continue
-            tbl = np.asarray(index.params["embed"][f"col{i}"])
-            rl = self.plan.table_rows_per_shard(rows)
-            padded = np.zeros((rl * n,) + tbl.shape[1:], tbl.dtype)
-            padded[:rows] = tbl
-            embed[f"col{i}"] = jax.device_put(
-                padded, NamedSharding(self.mesh, P(axis, None)))
-        dense = {k: jax.device_put(np.asarray(v), repl)
-                 for k, v in index.params["dense"].items()}
-
-        bits = np.asarray(index.fixup_filter.bits)
-        padded_bits = np.zeros(self.plan.words_per_shard() * n, np.uint32)
-        padded_bits[:bits.size] = bits
-        return PlacedFilter(params={"embed": embed, "dense": dense},
-                            bits=jax.device_put(padded_bits, shard1d))
+        return _place_sharded(self.plan, self.mesh, index)
 
 
 class GroupedExecutor:
-    """One compiled megabatch program for a whole plan group.
-
-    Signature (all but the group key traced, so one program serves any
-    tenant mix)::
-
-        fn(params, bits, tau_vec, m_bits_vec, base_vec, tenant_idx,
-           raw_ids) -> (answers, model_yes, backup_yes)
-
-    ``params`` is the arena's stacked pytree (leading tenant axis),
-    ``bits`` the concatenated fixup bitsets, and the three vectors are
-    indexed by each row's ``tenant_idx``: its threshold, its filter's
-    modulo, and its bitset's first word. Bit-identical to running each
-    row through its tenant's :class:`LocalExecutor` — see the module
-    docstring for the stage-by-stage argument.
+    """Facade: grouping ON x either placement — one compiled megabatch
+    program for a whole plan group (see :func:`_grouped_program` for
+    the signature and the sharded composition).
 
     Contract: the row count is a multiple of ``key.tile_rows`` and
     ``tenant_idx`` is constant within every tile (the scheduler aligns
@@ -289,125 +527,21 @@ class GroupedExecutor:
     grouped dispatch runs at plain-local-GEMM speed.
     """
 
-    def __init__(self, key: GroupKey):
-        self.key = key
-        cfg, nh, tile = key.cfg, key.n_hashes, key.tile_rows
-        n_hidden = len(cfg.hidden)
-        # combined-embedding layout (must mirror PlanGroupArena's):
-        # embedded columns' tables live back to back in one row-padded
-        # matrix so ONE gather serves every subcolumn
-        emb_cols = [(i, rows, e)
-                    for i, (rows, e) in enumerate(cfg.column_encodings)
-                    if e is not None]
-        emb_rows_sum = sum(rows for _, rows, _ in emb_cols)
-
-        @jax.jit
-        def gather_tiles(params, tile_idx):
-            """Per-tile dense-stack weights: {w{li}: (g, i, o), b{li}:
-            (g, o), w_out: (g, prev), b_out: (g,)}. Indices are
-            scheduler-controlled live slots, so the bounds check is
-            safely skipped."""
-            tiles = {}
-            for li in range(n_hidden):
-                tiles[f"w{li}"] = params["dense"][f"w{li}"] \
-                    .at[tile_idx].get(mode="promise_in_bounds")
-                tiles[f"b{li}"] = params["dense"][f"b{li}"] \
-                    .at[tile_idx].get(mode="promise_in_bounds")
-            tiles["w_out"] = params["dense"]["w_out"] \
-                .at[tile_idx].get(mode="promise_in_bounds")[..., 0]
-            tiles["b_out"] = params["dense"]["b_out"] \
-                .at[tile_idx].get(mode="promise_in_bounds")[..., 0]
-            return tiles
-
-        self.gather_tiles = gather_tiles
-
-        if key.probe == PROBE_KERNEL:
-            def probe(bits, ids, mb_rows, base_rows):
-                return bloom_ops.bloom_query_grouped(
-                    ids, bits, base_rows, mb_rows, n_hashes=nh,
-                    block_n=key.block_n, interpret=key.interpret)
+    def __init__(self, key: GroupKey, mesh: Optional[Mesh] = None):
+        if key.placement.sharded:
+            if mesh is None:
+                raise ValueError("sharded group key needs a mesh")
+            if mesh.shape.get(key.placement.axis, 1) \
+                    != key.placement.n_shards:
+                raise ValueError(
+                    f"mesh axis {key.placement.axis!r} has size "
+                    f"{mesh.shape.get(key.placement.axis)} but the "
+                    f"group key expects {key.placement.n_shards} shards")
+            self.mesh: Optional[Mesh] = mesh
         else:
-            def probe(bits, ids, mb_rows, base_rows):
-                return bloom.grouped_query(bits, ids, nh, mb_rows,
-                                           base_rows)
-
-        @jax.jit
-        def fused(params, tiles, bits, tau_vec, m_bits_vec, base_vec,
-                  tenant_idx, raw_ids):
-            def predict_fn(p, cfg_, enc):
-                gathered = None
-                valids = []
-                if emb_cols:
-                    flat = p["embed_flat"]  # (cap*emb_rows_sum, e_max)
-                    cap = flat.shape[0] // emb_rows_sum
-                    parts, prefix = [], 0
-                    for i, rows, _ in emb_cols:
-                        # reproduce the local path's jnp.take semantics
-                        # EXACTLY — negative ids wrap pythonically,
-                        # out-of-bounds ids become NaN rows — while
-                        # keeping the combined-matrix index inside THIS
-                        # tenant's block (an out-of-vocab id must never
-                        # read a neighbor tenant's rows)
-                        ids = enc[..., i]
-                        wrapped = jnp.where(ids < 0, ids + rows, ids)
-                        valids.append((wrapped >= 0) & (wrapped < rows))
-                        safe = jnp.clip(wrapped, 0, rows - 1)
-                        parts.append(cap * prefix + tenant_idx * rows
-                                     + safe)
-                        prefix += rows
-                    idx = jnp.stack(parts, axis=-1)     # (n, C)
-                    gathered = flat.at[idx.reshape(-1)] \
-                        .get(mode="promise_in_bounds") \
-                        .reshape(idx.shape[0], len(emb_cols), -1)
-                feats, gi = [], 0
-                for i, (rows, e) in enumerate(cfg_.column_encodings):
-                    if e is None:       # no table: same one-hot as local
-                        feats.append(jax.nn.one_hot(enc[..., i], rows,
-                                                    dtype=cfg_.dtype))
-                    else:               # exact table rows, e_max-padded
-                        feats.append(jnp.where(
-                            valids[gi][..., None], gathered[:, gi, :e],
-                            jnp.asarray(jnp.nan, cfg_.dtype)))
-                        gi += 1
-                x = jnp.concatenate(feats, axis=-1)
-                # hidden stack on TILES: the scheduler guarantees every
-                # tile_rows-row tile is single-tenant, so weights come
-                # pre-gathered per tile (``tiles``, memoized by the
-                # arena) and each tile runs a real (tile, i) @ (i, o)
-                # GEMM — bit-equal to the local matmul (row count does
-                # not change the k-reduction order; property-tested),
-                # and ~10x faster than per-row weight gathers, which
-                # turn the dense stack into pure memory traffic
-                for li in range(len(cfg_.hidden)):
-                    w = tiles[f"w{li}"]                 # (g, prev, width)
-                    b = tiles[f"b{li}"]                 # (g, width)
-                    x = x.reshape(-1, tile, x.shape[-1])
-                    x = jax.nn.relu(
-                        jnp.einsum("gti,gio->gto", x, w) + b[:, None, :])
-                    x = x.reshape(-1, x.shape[-1])
-                # output layer: the same multiply+reduce as
-                # lmbf.mlp_head. The weight row is gathered per TILE
-                # and broadcast to rows — each row still multiplies its
-                # own tenant's w_out and the (n, prev) -> (n,) reduce is
-                # unchanged, so this stays bit-identical while gathering
-                # 1/tile_rows as many weight rows
-                w_out = jnp.repeat(tiles["w_out"], tile, axis=0)  # (n, prev)
-                b_out = jnp.repeat(tiles["b_out"], tile, axis=0)  # (n,)
-                return jax.nn.sigmoid(
-                    jnp.sum(x * w_out, axis=-1) + b_out)
-
-            def probe_fn(bits_, ids):
-                return probe(bits_, ids,
-                             jnp.take(m_bits_vec, tenant_idx),
-                             jnp.take(base_vec, tenant_idx))
-
-            tau_rows = jnp.take(tau_vec, tenant_idx)
-            return existence.query_stages(params, cfg, tau_rows, bits,
-                                          None, raw_ids,
-                                          probe_fn=probe_fn,
-                                          predict_fn=predict_fn)
-
-        self.fn = fused
+            self.mesh = None
+        self.key = key
+        self.fn, self.gather_tiles = _grouped_program(key, self.mesh)
 
     def program_count(self) -> int:
         """Live jit-cache entries ((arena-shape x bucket) programs)."""
@@ -481,39 +615,51 @@ def release_plan(plan: QueryPlan) -> int:
     return len(victims)
 
 
-# Grouped executors key on the GroupKey alone (grouping is local-only,
-# so no mesh in the key) and ref-count like the per-plan cache: each
-# live arena holds ONE reference, released when its last tenant leaves.
+# Grouped executors key on (GroupKey, mesh-or-None) — local group keys
+# on (key, None), mirroring the per-plan cache — and ref-count the same
+# way: each live arena holds ONE reference, released when its last
+# tenant leaves.
 
-_GROUPED: Dict[GroupKey, GroupedExecutor] = {}
-_GREFS: Dict[GroupKey, int] = {}
+_GROUPED: Dict[Tuple[GroupKey, Optional[Mesh]], GroupedExecutor] = {}
+_GREFS: Dict[Tuple[GroupKey, Optional[Mesh]], int] = {}
 
 
-def grouped_executor_for(key: GroupKey) -> GroupedExecutor:
+def _gkey(key: GroupKey, mesh: Optional[Mesh]):
+    return (key, mesh if key.placement.sharded else None)
+
+
+def grouped_executor_for(key: GroupKey,
+                         mesh: Optional[Mesh] = None) -> GroupedExecutor:
     """Build-or-fetch the megabatch executor for a plan group (cached,
     no ref taken)."""
-    ex = _GROUPED.get(key)
+    k = _gkey(key, mesh)
+    ex = _GROUPED.get(k)
     if ex is None:
-        ex = _GROUPED[key] = GroupedExecutor(key)
+        ex = _GROUPED[k] = GroupedExecutor(key, mesh)
     return ex
 
 
-def acquire_grouped_executor(key: GroupKey) -> GroupedExecutor:
+def acquire_grouped_executor(key: GroupKey,
+                             mesh: Optional[Mesh] = None
+                             ) -> GroupedExecutor:
     """:func:`grouped_executor_for` + take one reference."""
-    ex = grouped_executor_for(key)
-    _GREFS[key] = _GREFS.get(key, 0) + 1
+    ex = grouped_executor_for(key, mesh)
+    k = _gkey(key, mesh)
+    _GREFS[k] = _GREFS.get(k, 0) + 1
     return ex
 
 
-def release_grouped_executor(key: GroupKey) -> bool:
+def release_grouped_executor(key: GroupKey,
+                             mesh: Optional[Mesh] = None) -> bool:
     """Drop one reference; the last one forgets the cached executor
     (and its compiled programs). Returns True when dropped."""
-    n = _GREFS.get(key, 0) - 1
+    k = _gkey(key, mesh)
+    n = _GREFS.get(k, 0) - 1
     if n > 0:
-        _GREFS[key] = n
+        _GREFS[k] = n
         return False
-    _GREFS.pop(key, None)
-    return _GROUPED.pop(key, None) is not None
+    _GREFS.pop(k, None)
+    return _GROUPED.pop(k, None) is not None
 
 
 def compiled_program_count() -> int:

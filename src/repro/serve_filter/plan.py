@@ -21,7 +21,11 @@ third:
   tenant-specific size — it varies with each tenant's false-negative
   count, so the grouped program takes it as a traced per-row operand;
   ``n_hashes`` stays in the key (it is a compile-time probe-loop
-  bound), as do the model config and probe flavor.
+  bound), as do the model config, probe flavor, and the
+  :class:`Placement`: grouping and placement are ORTHOGONAL axes, so a
+  sharded plan groups too — with tenants whose plans agree on the mesh
+  axis, shard count, and (via the config) padded slice geometry — and
+  its arena is itself mesh-sharded.
 * :func:`plan_query` — the planner: resolves ``LMBFConfig`` +
   ``BloomParams`` + an optional target :class:`jax.sharding.Mesh` into
   a plan. Falls back to local placement when the mesh has no usable
@@ -134,6 +138,15 @@ class GroupKey:
     compiled program gathers MLP weights once per TILE instead of once
     per row (per-row weight gathers turn the dense stack memory-bound
     and ~10x slower; per-tile gathers keep real batched GEMMs).
+
+    ``placement`` is the orthogonal WHERE axis, carried verbatim from
+    the members' plans: a sharded group key means the whole arena —
+    combined embedding matrix row-sharded, concatenated fixup bitsets
+    word-sharded — lives split over the mesh axis, and the grouped
+    program runs under ``shard_map``. Tenants on different placements
+    (or different mesh axes / shard counts) never share an arena; the
+    padded per-shard slice geometry is a pure function of the config +
+    placement, so key equality implies geometry agreement.
     """
     cfg: lmbf.LMBFConfig
     n_hashes: int
@@ -141,6 +154,7 @@ class GroupKey:
     interpret: Optional[bool] = None
     block_n: int = 2048
     tile_rows: int = DEFAULT_TILE_ROWS
+    placement: Placement = Placement()
 
     def __post_init__(self):
         if self.tile_rows < 1:
@@ -148,16 +162,16 @@ class GroupKey:
 
 
 def group_key(plan: QueryPlan,
-              tile_rows: int = DEFAULT_TILE_ROWS) -> Optional[GroupKey]:
-    """The plan-group key for grouped (megabatch) execution, or ``None``
-    when the plan cannot group (sharded placement — cross-tenant
-    coalescing and cross-shard splitting are separate axes; a sharded
-    grouped executor is future work)."""
-    if plan.placement.sharded:
-        return None
+              tile_rows: int = DEFAULT_TILE_ROWS) -> GroupKey:
+    """The plan-group key for grouped (megabatch) execution. Grouping
+    composes with placement: a sharded plan's group key carries the
+    sharded :class:`Placement`, so its tenants stack into a mesh-sharded
+    arena (the registry's ``GroupingConfig.placement`` knob can keep
+    sharded plans ungrouped instead)."""
     return GroupKey(cfg=plan.cfg, n_hashes=plan.fixup_params.n_hashes,
                     probe=plan.probe, interpret=plan.interpret,
-                    block_n=plan.block_n, tile_rows=int(tile_rows))
+                    block_n=plan.block_n, tile_rows=int(tile_rows),
+                    placement=plan.placement)
 
 
 def plan_query(cfg: lmbf.LMBFConfig, fixup_params: bloom.BloomParams, *,

@@ -36,10 +36,15 @@ membership: groupable tenants whose plans share a
 :class:`~repro.serve_filter.plan.GroupKey` live stacked in ONE
 :class:`~repro.serve_filter.arena.PlanGroupArena` (registration and
 checkpoint hydration write straight into an arena slot), so the
-scheduler can answer many tenants per device dispatch. Eviction frees
-the tenant's slot for reuse and compacts the arena once churn leaves
-more holes than live tenants — LRU churn cannot leak arena rows — and
-the last tenant out releases the group's cached megabatch executor.
+scheduler can answer many tenants per device dispatch. Grouping
+COMPOSES with placement: on a mesh-sharded registry the group keys
+carry the sharded placement and the arenas are themselves mesh-sharded
+(combined embedding matrix row-sharded, concatenated bitsets
+word-sharded), unless ``GroupingConfig.placement="local"`` restores
+the old mesh-wins gating. Eviction frees the tenant's slot for reuse
+and compacts the arena once churn leaves more holes than live tenants
+— LRU churn cannot leak arena rows — and the last tenant out releases
+the group's cached megabatch executor.
 """
 from __future__ import annotations
 
@@ -128,8 +133,10 @@ class FilterRegistry:
     admitted/hydrated tenant's embedding tables and fixup bitset are
     scattered straight onto their shard slices); ``grouping.enabled``
     stacks same-group-key groupable tenants into per-group device
-    arenas so one dispatch can serve many of them (local placement only
-    — a mesh wins over grouping when both are configured).
+    arenas so one dispatch can serve many of them. The two compose:
+    with both configured, the arenas themselves are mesh-sharded
+    (``grouping.placement="local"`` keeps sharded tenants out of
+    arenas instead).
 
     ``budget_mb`` counts NOMINAL per-filter sizes (weights + packed
     bitset). A grouped arena's real footprint carries bounded overhead
@@ -306,7 +313,8 @@ class FilterRegistry:
         mem = memory.accounting(index.cfg)
         plan = self.plan_for(index)
         gk = (group_key(plan, self.grouping.tile_rows)
-              if (self.grouping.enabled and groupable) else None)
+              if (groupable and self.grouping.groups_plan(plan))
+              else None)
         common = dict(tenant=tenant, index=index, plan=plan,
                       model_mb=mem.weights_mb,
                       fixup_mb=index.fixup_filter.size_mb,
@@ -317,8 +325,11 @@ class FilterRegistry:
         if gk is not None:
             arena = self._groups.get(gk)
             if arena is None:
+                # a sharded group key hands the arena its mesh through
+                # the executor, so the device views land on-shard
                 arena = PlanGroupArena(
-                    gk, executors_lib.acquire_grouped_executor(gk))
+                    gk, executors_lib.acquire_grouped_executor(
+                        gk, self.placement.mesh))
                 self._groups[gk] = arena
             if (prev is not None and prev.group is arena
                     and tenant in arena):
@@ -397,7 +408,8 @@ class FilterRegistry:
             arena.remove(entry.tenant)
             if len(arena) == 0:
                 del self._groups[arena.key]
-                executors_lib.release_grouped_executor(arena.key)
+                executors_lib.release_grouped_executor(
+                    arena.key, self.placement.mesh)
             else:
                 arena.maybe_compact()
         else:

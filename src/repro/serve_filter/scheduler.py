@@ -13,14 +13,18 @@ O(1) membership), so sustained load from one tenant cannot starve late
 arrivals.
 
 Coalescing is GROUP-AWARE: when the picked tenant's entry belongs to a
-plan-group arena (``FilterRegistry(grouped=True)``) and its own rows
+plan-group arena (grouping enabled on the registry) and its own rows
 don't fill the bucket, the scheduler keeps pulling rows from the next
 same-group tenants in ring order and dispatches ONE megabatch with a
 per-row ``tenant_idx`` — so a fleet of lightly-loaded filters rides
 bucket-1024-class dispatches instead of each paying a lonely bucket-64
 one. Per-request scatter is unchanged (spans stay contiguous); the
 round-robin ring still rotates on the picked tenant only, so tenants
-in other groups keep their turn.
+in other groups keep their turn. The coalescing is PLACEMENT-AGNOSTIC:
+grouping and placement are orthogonal executor axes, so the same
+megabatch path drives local arenas and mesh-sharded ones (where the
+arena arrays live split over a mesh axis) — the scheduler never looks
+at where the arrays live.
 
 ``step()`` is split into a host half and a device half:
 

@@ -278,11 +278,18 @@ class FilterServer:
         snap["compiled_programs"] = float(
             executors_lib.compiled_program_count())
         snap["plan_groups"] = float(len(self.registry.groups))
-        # actual arena footprint (padding + growth headroom included) —
-        # budget_mb counts nominal per-filter sizes, so operators watch
-        # this for the true grouped-residency cost
-        snap["arena_mb"] = sum(a.nbytes for a in
+        # actual PER-SHARD device footprint of the arenas (padding +
+        # growth headroom included) — budget_mb counts nominal
+        # per-filter sizes, so operators watch this for the true
+        # grouped-residency cost. On a sharded fleet the row/word-
+        # sharded arrays contribute one slice per device (charging the
+        # whole arena to every device would overstate HBM pressure by
+        # ~the shard count — exactly where sharding is the point);
+        # arena_host_mb keeps the whole-arena host-mirror total.
+        snap["arena_mb"] = sum(a.device_nbytes for a in
                                self.registry.groups.values()) / 2 ** 20
+        snap["arena_host_mb"] = sum(a.nbytes for a in
+                                    self.registry.groups.values()) / 2 ** 20
         return snap
 
     # ------------------------------------------------- deprecated surface

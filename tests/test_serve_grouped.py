@@ -67,17 +67,28 @@ def test_group_key_drops_tenant_sizes(fleet):
     assert group_key(pk) != group_key(pa)
 
 
-def test_sharded_plans_do_not_group(fleet):
+def test_group_key_carries_placement(fleet):
+    """Grouping composes with placement: a sharded plan groups too —
+    with tenants that agree on the mesh axis and shard count — and its
+    group key differs from the local one (different arenas/programs)."""
     import jax
     _, idx = fleet["s0j0"]
     mesh = jax.make_mesh((1,), ("data",))
     p = plan_query(idx.cfg, idx.fixup_filter.params, mesh=mesh)
-    assert group_key(p) is not None         # 1-device mesh plans local
+    gk = group_key(p)
+    assert gk is not None and not gk.placement.sharded  # 1-device = local
     from repro.serve_filter.plan import Placement, QueryPlan
-    sharded = QueryPlan(cfg=idx.cfg, fixup_params=idx.fixup_filter.params,
-                        placement=Placement(kind="sharded", axis="data",
-                                            n_shards=2))
-    assert group_key(sharded) is None
+    mk = lambda pl: group_key(QueryPlan(
+        cfg=idx.cfg, fixup_params=idx.fixup_filter.params, placement=pl))
+    sharded2 = mk(Placement(kind="sharded", axis="data", n_shards=2))
+    assert sharded2.placement.sharded
+    assert sharded2 != gk                       # placement is in the key
+    assert sharded2 == mk(Placement(kind="sharded", axis="data",
+                                    n_shards=2))
+    assert sharded2 != mk(Placement(kind="sharded", axis="data",
+                                    n_shards=4))
+    assert sharded2 != mk(Placement(kind="sharded", axis="model",
+                                    n_shards=2))
 
 
 # ----------------------------------------------------- grouped probe math
@@ -162,13 +173,14 @@ def test_grouped_executor_refcount_released_on_last_evict(fleet):
     srv.admit(TenantSpec("t2", index=fleet["s0j1"][1]))
     assert len(srv.registry.groups) == 1
     key = next(iter(srv.registry.groups))
-    assert key in executors_lib._GROUPED
+    # the grouped cache keys on (group key, mesh-or-None), local = None
+    assert (key, None) in executors_lib._GROUPED
     h1.query(fleet["s0j0"][0].records[:8])
     assert srv.stats_snapshot()["compiled_programs"] >= 1
     srv.evict("t1")
-    assert key in executors_lib._GROUPED     # t2 still holds the group
+    assert (key, None) in executors_lib._GROUPED  # t2 still holds it
     srv.evict("t2")
-    assert key not in executors_lib._GROUPED
+    assert (key, None) not in executors_lib._GROUPED
     assert srv.stats_snapshot()["compiled_programs"] == 0
     assert len(srv.registry.groups) == 0
 

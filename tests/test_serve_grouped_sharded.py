@@ -1,0 +1,304 @@
+"""Placement-aware grouped execution: megabatch arenas x mesh sharding.
+
+The composed leg of the executor core (grouping ON x placement
+SHARDED): one grouped dispatch serves many tenants whose combined
+embedding matrix is row-sharded and whose concatenated fixup bitsets
+are word-sharded over a mesh axis.
+
+Fast tests cover the pieces that don't need multiple devices: the
+grouped+sharded probe decomposition (summing per-slice per-row-rebased
+miss counts over a manual word split of a concatenated arena must
+reproduce ``bloom.grouped_query`` bit-for-bit — the exact invariant the
+sharded grouped program's ``psum`` relies on), group-key placement
+semantics, and the ``GroupingConfig.placement`` knob.
+
+The load-bearing end-to-end check needs a >= 2-shard mesh, so it runs
+in a subprocess with the placeholder-device flag (the main test process
+keeps the real 1-device view — see conftest.py): grouped+sharded
+answers must be BIT-IDENTICAL per row to ungrouped ``LocalExecutor``
+serving across plan shapes, buckets, and probe flavors, including
+evict -> compact -> reload churn with async in-flight batches; a
+``groupable=False`` tenant inside the sharded grouped fleet keeps a
+private sharded ``PlacedFilter`` and stays out of every arena; and the
+dispatch-count collapse (many tenants -> few device calls) survives
+sharding.
+"""
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import bloom
+from repro.kernels.bloom_query import ops as bloom_ops
+from repro.serve_filter import GroupingConfig
+from repro.serve_filter.arena import PlanGroupArena
+from repro.serve_filter.executors import GroupedExecutor
+from repro.serve_filter.plan import (GroupKey, Placement, QueryPlan,
+                                     group_key)
+
+
+# ------------------------------------------------- grouped+sharded probe
+
+def _arena_fixture():
+    """Three heterogeneous filters concatenated into one word arena."""
+    rng = np.random.default_rng(0)
+    nh, filters, base = 5, [], 0
+    chunks = []
+    for m in (2000, 1100, 3300):
+        p = bloom.BloomParams(m_bits=m, n_hashes=nh)
+        keys = rng.integers(1, 500, size=(120, 3)).astype(np.int32)
+        bits = bloom.empty(p)
+        bloom.add(bits, keys[:60], p)
+        filters.append((p, bits, keys, base))
+        chunks.append(bits)
+        base += p.n_words
+    concat = np.concatenate(chunks)
+    ids = np.concatenate([k for _, _, k, _ in filters])
+    mb = np.concatenate([np.full(120, p.m_bits, np.uint32)
+                         for p, _, _, _ in filters])
+    wb = np.concatenate([np.full(120, b, np.int32)
+                         for _, _, _, b in filters])
+    perm = rng.permutation(len(ids))
+    return nh, concat, ids[perm], mb[perm], wb[perm]
+
+
+def test_grouped_shard_miss_counts_reassemble_grouped_query():
+    """Summing per-slice grouped miss counts over a manual 3-way word
+    split of the concatenated arena == grouped_query (and thus the
+    per-filter query), for the JAX and Pallas flavors — every probe
+    word is owned by exactly one slice, per-slot bases rebased."""
+    nh, concat, ids, mb, wb = _arena_fixture()
+    want = np.asarray(bloom.grouped_query(concat, ids, nh, mb, wb))
+    n_shards = 3
+    wl = -(-concat.size // n_shards)
+    padded = np.zeros(wl * n_shards, np.uint32)
+    padded[:concat.size] = concat
+    tot_j = np.zeros(len(ids), np.int32)
+    tot_k = np.zeros(len(ids), np.int32)
+    for s in range(n_shards):
+        sl = padded[s * wl:(s + 1) * wl]
+        tot_j += np.asarray(bloom.grouped_shard_miss_count(
+            sl, ids, nh, mb, wb, s * wl))
+        tot_k += np.asarray(bloom_ops.bloom_query_grouped_shard(
+            ids, sl, wb, mb, np.asarray([s * wl], np.int32),
+            n_hashes=nh, block_n=64, interpret=True))
+    np.testing.assert_array_equal(tot_j == 0, want)
+    np.testing.assert_array_equal(tot_k, tot_j)
+    # the zero-offset whole-arena slice degenerates to grouped_query
+    solo = np.asarray(bloom.grouped_shard_miss_count(
+        concat, ids, nh, mb, wb, 0))
+    np.testing.assert_array_equal(solo == 0, want)
+
+
+# --------------------------------------------------- composition plumbing
+
+def _some_plan(placement=Placement()):
+    from repro.core import compression as comp, lmbf
+    from repro.data import tuples
+    ds = tuples.synthesize([300, 200], n_records=50, seed=0)
+    plan = comp.make_plan(ds.cards, theta=100, ns=2)
+    cfg = lmbf.LMBFConfig(plan=plan, hidden=(16,))
+    fp = bloom.BloomParams(m_bits=640, n_hashes=3)
+    return QueryPlan(cfg=cfg, fixup_params=fp, placement=placement)
+
+
+def test_grouping_placement_knob():
+    """GroupingConfig.placement gates which plans group: "auto"
+    composes (sharded plans group into sharded arenas), "local"
+    restores the mesh-wins gating."""
+    local_plan = _some_plan()
+    sharded_plan = _some_plan(Placement(kind="sharded", axis="data",
+                                        n_shards=2))
+    auto = GroupingConfig(enabled=True)
+    assert auto.groups_plan(local_plan)
+    assert auto.groups_plan(sharded_plan)
+    legacy = GroupingConfig(enabled=True, placement="local")
+    assert legacy.groups_plan(local_plan)
+    assert not legacy.groups_plan(sharded_plan)
+    assert not GroupingConfig().groups_plan(local_plan)  # disabled
+    with pytest.raises(ValueError):
+        GroupingConfig(enabled=True, placement="everywhere")
+
+
+def test_sharded_group_key_requires_mesh():
+    """A sharded group key cannot build an executor or an arena without
+    the mesh its placement names."""
+    sharded_plan = _some_plan(Placement(kind="sharded", axis="data",
+                                        n_shards=2))
+    gk = group_key(sharded_plan)
+    assert isinstance(gk, GroupKey) and gk.placement.sharded
+    with pytest.raises(ValueError):
+        GroupedExecutor(gk)              # no mesh
+
+    class _MeshlessExecutor:             # an executor with no .mesh
+        pass
+
+    with pytest.raises(ValueError):
+        PlanGroupArena(gk, _MeshlessExecutor())
+
+
+# --------------------------------------------------- multi-device e2e
+
+_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import tempfile
+import jax, numpy as np
+from repro.serve_filter import (BucketConfig, DispatchConfig, FilterServer,
+                                GroupingConfig, PlacementConfig,
+                                ProbeConfig, ServeConfig, TenantSpec)
+from repro.core import existence
+from repro.data import tuples
+
+mesh = jax.make_mesh((2,), ("data",))
+st = existence.TrainSettings(steps=12, n_pos=700, n_neg=700)
+fleet = {}
+for shape, (cards, theta) in enumerate(
+        [([300, 200, 80], 100), ([500, 150], 120)]):
+    for j in range(2):
+        ds = tuples.synthesize(cards, n_records=700, seed=10 * shape + j)
+        fleet[f"s{shape}j{j}"] = (ds, existence.fit(ds, theta=theta,
+                                                    settings=st))
+
+def probes(ds, n, seed):
+    rng = np.random.default_rng(seed)
+    pos = ds.records[rng.integers(0, len(ds.records), n // 2)]
+    neg = np.stack([rng.integers(1, v, n - n // 2) for v in ds.cards],
+                   axis=-1).astype(np.int32)
+    return np.concatenate([pos, neg])
+
+pools = {t: probes(ds, 400, 5) for t, (ds, _) in fleet.items()}
+
+def drive(srv, plan_rows):
+    reqs = []
+    for start, size in plan_rows:
+        for t in fleet:
+            reqs.append(srv.submit(t, pools[t][start:start + size]))
+    srv.run_until_drained()
+    assert all(r.done() and r.error is None for r in reqs)
+    return [(r.answers, r.model_yes, r.backup_yes) for r in reqs]
+
+plan_rows = [(0, 13), (13, 57), (70, 128), (198, 202)]
+for use_kernel in (False, True):
+    probe = ProbeConfig(use_kernel=use_kernel, block_n=64)
+    srv_l = FilterServer(ServeConfig(buckets=BucketConfig((32, 128)),
+                                     probe=probe))
+    srv_g = FilterServer(ServeConfig(
+        buckets=BucketConfig((32, 128)), probe=probe,
+        placement=PlacementConfig(mesh=mesh),
+        grouping=GroupingConfig(enabled=True),
+        dispatch=DispatchConfig(async_dispatch=True)))
+    for t, (_, idx) in fleet.items():
+        srv_l.admit(TenantSpec(t, index=idx))
+        entry = srv_g.admit(TenantSpec(t, index=idx)).entry
+        assert entry.plan.placement.sharded and entry.group is not None
+    # the arenas themselves are mesh-sharded: concatenated bitsets
+    # word-sharded, combined embedding matrix row-sharded
+    for arena in srv_g.registry.groups.values():
+        assert arena.key.placement.sharded
+        params, bits, *_ = arena.device_arrays()
+        assert tuple(bits.sharding.spec) == ("data",), bits.sharding
+        if params["embed_flat"].size:
+            assert params["embed_flat"].sharding.spec[0] == "data"
+    got_l = drive(srv_l, plan_rows)
+    got_g = drive(srv_g, plan_rows)
+    for (la, lm, lb), (ga, gm, gb) in zip(got_l, got_g):
+        np.testing.assert_array_equal(ga, la)
+        np.testing.assert_array_equal(gm, lm)
+        np.testing.assert_array_equal(gb, lb)
+    # the dispatch-count collapse survives sharding
+    assert srv_g.stats.totals.grouped > 0
+    assert srv_g.stats.totals.batches < srv_l.stats.totals.batches
+    # per-shard footprint strictly below the whole-arena host total
+    snap = srv_g.stats_snapshot()
+    assert 0 < snap["arena_mb"] < snap["arena_host_mb"]
+print("PHASE_BIT_IDENTICAL_OK")
+
+# ---- churn: evict -> compact -> reload under async in-flight batches
+srv_l = FilterServer(ServeConfig(buckets=BucketConfig((32, 128))))
+srv_g = FilterServer(ServeConfig(
+    buckets=BucketConfig((32, 128)),
+    placement=PlacementConfig(mesh=mesh),
+    grouping=GroupingConfig(enabled=True),
+    dispatch=DispatchConfig(async_dispatch=True)))
+for t, (_, idx) in fleet.items():
+    srv_l.admit(TenantSpec(t, index=idx))
+    srv_g.admit(TenantSpec(t, index=idx))
+with tempfile.TemporaryDirectory() as tmp:
+    srv_g.save("s0j0", tmp)
+    reqs_g = [srv_g.submit(t, pools[t][:150]) for t in fleet]
+    assert srv_g.step()                     # async batch goes in flight
+    # mid-stream, same-epoch-content churn on the sharded arenas:
+    h = srv_g.handle("s0j1"); h.reload(fleet["s0j1"][1])
+    assert h.epoch == 1
+    srv_g.evict("s1j1")                     # slot freed + compaction
+    srv_g.admit(TenantSpec("s1j1", index=fleet["s1j1"][1]))
+    srv_g.handle("s0j0").reload(checkpoint=tmp)   # hydrate onto shards
+    srv_g.run_until_drained()
+    reqs_l = [srv_l.submit(t, pools[t][:150]) for t in fleet]
+    srv_l.run_until_drained()
+    for g, l in zip(reqs_g, reqs_l):
+        assert g.done() and g.error is None
+        np.testing.assert_array_equal(g.answers, l.answers)
+        np.testing.assert_array_equal(g.model_yes, l.model_yes)
+        np.testing.assert_array_equal(g.backup_yes, l.backup_yes)
+    # post-churn verification tick: swapped slots answer correctly
+    for t in fleet:
+        np.testing.assert_array_equal(
+            srv_g.handle(t).query(pools[t][:64]),
+            srv_l.handle(t).query(pools[t][:64]))
+    assert srv_g.stats_snapshot()["reloads"] == 2
+print("PHASE_CHURN_OK")
+
+# ---- groupable=False inside a sharded grouped fleet: private sharded
+# PlacedFilter, out of every arena, no leakage into grouped_batches
+srv = FilterServer(ServeConfig(
+    buckets=BucketConfig((32, 128)),
+    placement=PlacementConfig(mesh=mesh),
+    grouping=GroupingConfig(enabled=True)))
+for t, (_, idx) in fleet.items():
+    srv.admit(TenantSpec(t, index=idx))
+solo_ds, solo_idx = fleet["s0j0"][0], fleet["s0j0"][1]
+solo = srv.admit(TenantSpec("solo", index=solo_idx, groupable=False))
+entry = solo.entry
+assert entry.group is None and entry.placed is not None
+assert entry.plan.placement.sharded
+assert tuple(entry.placed.bits.sharding.spec) == ("data",)
+assert all("solo" not in a for a in srv.registry.groups.values())
+# a tick of ONLY the solo tenant cannot produce a grouped batch
+before = srv.stats_snapshot()["grouped_batches"]
+np.testing.assert_array_equal(solo.query(pools["s0j0"][:50]),
+                              srv_l.handle("s0j0").query(pools["s0j0"][:50]))
+assert srv.stats_snapshot()["grouped_batches"] == before
+assert srv.stats.per_tenant.get("solo", 0) == 50
+# its lifecycle stays on the per-tenant path: reload -> fresh sharded
+# PlacedFilter, still out of every arena
+solo.reload(solo_idx)
+assert solo.epoch == 1 and solo.entry.group is None
+assert tuple(solo.entry.placed.bits.sharding.spec) == ("data",)
+assert all("solo" not in a for a in srv.registry.groups.values())
+print("PHASE_NONGROUPABLE_OK")
+
+# ---- the GroupingConfig placement knob: "local" restores mesh-wins
+srv = FilterServer(ServeConfig(
+    buckets=BucketConfig((32, 128)),
+    placement=PlacementConfig(mesh=mesh),
+    grouping=GroupingConfig(enabled=True, placement="local")))
+h = srv.admit(TenantSpec("a", index=fleet["s0j0"][1]))
+assert h.entry.plan.placement.sharded
+assert h.entry.group is None and h.entry.placed is not None
+assert len(srv.registry.groups) == 0
+print("PHASE_KNOB_OK")
+print("GROUPED_SHARDED_SERVE_OK")
+"""
+
+
+@pytest.mark.slow
+def test_grouped_sharded_bit_identical_two_shards():
+    res = subprocess.run(
+        [sys.executable, "-c", _SUBPROC],
+        capture_output=True, text=True, timeout=900,
+        env={**__import__("os").environ, "PYTHONPATH": "src"})
+    assert "GROUPED_SHARDED_SERVE_OK" in res.stdout, \
+        res.stdout[-1000:] + res.stderr[-2000:]
