@@ -85,6 +85,12 @@ def make_parser() -> argparse.ArgumentParser:
                     help="CI fast path: tiny many-tenant run (grouped + "
                          "ungrouped, bit-equality checked), no classic "
                          "sweep")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="many-tenant scenario: attach a span tracer to "
+                         "the last mode's server, export Chrome trace-"
+                         "event JSON here, and self-check that prepare/"
+                         "device-compute overlap matches the dispatch "
+                         "mode (open the file in Perfetto)")
     ap.add_argument("--json-out", default=_DEFAULT_JSON,
                     help="append results here ('' disables)")
     return ap
@@ -247,10 +253,12 @@ def _measure_window(srv: FilterServer, pools: Dict[str, np.ndarray],
     submits ONE k-row request per tick, submissions pipelined with the
     in-flight dispatch), drained at the end; on churn ticks one tenant
     hot-reloads after the first dispatch, with the rest of the tick's
-    rows still queued. Returns q/s."""
+    rows still queued. Returns q/s — the INTERVAL qps from the server's
+    own stats (queries/time since the previous snapshot), so the
+    measurement window is exactly this window, not life-to-date."""
     sched = srv.scheduler
     items = [(name, pool[:k]) for name, pool in pools.items()]
-    t0 = time.perf_counter()
+    srv.stats.snapshot()        # pin the interval-qps origin to now
     for _ in range(rounds):
         sched.submit_many(items)
         if churn is not None and churn.due():
@@ -259,8 +267,7 @@ def _measure_window(srv: FilterServer, pools: Dict[str, np.ndarray],
         while sched.pending_rows:
             sched.step()
     sched.run_until_drained()
-    dt = time.perf_counter() - t0
-    return rounds * len(pools) * k / dt
+    return srv.stats.snapshot()["qps_interval"]
 
 
 def run_many_tenant_scenario(*, tenants: int, rows_per_request: int,
@@ -268,7 +275,9 @@ def run_many_tenant_scenario(*, tenants: int, rows_per_request: int,
                              async_dispatch: bool = False,
                              reload_every: int = 0,
                              target_queries: int = 16384,
-                             repeats: int = 3, mesh=None) -> List[dict]:
+                             repeats: int = 3, mesh=None,
+                             trace_path: Optional[str] = None
+                             ) -> List[dict]:
     """The many-tenant low-load regime: every tenant lightly loaded
     (one small request outstanding), where per-tenant dispatches can
     never fill a big bucket. Ungrouped always runs (the 'before');
@@ -289,9 +298,13 @@ def run_many_tenant_scenario(*, tenants: int, rows_per_request: int,
     ctx: Dict[bool, tuple] = {}
     answers: Dict[bool, dict] = {}
     for g in modes:
+        # span tracing rides the LAST mode's server (the grouped one
+        # when grouping is on): one trace file, the headline path
+        traced = bool(trace_path) and g == modes[-1]
         srv = FilterServer(ServeConfig.from_kwargs(
             buckets=BUCKETS, grouped=g, async_dispatch=async_dispatch,
-            mesh=mesh))
+            mesh=mesh, trace=traced,
+            trace_path=trace_path if traced else None))
         for name, (_, idx) in fleet.items():
             srv.admit(TenantSpec(name, index=idx))
         pools = {name: _query_pool(ds, max(k * 4, 64), seed=3)
@@ -349,8 +362,12 @@ def run_many_tenant_scenario(*, tenants: int, rows_per_request: int,
             "grouped_batches": int(snap["grouped_batches"]),
             "batch_occupancy": round(snap["batch_occupancy"], 3),
             "batch_p99_ms": round(snap["batch_p99_ms"], 3),
+            "queue_p99_ms": round(snap["queue_p99_ms"], 3),
             "plan_groups": int(snap["plan_groups"]),
         }
+        if snap["trace_events"]:
+            row["trace"] = srv.dump_trace(trace_path)
+            row["trace_events"] = int(snap["trace_events"])
         if reload_every:
             row["reload_every"] = reload_every
             row["reloads"] = int(snap["reloads"])
@@ -359,6 +376,41 @@ def run_many_tenant_scenario(*, tenants: int, rows_per_request: int,
             row["speedup_vs_ungrouped"] = round(med[True] / med[False], 1)
         rows.append(row)
     return rows
+
+def _verify_trace(path: str, async_dispatch: bool) -> None:
+    """Self-check an exported trace: well-formed Chrome events, and the
+    async double buffer's overlap present iff async dispatch was on —
+    some prepare-of-batch-*t+1* span must sit inside device-compute of
+    an earlier batch *t* (and none may under synchronous dispatch)."""
+    with open(path) as f:
+        events = json.load(f)["traceEvents"]
+    xs = [e for e in events if e.get("ph") == "X"]
+    assert xs, f"trace {path} has no complete events"
+    assert all(isinstance(e.get("ts"), (int, float))
+               and isinstance(e.get("dur"), (int, float))
+               and e["dur"] >= 0 for e in xs), "malformed ts/dur"
+    prepares = [e for e in xs if e["name"] == "prepare"
+                and "seq" in e.get("args", {})]
+    computes = [e for e in xs if e["name"] == "device_compute"]
+    assert prepares and computes, "trace missing pipeline spans"
+    overlapped = 0
+    for c in computes:
+        c0, c1 = c["ts"], c["ts"] + c["dur"]
+        if any(p["args"]["seq"] > c["args"]["seq"]
+               and p["ts"] < c1 and p["ts"] + p["dur"] > c0
+               for p in prepares):
+            overlapped += 1
+    if async_dispatch:
+        assert overlapped > 0, \
+            "async dispatch on, but no prepare overlapped device compute"
+    else:
+        assert overlapped == 0, \
+            f"sync dispatch, yet {overlapped} device windows overlapped " \
+            "a later prepare"
+    print(f"trace ok: {len(xs)} events, {len(computes)} device windows, "
+          f"{overlapped} overlapped by a later prepare "
+          f"(async={async_dispatch}) -> {path}")
+
 
 def bench_python_loop(tenants: Dict[str, tuple], n: int = 64) -> dict:
     """The anti-baseline: one eager ExistenceIndex.query per row."""
@@ -445,9 +497,10 @@ def main():
             tenants=_ARGS.tenants or 8,
             rows_per_request=_ARGS.rows_per_request,
             grouped=True, steps=min(_ARGS.steps, 10),
+            async_dispatch=_ARGS.async_dispatch,
             reload_every=_ARGS.reload_every,
             target_queries=1024 if _ARGS.reload_every else 384,
-            repeats=2, mesh=mesh)
+            repeats=2, mesh=mesh, trace_path=_ARGS.trace)
         print("smoke: many-tenant scenario "
               + ("(sharded arenas) " if mesh is not None else "")
               + "(grouped answers verified bit-equal to ungrouped"
@@ -484,13 +537,16 @@ def main():
                 rows_per_request=_ARGS.rows_per_request,
                 grouped=_ARGS.grouped, steps=_ARGS.steps,
                 async_dispatch=_ARGS.async_dispatch,
-                reload_every=_ARGS.reload_every, mesh=mesh)
+                reload_every=_ARGS.reload_every, mesh=mesh,
+                trace_path=_ARGS.trace)
             print(f"\nmany-tenant low-load scenario "
                   f"({_ARGS.tenants} tenants x "
                   f"{_ARGS.rows_per_request}-row requests"
                   + (", sharded arenas)" if mesh is not None else ")"))
             _print_many_tenant(many)
             rows += many
+    if _ARGS.trace and any("trace" in r for r in rows):
+        _verify_trace(_ARGS.trace, _ARGS.async_dispatch)
     env = _env_fields(mesh)
     for r in rows:              # stamp the hardware/placement context
         for k, v in env.items():

@@ -48,10 +48,11 @@ print(f"\nmemory:  LMBF {uncompressed.keras_equiv_mb:.2f}MB -> "
 #    lifecycle handle. Queries come back as futures; when the data
 #    drifts and the index is re-fitted, handle.reload() swaps the new
 #    fit in atomically — no drain, no dropped rows.
-from repro.serve_filter import (BucketConfig, FilterServer, ServeConfig,
-                                TenantSpec)
+from repro.serve_filter import (BucketConfig, FilterServer, MetricsConfig,
+                                ServeConfig, TenantSpec)
 
-srv = FilterServer(ServeConfig(buckets=BucketConfig((256, 1024))))
+srv = FilterServer(ServeConfig(buckets=BucketConfig((256, 1024)),
+                               metrics=MetricsConfig(trace=True)))
 handle = srv.admit(TenantSpec("quickstart", index=idx))
 assert srv.submit("quickstart", ds.records[:1000]).result().all()
 refit = existence.fit(ds, theta=1000, ns=2,
@@ -61,3 +62,26 @@ assert handle.query(ds.records[:1000]).all()
 print(f"served via FilterServer: state={handle.state.value} "
       f"epoch={handle.epoch} "
       f"(batched membership queries + zero-drain reload)")
+
+# 7. Observability. The server decomposes its positive rate by stage
+#    (the paper's §3.3 view: FPR = p_model + (1-p_model)·p_backup) PER
+#    TENANT, keeps a rolling window + EWMA of those rates, and scores
+#    drift against the baseline frozen shortly after admit/reload —
+#    handle.stats() is the per-tenant view, srv.stats_snapshot() the
+#    global one (throughput, queue/batch latency, compile + executor
+#    cache + arena-health gauges). Because the config set trace=True,
+#    the scheduler's hot path was span-traced: dump_trace() writes
+#    Chrome trace-event JSON — open it in Perfetto (https://ui.perfetto.dev)
+#    or chrome://tracing to see prepare/dispatch/device/retire spans.
+ts = handle.stats()
+print(f"tenant stats: model_pos_rate={ts['model_pos_rate']:.3f} "
+      f"fixup_hit_rate={ts['fixup_hit_rate']:.3f} "
+      f"positive_rate={ts['positive_rate']:.3f} "
+      f"drift_score={ts['drift_score']:.4f}")
+snap = srv.stats_snapshot()
+print(f"server stats: qps={snap['qps']:.0f} "
+      f"queue_p99_ms={snap['queue_p99_ms']:.3f} "
+      f"compile_count={snap['compile_count']:.0f} "
+      f"cache_hits={snap['executor_cache_hits']:.0f}")
+trace_path = srv.dump_trace("quickstart_trace.json")
+print(f"span trace: {len(srv.tracer)} events -> {trace_path}")

@@ -69,8 +69,9 @@ from repro.core import existence                      # noqa: E402
 from repro.data import tuples                         # noqa: E402
 from repro.serve_filter import (BucketConfig,         # noqa: E402
                                 DispatchConfig, FilterServer,
-                                GroupingConfig, PlacementConfig,
-                                ProbeConfig, ServeConfig, TenantSpec)
+                                GroupingConfig, MetricsConfig,
+                                PlacementConfig, ProbeConfig,
+                                ServeConfig, TenantSpec)
 
 
 def main(args=_ARGS):
@@ -103,7 +104,8 @@ def main(args=_ARGS):
         buckets=BucketConfig((64, 256, 1024)),
         placement=PlacementConfig(mesh=mesh),
         dispatch=DispatchConfig(async_dispatch=not args.sync),
-        probe=ProbeConfig(use_kernel=args.use_kernel))
+        probe=ProbeConfig(use_kernel=args.use_kernel),
+        metrics=MetricsConfig(trace=True))
     srv = FilterServer(config)
     flights = srv.admit(TenantSpec("flights", index=idx_a))
     entry = flights.entry
@@ -152,10 +154,29 @@ def main(args=_ARGS):
     snap = srv.stats_snapshot()
     for k in ("queries", "batches", "qps", "batch_occupancy",
               "model_pos_rate", "fixup_hit_rate", "positive_rate",
-              "batch_p50_ms", "batch_p99_ms", "overlapped_batches",
-              "registered_filters", "registry_mb", "compiled_programs",
-              "reloads", "reload_p50_ms", "lifecycle_serving"):
+              "batch_p50_ms", "batch_p99_ms", "queue_p99_ms",
+              "overlapped_batches", "registered_filters", "registry_mb",
+              "compiled_programs", "compile_count", "compile_ms_total",
+              "executor_cache_hits", "reloads", "reload_p50_ms",
+              "lifecycle_serving", "max_drift_score", "trace_events"):
         print(f"  {k:>20} = {snap[k]:.4g}")
+
+    # per-tenant observability: the §3.3 stage decomposition (model
+    # positives vs fixup-filter rescues) as rolling rates plus an EWMA
+    # drift score vs the baseline frozen after admit — note 'flights'
+    # was hot-reloaded mid-stream, which RESET its baseline, so its
+    # drift is measured against the new epoch's early traffic
+    for t in ("flights", "vehicles"):
+        ts = srv.tenant_snapshot(t)
+        print(f"  tenant {t!r}: model_pos={ts['model_pos_rate']:.3f} "
+              f"fixup_hit={ts['fixup_hit_rate']:.3f} "
+              f"positive={ts['positive_rate']:.3f} "
+              f"drift={ts['drift_score']:.4f} "
+              f"(baseline={'set' if ts['has_baseline'] else 'warming'})")
+    print(f"  span trace: {len(srv.tracer)} events buffered — "
+          f"srv.dump_trace(path) exports Chrome trace-event JSON "
+          f"(open in Perfetto); with async dispatch the prepare spans "
+          f"overlap the previous batch's device track")
 
     if args.tenants:
         fleet_demo(args.tenants, idx_a, idx_b, ds_a, ds_b,

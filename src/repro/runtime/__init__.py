@@ -1,3 +1,4 @@
 from repro.runtime.fault import (Heartbeat, PreemptionGuard, StepTimer,
                                  Watchdog)
-from repro.runtime.metrics import LatencyWindow, MetricsLogger
+from repro.runtime.metrics import Histogram, LatencyWindow, MetricsLogger
+from repro.runtime.trace import NULL_TRACER, Span, Tracer

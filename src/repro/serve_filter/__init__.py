@@ -74,9 +74,14 @@ Module map
     drain-the-world side effects.
 
 ``stats``
-    :class:`ServeStats` — QPS, batch occupancy, p50/p99 latency,
+    :class:`ServeStats` — QPS (cumulative + since-last-snapshot),
+    batch occupancy, p50/p99 batch latency, queue-time histogram,
     per-stage positive counters, lifecycle-transition counters, reload
-    latency, feeding ``runtime.MetricsLogger``'s JSONL stream.
+    latency, feeding ``runtime.MetricsLogger``'s JSONL stream. Plus
+    per-tenant :class:`TenantStats`: rolling-window + EWMA stage rates
+    (model / fixup / final) and a drift score against the tenant's
+    admit-time baseline — ``server.tenant_snapshot(id)`` or
+    ``handle.stats()``.
 
 ``server``
     :class:`FilterServer` — the facade: ``FilterServer(ServeConfig())``,
@@ -84,6 +89,13 @@ Module map
     ``handle.reload(new_index | checkpoint=...)``), ``submit ->
     QueryFuture``. The old ``register``/``load``/``query`` and the
     kwarg constructor survive as thin ``DeprecationWarning`` wrappers.
+    Observability rides on the same facade: ``stats_snapshot()`` adds
+    compile / executor-cache / arena-health gauges, and with
+    ``MetricsConfig(trace=True)`` the scheduler's hot path is
+    span-traced — ``dump_trace(path)`` (or ``close()`` with a
+    ``trace_path``) exports Chrome trace-event JSON loadable in
+    Perfetto, where async double-buffering shows up as prepare spans
+    overlapping the previous batch's device-compute track.
 
 Entry points
 ============
@@ -148,4 +160,4 @@ from repro.serve_filter.scheduler import (DEFAULT_BUCKETS,
                                           QueryRequest, QueryScheduler,
                                           bucket_for, wait_all)
 from repro.serve_filter.server import FilterServer, TenantHandle
-from repro.serve_filter.stats import ServeStats
+from repro.serve_filter.stats import ServeStats, TenantStats

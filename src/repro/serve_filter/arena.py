@@ -85,6 +85,8 @@ class PlanGroupArena:
         self.min_capacity = max(1, int(min_capacity))
         self.capacity = 0
         self.version = 0                    # bumped on every mutation
+        self.compactions = 0                # lifetime _repack count
+        self.growths = 0                    # slot-axis + bitset growths
         self._slots: Dict[str, int] = {}    # tenant -> slot id
         self._free: List[int] = []
         # combined-embedding layout: [(col index, rows, e)] for the
@@ -177,6 +179,39 @@ class PlanGroupArena:
     def live_words(self) -> int:
         return int(self._word_len[list(self._slots.values())].sum()) \
             if self._slots else 0
+
+    # ------------------------------------------------------------- health
+    @property
+    def holes(self) -> int:
+        """Freed slot ids awaiting reuse (churn debt on the slot axis)."""
+        return len(self._free)
+
+    @property
+    def dead_words(self) -> int:
+        """Allocated-but-unowned bitset words below the high-water mark
+        (churn debt on the bitset arena; what drives compaction)."""
+        return self._bits_used - self.live_words
+
+    @property
+    def slot_occupancy(self) -> float:
+        """Live tenants / slot capacity in [0, 1] (0.0 when empty)."""
+        return len(self._slots) / self.capacity if self.capacity else 0.0
+
+    def health(self) -> Dict[str, float]:
+        """Gauge snapshot for the stats surface: occupancy, churn debt,
+        lifetime compaction/growth counts, and footprints."""
+        return {
+            "tenants": float(len(self._slots)),
+            "capacity": float(self.capacity),
+            "slot_occupancy": self.slot_occupancy,
+            "holes": float(self.holes),
+            "dead_words": float(self.dead_words),
+            "live_words": float(self.live_words),
+            "compactions": float(self.compactions),
+            "growths": float(self.growths),
+            "host_mb": self.nbytes / 1e6,
+            "device_mb": self.device_nbytes / 1e6,
+        }
 
     # ----------------------------------------------------------- mutation
     def _emb_starts(self, cap: int) -> List[int]:
@@ -363,8 +398,8 @@ class PlanGroupArena:
                 self._tile_cache.pop(next(iter(self._tile_cache)))
             self._tile_cache[sig] = hit
         tiles, idx_dev = hit
-        out = self.executor.fn(params, tiles, bits, tau, m_bits, base,
-                               idx_dev, raw)
+        out = self.executor.call(params, tiles, bits, tau, m_bits, base,
+                                 idx_dev, raw)
         if pad:
             out = tuple(o[:n] for o in out)
         return out
@@ -406,6 +441,7 @@ class PlanGroupArena:
             # unreachable via add() (free slots pop first); guard anyway
             return self._free.pop()
         new_cap = max(self.min_capacity, 2 * self.capacity)
+        self.growths += 1
         self._resize_slots(new_cap)
         slot = len(self._slots)     # first never-used slot
         self._free.extend(range(self.capacity - 1, slot, -1))
@@ -463,6 +499,7 @@ class PlanGroupArena:
             grown = np.zeros(alloc, np.uint32)
             grown[:self._bits.size] = self._bits
             self._bits = grown
+            self.growths += 1
         self._bits_used = need
         return base
 
@@ -470,6 +507,7 @@ class PlanGroupArena:
         """Rebuild packed: live tenants keep their relative slot order,
         bitsets land back to back, stacked arrays shrink to the growth
         curve's smallest fit."""
+        self.compactions += 1
         live = sorted(self._slots.items(), key=lambda kv: kv[1])
         old_params, old_bits = self._params, self._bits
         old_tau, old_mb = self._tau, self._m_bits

@@ -162,14 +162,26 @@ class GroupingConfig:
 
 @dataclasses.dataclass(frozen=True)
 class MetricsConfig:
-    """JSONL metrics sink (``runtime.MetricsLogger``); both fields off
-    means no logger is constructed."""
+    """JSONL metrics sink (``runtime.MetricsLogger``) and span tracing
+    (``runtime.trace.Tracer``). ``path``/``echo`` both off means no
+    logger is constructed; ``trace`` (or a ``trace_path``) attaches a
+    tracer to the scheduler's hot path, bounded to ``trace_events``
+    retained spans. ``server.dump_trace()`` exports Chrome trace-event
+    JSON to ``trace_path`` (or an explicit path) — ``server.close()``
+    dumps automatically when ``trace_path`` is set."""
     path: Optional[str] = None
     echo: bool = False
+    trace: bool = False
+    trace_path: Optional[str] = None
+    trace_events: int = 65536
 
     @property
     def enabled(self) -> bool:
         return bool(self.path or self.echo)
+
+    @property
+    def trace_enabled(self) -> bool:
+        return bool(self.trace or self.trace_path)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -196,7 +208,9 @@ class ServeConfig:
                     grouped: bool = False,
                     tile_rows: int = DEFAULT_TILE_ROWS,
                     metrics_path: Optional[str] = None,
-                    metrics_echo: bool = False) -> "ServeConfig":
+                    metrics_echo: bool = False,
+                    trace: bool = False,
+                    trace_path: Optional[str] = None) -> "ServeConfig":
         """Bridge from the legacy ``FilterServer`` kwarg surface (the
         deprecated constructor routes through here)."""
         return cls(
@@ -210,7 +224,9 @@ class ServeConfig:
             probe=ProbeConfig(use_kernel=bool(use_kernel),
                               interpret=interpret, block_n=int(block_n)),
             metrics=MetricsConfig(path=metrics_path,
-                                  echo=bool(metrics_echo)))
+                                  echo=bool(metrics_echo),
+                                  trace=bool(trace),
+                                  trace_path=trace_path))
 
 
 @dataclasses.dataclass(frozen=True, eq=False)

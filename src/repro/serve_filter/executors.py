@@ -69,6 +69,7 @@ from __future__ import annotations
 
 import dataclasses
 import inspect
+import time
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
@@ -88,6 +89,65 @@ from repro.sharding.pipeline import shard_map
 # sharding/pipeline.py.
 _CHECK_KW = next((kw for kw in ("check_rep", "check_vma")
                   if kw in inspect.signature(shard_map).parameters), None)
+
+
+# ================================================================ telemetry
+# Process-global (like the executor caches themselves): compile events
+# per (plan/group-key label, bucket) and cache hit/miss counters. A
+# compile is detected as a jit-cache growth across one dispatch — jit
+# traces + compiles synchronously inside the first call per shape, so
+# that call's wall time ~ the compile cost (the answer itself is
+# returned as an unrealized async array).
+
+_COMPILES: Dict[Tuple[str, int], list] = {}   # (label, bucket) -> [n, sec]
+_CACHE_HITS = 0
+_CACHE_MISSES = 0
+
+
+def _record_compile(label: str, bucket: int, seconds: float) -> None:
+    ev = _COMPILES.setdefault((label, int(bucket)), [0, 0.0])
+    ev[0] += 1
+    ev[1] += seconds
+
+
+def _timed_call(ex, label: str, bucket: int, *operands):
+    """Run ``ex.fn(*operands)``, charging the wall time to compile
+    telemetry when the call grew the jit cache. Returns
+    ``(outputs, compiled)``."""
+    before = ex.program_count()
+    t0 = time.perf_counter()
+    out = ex.fn(*operands)
+    dt = time.perf_counter() - t0
+    compiled = ex.program_count() > before
+    if compiled:
+        _record_compile(label, bucket, dt)
+    return out, compiled
+
+
+def compile_stats() -> Dict[Tuple[str, int], Tuple[int, float]]:
+    """Snapshot: (plan/group label, bucket) -> (compiles, total secs)."""
+    return {k: (v[0], v[1]) for k, v in _COMPILES.items()}
+
+
+def compile_count() -> int:
+    return sum(v[0] for v in _COMPILES.values())
+
+
+def compile_time_total() -> float:
+    return sum(v[1] for v in _COMPILES.values())
+
+
+def cache_stats() -> Tuple[int, int]:
+    """(executor-cache hits, misses) across both executor caches."""
+    return _CACHE_HITS, _CACHE_MISSES
+
+
+def reset_telemetry() -> None:
+    """Zero the compile/cache counters (tests, bench windows)."""
+    global _CACHE_HITS, _CACHE_MISSES
+    _COMPILES.clear()
+    _CACHE_HITS = 0
+    _CACHE_MISSES = 0
 
 
 @dataclasses.dataclass
@@ -113,7 +173,10 @@ class Executor:
         raise NotImplementedError
 
     def __call__(self, placed: PlacedFilter, tau, raw_ids):
-        return self.fn(placed.params, placed.bits, tau, raw_ids)
+        out, _ = _timed_call(self, self.plan.describe(),
+                             raw_ids.shape[0], placed.params,
+                             placed.bits, tau, raw_ids)
+        return out
 
     def program_count(self) -> int:
         """Live jit-cache entries (plan-shape x bucket XLA programs)."""
@@ -543,6 +606,14 @@ class GroupedExecutor:
         self.key = key
         self.fn, self.gather_tiles = _grouped_program(key, self.mesh)
 
+    def call(self, *operands):
+        """Dispatch the megabatch program through compile telemetry
+        (``operands`` = the :func:`_grouped_program` signature; the last
+        one is ``raw_ids``, whose leading dim is the bucket)."""
+        out, _ = _timed_call(self, self.key.describe(),
+                             operands[-1].shape[0], *operands)
+        return out
+
     def program_count(self) -> int:
         """Live jit-cache entries ((arena-shape x bucket) programs)."""
         try:
@@ -569,9 +640,11 @@ def _key(plan: QueryPlan, mesh: Optional[Mesh]):
 
 def executor_for(plan: QueryPlan, mesh: Optional[Mesh] = None) -> Executor:
     """Build-or-fetch the executor for a plan (cached, no ref taken)."""
+    global _CACHE_HITS, _CACHE_MISSES
     key = _key(plan, mesh)
     ex = _EXECUTORS.get(key)
     if ex is None:
+        _CACHE_MISSES += 1
         if plan.placement.sharded:
             if mesh is None:
                 raise ValueError("sharded plan needs a mesh")
@@ -579,6 +652,8 @@ def executor_for(plan: QueryPlan, mesh: Optional[Mesh] = None) -> Executor:
         else:
             ex = LocalExecutor(plan)
         _EXECUTORS[key] = ex
+    else:
+        _CACHE_HITS += 1
     return ex
 
 
@@ -632,10 +707,14 @@ def grouped_executor_for(key: GroupKey,
                          mesh: Optional[Mesh] = None) -> GroupedExecutor:
     """Build-or-fetch the megabatch executor for a plan group (cached,
     no ref taken)."""
+    global _CACHE_HITS, _CACHE_MISSES
     k = _gkey(key, mesh)
     ex = _GROUPED.get(k)
     if ex is None:
+        _CACHE_MISSES += 1
         ex = _GROUPED[k] = GroupedExecutor(key, mesh)
+    else:
+        _CACHE_HITS += 1
     return ex
 
 

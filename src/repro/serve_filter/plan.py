@@ -109,6 +109,15 @@ class QueryPlan:
     def n_cols(self) -> int:
         return self.cfg.plan.n_columns
 
+    def describe(self) -> str:
+        """Short human label for telemetry (compile events, traces):
+        probe flavor, plan width, fixup geometry, placement."""
+        where = (f"sharded[{self.placement.axis}x{self.placement.n_shards}]"
+                 if self.placement.sharded else "local")
+        return (f"{self.probe}/{self.n_cols}c/"
+                f"m{self.fixup_params.m_bits}k{self.fixup_params.n_hashes}/"
+                f"{where}")
+
     # ---- sharded-layout geometry (padding so slices divide evenly) ----
     def words_per_shard(self) -> int:
         """Fixup-bitset words held by each shard (global words padded up
@@ -159,6 +168,13 @@ class GroupKey:
     def __post_init__(self):
         if self.tile_rows < 1:
             raise ValueError("tile_rows must be >= 1")
+
+    def describe(self) -> str:
+        """Short human label for telemetry (compile events, traces)."""
+        where = (f"sharded[{self.placement.axis}x{self.placement.n_shards}]"
+                 if self.placement.sharded else "local")
+        return (f"group:{self.probe}/{self.cfg.plan.n_columns}c/"
+                f"k{self.n_hashes}/t{self.tile_rows}/{where}")
 
 
 def group_key(plan: QueryPlan,

@@ -56,6 +56,7 @@ from typing import Callable, Dict, List, Optional
 import jax
 
 from repro.core import existence, memory
+from repro.runtime.trace import NULL_TRACER, Tracer
 from repro.serve_filter import executors as executors_lib
 from repro.serve_filter.arena import PlanGroupArena
 from repro.serve_filter.config import (GroupingConfig, LIFECYCLE_TRANSITIONS,
@@ -150,12 +151,14 @@ class FilterRegistry:
                  probe: ProbeConfig = ProbeConfig(),
                  placement: PlacementConfig = PlacementConfig(),
                  grouping: GroupingConfig = GroupingConfig(),
-                 on_transition: Optional[TransitionHook] = None):
+                 on_transition: Optional[TransitionHook] = None,
+                 tracer: Optional[Tracer] = None):
         self.budget_mb = budget_mb
         self.probe = probe
         self.placement = placement
         self.grouping = grouping
         self.on_transition = on_transition
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self._entries: Dict[str, FilterEntry] = {}
         self._groups: Dict[GroupKey, PlanGroupArena] = {}
         self._clock = itertools.count(1)
@@ -262,13 +265,17 @@ class FilterRegistry:
                              TenantState.HYDRATING)
             prev.state = TenantState.HYDRATING
         try:
-            index = spec.index
-            if index is None:
-                index = existence.load_index(
-                    os.path.join(spec.checkpoint, tenant), step=spec.step)
-            entry = self._install(tenant, index, prev,
-                                  pinned=spec.pinned,
-                                  groupable=spec.groupable)
+            with self.tracer.span(
+                    "reload" if prev is not None else "admit",
+                    cat="lifecycle", tenant=tenant):
+                index = spec.index
+                if index is None:
+                    index = existence.load_index(
+                        os.path.join(spec.checkpoint, tenant),
+                        step=spec.step)
+                entry = self._install(tenant, index, prev,
+                                      pinned=spec.pinned,
+                                      groupable=spec.groupable)
         except BaseException:
             # hydration failed: a transient error (bad checkpoint
             # path, device OOM) must not brick a live tenant. Three

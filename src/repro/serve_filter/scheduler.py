@@ -47,6 +47,15 @@ beyond the largest bucket stay queued for the next step (bounded
 per-dispatch latency). Occupancy (valid/padded) is tracked per batch by
 ``ServeStats`` — the classic throughput-vs-padding trade.
 
+Observability: the scheduler takes an optional ``runtime.trace.Tracer``
+and emits one span per pipeline stage — ``prepare`` / ``dispatch`` /
+``device_block`` / ``scatter_retire`` on the host thread, plus a
+``device_compute`` span on a synthetic ``device`` track covering
+dispatch -> materialization. In an exported Chrome trace the async
+double buffer is therefore VISIBLE: prepare-of-batch-*t+1* sits under
+device-compute of batch *t*. Each request's queue time (submit ->
+first dispatch) and end-to-end latency land in ``ServeStats``.
+
 Completion surface: callers no longer poll ``QueryRequest.done`` — a
 submission is observed through a :class:`QueryFuture` (``result``,
 ``exception``, bulk :func:`wait_all`). The scheduler resolves each
@@ -69,6 +78,8 @@ from typing import Deque, Dict, Iterable, List, Optional, Sequence, Set, \
 
 import numpy as np
 
+from repro.runtime.trace import NULL_TRACER, Tracer
+from repro.serve_filter import executors
 from repro.serve_filter.config import DEFAULT_BUCKETS, TenantState
 from repro.serve_filter.registry import FilterEntry, FilterRegistry
 from repro.serve_filter.stats import ServeStats
@@ -93,6 +104,7 @@ class QueryRequest:
     tenant: str
     ids: np.ndarray                       # (n, n_cols) int32 raw ids
     t_submit: float
+    t_first_dispatch: Optional[float] = None  # queue time endpoint
     answers: Optional[np.ndarray] = None  # (n,) bool when done
     model_yes: Optional[np.ndarray] = None
     backup_yes: Optional[np.ndarray] = None
@@ -252,6 +264,7 @@ class _Prepared:
     slots: Optional[np.ndarray] = None          # (bucket,) arena slot ids
     group: Optional[object] = None              # PlanGroupArena if grouped
     valid_idx: Optional[np.ndarray] = None      # set iff alignment gaps
+    seq: int = 0                                # batch sequence (tracing)
 
 
 @dataclasses.dataclass(slots=True)
@@ -268,12 +281,15 @@ class QueryScheduler:
                  stats: Optional[ServeStats] = None,
                  clock=time.perf_counter, *,
                  async_dispatch: bool = False,
-                 max_inflight: int = 2):
+                 max_inflight: int = 2,
+                 tracer: Optional[Tracer] = None):
         self.registry = registry
         self.buckets = tuple(sorted(int(b) for b in buckets))
         self.stats = stats or ServeStats()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self._clock = clock
         self._rid = itertools.count()
+        self._seq = itertools.count()       # batch sequence, for traces
         self.async_dispatch = bool(async_dispatch)
         # batches allowed past dispatch before the oldest must retire;
         # 1 = synchronous, 2 = classic double buffer
@@ -384,7 +400,11 @@ class QueryScheduler:
         flight. With async dispatch the final in-flight batches drain
         one per step once the queues empty.
         """
-        prep = self._prepare()
+        with self.tracer.span("prepare") as sp:
+            prep = self._prepare()
+            if sp and prep is not None:
+                sp.args.update(seq=prep.seq, tenant=prep.tenant,
+                               bucket=prep.bucket, rows=prep.n_total)
         if prep is None:
             if self._inflight:
                 self._retire(self._inflight.popleft())
@@ -544,19 +564,33 @@ class QueryScheduler:
         return _Prepared(tenant=tenant, entry=entry, take=take,
                          span_entries=span_entries, span_pos=span_pos,
                          batch=batch, bucket=bucket, n_total=n_total,
-                         slots=slots, group=group, valid_idx=valid_idx)
+                         slots=slots, group=group, valid_idx=valid_idx,
+                         seq=next(self._seq))
 
     def _dispatch(self, prep: _Prepared) -> None:
         """Device half: launch the fused program (async — returns
-        un-materialized device arrays) and park it in flight."""
-        if prep.group is not None:
-            outputs = prep.group.run(prep.batch, prep.slots)
-        else:
-            outputs = prep.entry.run(prep.batch)
+        un-materialized device arrays) and park it in flight. Records
+        each request's queue time (submit -> FIRST dispatch) the first
+        time any of its rows goes out."""
+        with self.tracer.span("dispatch", seq=prep.seq,
+                              bucket=prep.bucket) as sp:
+            compiles_before = executors.compile_count()
+            if prep.group is not None:
+                outputs = prep.group.run(prep.batch, prep.slots)
+            else:
+                outputs = prep.entry.run(prep.batch)
+            if sp and executors.compile_count() > compiles_before:
+                sp.args["compiled"] = True
+        t = self._clock()
+        record_queue_time = self.stats.record_queue_time
+        for req, _, _ in prep.take:
+            if req.t_first_dispatch is None:
+                req.t_first_dispatch = t
+                record_queue_time(t - req.t_submit)
         for e, (_, _, n) in zip(prep.span_entries, prep.take):
             e.n_queries += n
         self._inflight.append(_InFlight(prep=prep, outputs=outputs,
-                                        t_dispatch=self._clock()))
+                                        t_dispatch=t))
 
     def _requeue(self, prep: _Prepared) -> None:
         """Restore a prepared-but-never-dispatched batch's spans to the
@@ -576,10 +610,12 @@ class QueryScheduler:
         """Block on a dispatched batch, scatter answers back, complete
         fully-answered requests, record stats."""
         prep = inf.prep
+        tracer = self.tracer
         try:
-            full_ans = np.asarray(inf.outputs[0])
-            full_model = np.asarray(inf.outputs[1])
-            full_backup = np.asarray(inf.outputs[2])
+            with tracer.span("device_block", seq=prep.seq):
+                full_ans = np.asarray(inf.outputs[0])
+                full_model = np.asarray(inf.outputs[1])
+                full_backup = np.asarray(inf.outputs[2])
         except Exception as e:
             # the async computation itself failed: the rows are gone
             # from the queue, so fail their requests rather than hang
@@ -588,46 +624,69 @@ class QueryScheduler:
             for req, _, _ in prep.take:
                 req._complete(t, error=f"dispatch failed: {e!r}")
             raise
-        latency = self._clock() - inf.t_dispatch
-        if prep.valid_idx is not None:     # tile-alignment gaps present
-            ans = full_ans[prep.valid_idx]
-            model = full_model[prep.valid_idx]
-            backup = full_backup[prep.valid_idx]
-        else:
-            ans = full_ans[:prep.n_total]
-            model = full_model[:prep.n_total]
-            backup = full_backup[:prep.n_total]
-
-        clock = self._clock
-        record_request = self.stats.record_request
-        t_done = clock()        # one retirement instant for the batch
-        for p, (req, off, n) in zip(prep.span_pos, prep.take):
-            if off == 0 and n == req.ids.shape[0]:
-                # whole request answered by this span (the common case
-                # in the many-small-request regime): hand out zero-copy
-                # views instead of allocating + copying three arrays
-                req.answers = full_ans[p:p + n]
-                req.model_yes = full_model[p:p + n]
-                req.backup_yes = full_backup[p:p + n]
+        t_block_end = self._clock()
+        latency = t_block_end - inf.t_dispatch
+        # the device's compute window as the host observed it: dispatch
+        # to materialization. On the exported trace this span lives on
+        # the synthetic "device" track, so overlap with the NEXT
+        # batch's host-side prepare span is directly visible
+        tracer.add("device_compute", inf.t_dispatch, t_block_end,
+                   track="device", cat="device",
+                   args={"seq": prep.seq, "bucket": prep.bucket})
+        with tracer.span("scatter_retire", seq=prep.seq):
+            if prep.valid_idx is not None:  # tile-alignment gaps present
+                ans = full_ans[prep.valid_idx]
+                model = full_model[prep.valid_idx]
+                backup = full_backup[prep.valid_idx]
             else:
-                if req.answers is None:
-                    m = req.ids.shape[0]
-                    req.answers = np.zeros(m, bool)
-                    req.model_yes = np.zeros(m, bool)
-                    req.backup_yes = np.zeros(m, bool)
-                req.answers[off:off + n] = full_ans[p:p + n]
-                req.model_yes[off:off + n] = full_model[p:p + n]
-                req.backup_yes[off:off + n] = full_backup[p:p + n]
-            if off + n >= req.ids.shape[0]:   # last span: request done
-                req._complete(t_done)         # resolves the future too
-                record_request(t_done - req.t_submit)
-        per_tenant: Dict[str, int] = {}
-        for e, (_, _, n) in zip(prep.span_entries, prep.take):
-            per_tenant[e.tenant] = per_tenant.get(e.tenant, 0) + n
-        self.stats.record_batch(prep.tenant, prep.n_total, prep.bucket,
-                                latency, ans, model, backup,
-                                inflight=len(self._inflight),
-                                per_tenant=per_tenant)
+                ans = full_ans[:prep.n_total]
+                model = full_model[:prep.n_total]
+                backup = full_backup[:prep.n_total]
+
+            clock = self._clock
+            record_request = self.stats.record_request
+            t_done = clock()    # one retirement instant for the batch
+            for p, (req, off, n) in zip(prep.span_pos, prep.take):
+                if off == 0 and n == req.ids.shape[0]:
+                    # whole request answered by this span (the common
+                    # case in the many-small-request regime): hand out
+                    # zero-copy views instead of allocating + copying
+                    # three arrays
+                    req.answers = full_ans[p:p + n]
+                    req.model_yes = full_model[p:p + n]
+                    req.backup_yes = full_backup[p:p + n]
+                else:
+                    if req.answers is None:
+                        m = req.ids.shape[0]
+                        req.answers = np.zeros(m, bool)
+                        req.model_yes = np.zeros(m, bool)
+                        req.backup_yes = np.zeros(m, bool)
+                    req.answers[off:off + n] = full_ans[p:p + n]
+                    req.model_yes[off:off + n] = full_model[p:p + n]
+                    req.backup_yes[off:off + n] = full_backup[p:p + n]
+                if off + n >= req.ids.shape[0]:  # last span: req done
+                    req._complete(t_done)     # resolves the future too
+                    record_request(t_done - req.t_submit)
+            per_tenant: Dict[str, int] = {}
+            # per-tenant stage-positive sums (spans are contiguous row
+            # ranges of the FULL batch, so each slices the full arrays)
+            stages: Dict[str, List[int]] = {}
+            for e, p, (_, _, n) in zip(prep.span_entries, prep.span_pos,
+                                       prep.take):
+                per_tenant[e.tenant] = per_tenant.get(e.tenant, 0) + n
+                acc = stages.get(e.tenant)
+                if acc is None:
+                    acc = stages[e.tenant] = [0, 0, 0, 0]
+                acc[0] += n
+                acc[1] += int(full_model[p:p + n].sum())
+                acc[2] += int(full_backup[p:p + n].sum())
+                acc[3] += int(full_ans[p:p + n].sum())
+            self.stats.record_batch(
+                prep.tenant, prep.n_total, prep.bucket, latency, ans,
+                model, backup, inflight=len(self._inflight),
+                per_tenant=per_tenant,
+                per_tenant_stages={k: tuple(v)
+                                   for k, v in stages.items()})
 
     def _next_tenant(self) -> Optional[str]:
         while self._order:

@@ -39,6 +39,7 @@ import numpy as np
 
 from repro.core import existence
 from repro.runtime.metrics import MetricsLogger
+from repro.runtime.trace import Tracer
 from repro.serve_filter import executors as executors_lib
 from repro.serve_filter.config import ServeConfig, TenantSpec, TenantState
 from repro.serve_filter.registry import FilterEntry, FilterRegistry
@@ -95,6 +96,12 @@ class TenantHandle:
     # ----------------------------------------------------------- queries
     def submit(self, ids: np.ndarray) -> QueryFuture:
         return self._server.submit(self.tenant, ids)
+
+    def stats(self) -> Dict[str, float]:
+        """This tenant's observability snapshot: cumulative / rolling /
+        EWMA stage rates and the drift score vs its admit-time baseline
+        (see :meth:`FilterServer.tenant_snapshot`)."""
+        return self._server.tenant_snapshot(self.tenant)
 
     def query(self, ids: np.ndarray) -> np.ndarray:
         """Synchronous convenience, scoped to this request: submit one
@@ -181,19 +188,26 @@ class FilterServer:
             config = ServeConfig()
         self.config = config
         self.stats = ServeStats()
+        # one tracer for the whole server; disabled it is a shared
+        # no-op, so the scheduler's instrumentation costs one method
+        # call per stage
+        self.tracer = Tracer(maxlen=config.metrics.trace_events,
+                             enabled=config.metrics.trace_enabled)
         self.registry = FilterRegistry(
             config.budget_mb, probe=config.probe,
             placement=config.placement, grouping=config.grouping,
-            on_transition=self._on_transition)
+            on_transition=self._on_transition, tracer=self.tracer)
         self.scheduler = QueryScheduler(
             self.registry, buckets=config.buckets.sizes, stats=self.stats,
             async_dispatch=config.dispatch.async_dispatch,
-            max_inflight=config.dispatch.max_inflight)
+            max_inflight=config.dispatch.max_inflight,
+            tracer=self.tracer)
         self.metrics = (MetricsLogger(config.metrics.path,
                                       echo=config.metrics.echo)
                         if config.metrics.enabled else None)
         self._handles: Dict[str, TenantHandle] = {}
         self._log_step = 0
+        self._closed = False
 
     def _on_transition(self, tenant: str, frm, to: TenantState) -> None:
         """Registry lifecycle hook: count the transition and, at
@@ -220,6 +234,9 @@ class FilterServer:
         self.registry.admit(spec)
         if live:
             self.stats.record_reload(time.perf_counter() - t0)
+            # drift is measured against the freshly-installed model's
+            # own early behavior, not the replaced one's
+            self.stats.reset_tenant_baseline(spec.tenant)
         handle = self._handles.get(spec.tenant)
         if handle is None:
             handle = TenantHandle(self, spec)
@@ -271,6 +288,15 @@ class FilterServer:
         return n
 
     # ------------------------------------------------------------ readout
+    def tenant_snapshot(self, tenant: str) -> Dict[str, float]:
+        """One tenant's per-stage observability: cumulative
+        ``model_pos_rate`` / ``fixup_hit_rate`` / ``positive_rate``
+        (these sum consistently with the global rates), rolling-window
+        and EWMA variants, and ``drift_score`` — the largest EWMA gap
+        vs the baseline frozen shortly after admit/reload. The signal a
+        drift-driven refit loop polls."""
+        return self.stats.tenant_snapshot(tenant)
+
     def stats_snapshot(self) -> Dict[str, float]:
         snap = self.stats.snapshot()
         snap["registered_filters"] = float(len(self.registry))
@@ -278,6 +304,26 @@ class FilterServer:
         snap["compiled_programs"] = float(
             executors_lib.compiled_program_count())
         snap["plan_groups"] = float(len(self.registry.groups))
+        # compile/cache telemetry (process-global, like the executor
+        # caches themselves: servers sharing plans share programs)
+        hits, misses = executors_lib.cache_stats()
+        snap["compile_count"] = float(executors_lib.compile_count())
+        snap["compile_ms_total"] = \
+            executors_lib.compile_time_total() * 1e3
+        snap["executor_cache_hits"] = float(hits)
+        snap["executor_cache_misses"] = float(misses)
+        # arena health, aggregated over this server's plan groups
+        arenas = list(self.registry.groups.values())
+        live = sum(len(a) for a in arenas)
+        cap = sum(a.capacity for a in arenas)
+        snap["arena_holes"] = float(sum(a.holes for a in arenas))
+        snap["arena_dead_words"] = float(sum(a.dead_words
+                                             for a in arenas))
+        snap["arena_slot_occupancy"] = live / cap if cap else 0.0
+        snap["arena_compactions"] = float(sum(a.compactions
+                                              for a in arenas))
+        snap["arena_growths"] = float(sum(a.growths for a in arenas))
+        snap["trace_events"] = float(len(self.tracer))
         # actual PER-SHARD device footprint of the arenas (padding +
         # growth headroom included) — budget_mb counts nominal
         # per-filter sizes, so operators watch this for the true
@@ -291,6 +337,39 @@ class FilterServer:
         snap["arena_host_mb"] = sum(a.nbytes for a in
                                     self.registry.groups.values()) / 2 ** 20
         return snap
+
+    def dump_trace(self, path: Optional[str] = None) -> str:
+        """Export the span buffer as Chrome trace-event JSON (open it
+        at https://ui.perfetto.dev). ``path`` defaults to the config's
+        ``metrics.trace_path``; returns the written path."""
+        path = path or self.config.metrics.trace_path
+        if not path:
+            raise ValueError(
+                "no trace path: pass one or set "
+                "MetricsConfig(trace_path=...)")
+        return self.tracer.to_chrome_trace(path)
+
+    # ----------------------------------------------------------- shutdown
+    def close(self) -> None:
+        """Release observability resources: close the JSONL metrics
+        logger (the file handle used to leak) and, when the config
+        names a ``trace_path``, dump the trace there. Idempotent; the
+        server remains usable for queries afterwards (a new logger is
+        NOT reopened — close last)."""
+        if self._closed:
+            return
+        self._closed = True
+        if self.config.metrics.trace_path and len(self.tracer):
+            self.tracer.to_chrome_trace(self.config.metrics.trace_path)
+        if self.metrics is not None:
+            self.metrics.close()
+
+    def __enter__(self) -> "FilterServer":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
 
     # ------------------------------------------------- deprecated surface
     def register(self, tenant: str, index: existence.ExistenceIndex

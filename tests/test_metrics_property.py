@@ -1,0 +1,72 @@
+"""Hypothesis property tests for Histogram / LatencyWindow percentiles.
+
+Kept separate from test_metrics_histogram.py so a missing
+``hypothesis`` install skips ONLY these tests instead of erroring the
+whole module at collection time (same split as test_bloom_property.py).
+"""
+import math
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.runtime.metrics import Histogram, LatencyWindow
+
+
+def _exact_nearest_rank(data, q):
+    data = sorted(data)
+    rank = max(1, math.ceil(q / 100.0 * len(data)))
+    return data[min(len(data), rank) - 1]
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.floats(min_value=1e-6, max_value=1e3,
+                          allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=400),
+       st.sampled_from([1.0, 25.0, 50.0, 90.0, 99.0, 100.0]))
+def test_histogram_percentile_within_growth_of_exact(values, q):
+    growth = 1.1
+    h = Histogram(growth=growth)
+    for v in values:
+        h.record(v)
+    got = h.percentile(q)
+    exact = _exact_nearest_rank(values, q)
+    assert min(values) <= got <= max(values)
+    assert got <= exact * growth + 1e-12
+    assert got >= exact / growth - 1e-12
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(min_value=1e-6, max_value=1e2,
+                          allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=120),
+       st.lists(st.floats(min_value=1e-6, max_value=1e2,
+                          allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=120))
+def test_histogram_merge_equals_combined_recording(a, b):
+    ha, hb, hc = Histogram(), Histogram(), Histogram()
+    for v in a:
+        ha.record(v)
+        hc.record(v)
+    for v in b:
+        hb.record(v)
+        hc.record(v)
+    merged = ha.merge(hb)
+    assert merged.count == hc.count
+    assert merged.total == pytest.approx(hc.total)
+    assert merged.min == hc.min and merged.max == hc.max
+    for q in (1, 50, 99, 100):
+        assert merged.percentile(q) == pytest.approx(hc.percentile(q))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(min_value=0.0, max_value=1e3,
+                          allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=200),
+       st.floats(min_value=0.0, max_value=100.0))
+def test_latency_window_matches_reference(values, q):
+    w = LatencyWindow()
+    for v in values:
+        w.record(v)
+    assert w.percentile(q) == _exact_nearest_rank(values, q)
