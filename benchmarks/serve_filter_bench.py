@@ -27,6 +27,13 @@ Tracks the batched-query serving trajectory of ``repro.serve_filter``:
   swap). The reload schedule is deterministic and shared across modes,
   so a post-churn verification tick still cross-checks grouped
   bit-equal to ungrouped, and reload latency lands in the JSON rows,
+* ``--quant`` reruns every many-tenant mode with int8 COMPRESSED
+  ARENAS (quantized tenant state, fused dequant in the query body) on
+  the same fleet, recording ``arena_mb`` / ``tenants_per_gb`` /
+  ``qps_vs_fp32`` side by side with fp32 and asserting the grouped
+  arena shrinks >= 3x (>= 2x in smoke) at matched answers: quantized
+  answers are cross-checked grouped == ungrouped and zero-false-
+  negative on indexed rows,
 * ``--smoke`` is the CI fast path: a few hundred queries through the
   many-tenant scenario, grouped AND ungrouped, with a bit-equality
   cross-check instead of throughput assertions,
@@ -43,7 +50,7 @@ trajectories stay comparable across boxes.
 
 Usage: PYTHONPATH=src python benchmarks/serve_filter_bench.py
            [--executor {local,sharded}] [--shards N] [--async-dispatch]
-           [--tenants N] [--rows-per-request K] [--grouped]
+           [--tenants N] [--rows-per-request K] [--grouped] [--quant]
            [--reload-every N] [--smoke] [--json-out PATH]
 """
 from __future__ import annotations
@@ -77,6 +84,11 @@ def make_parser() -> argparse.ArgumentParser:
     ap.add_argument("--grouped", action="store_true",
                     help="also serve the many-tenant scenario through "
                          "plan-group megabatching and report the speedup")
+    ap.add_argument("--quant", action="store_true",
+                    help="also serve the many-tenant scenario through "
+                         "int8 compressed arenas (quantized tenant "
+                         "state) and record arena_mb / tenants_per_gb / "
+                         "q/s side by side with fp32 on the same fleet")
     ap.add_argument("--reload-every", type=int, default=0,
                     help="many-tenant churn: hot-reload one tenant via "
                          "TenantHandle.reload every N fleet ticks "
@@ -211,9 +223,13 @@ def fit_fleet(n_tenants: int, steps: int = 30, n_bases: int = 4
     st = existence.TrainSettings(steps=steps, n_pos=2000, n_neg=2000)
     bases = []
     for i in range(min(n_bases, n_tenants)):
-        ds = tuples.synthesize([600, 400, 200], n_records=4000,
+        # wide-ish columns (one split, two unsplit) so the embedding
+        # tables dominate the per-tenant footprint — the regime where
+        # int8 compressed arenas actually pay (tiny tables are all
+        # scale-vector and padding overhead)
+        ds = tuples.synthesize([4000, 2500, 900], n_records=4000,
                                seed=40 + i)
-        bases.append((ds, existence.fit(ds, theta=200, settings=st)))
+        bases.append((ds, existence.fit(ds, theta=3000, settings=st)))
     return ({f"tenant{i:03d}": bases[i % len(bases)]
              for i in range(n_tenants)}, bases)
 
@@ -272,6 +288,7 @@ def _measure_window(srv: FilterServer, pools: Dict[str, np.ndarray],
 
 def run_many_tenant_scenario(*, tenants: int, rows_per_request: int,
                              grouped: bool, steps: int,
+                             quant: bool = False,
                              async_dispatch: bool = False,
                              reload_every: int = 0,
                              target_queries: int = 16384,
@@ -289,21 +306,36 @@ def run_many_tenant_scenario(*, tenants: int, rows_per_request: int,
     ``mesh``, every mode runs sharded — grouped mode then exercises the
     composed path (mesh-sharded megabatch arenas).
 
-    The two modes are measured in INTERLEAVED windows and summarized by
-    the median, so an episodic slowdown of the host lands on both modes
-    instead of silently skewing the ratio."""
+    The modes are measured in INTERLEAVED windows and summarized by
+    the median, so an episodic slowdown of the host lands on every mode
+    instead of silently skewing the ratios.
+
+    ``quant`` adds the compressed-arena variants: every mode reruns
+    with int8 quantized tenant state (a ``quantized`` ServeConfig) on
+    the SAME fleet. Quantized answers get their own cross-checks —
+    quant-grouped bit-equal to quant-ungrouped, and the verification
+    tick's indexed rows must all answer yes (the calibrated threshold +
+    bit-exact fixup stage keep the no-false-negative invariant) — and
+    the grouped quant row records the per-shard arena footprint next to
+    fp32's (``arena_shrink_vs_fp32``, ``tenants_per_gb``,
+    ``qps_vs_fp32``)."""
     fleet, bases = fit_fleet(tenants, steps=steps)
     k = rows_per_request
-    modes = [False] + ([True] if grouped else [])
-    ctx: Dict[bool, tuple] = {}
-    answers: Dict[bool, dict] = {}
-    for g in modes:
+    # one mode per (grouped, quantized) combination requested; fp32
+    # always runs (it is the 'before' for both ratios)
+    modes = [(False, False)] + ([(True, False)] if grouped else [])
+    if quant:
+        modes += [(False, True)] + ([(True, True)] if grouped else [])
+    ctx: Dict[tuple, tuple] = {}
+    answers: Dict[tuple, dict] = {}
+    for mode in modes:
+        g, q = mode
         # span tracing rides the LAST mode's server (the grouped one
         # when grouping is on): one trace file, the headline path
-        traced = bool(trace_path) and g == modes[-1]
+        traced = bool(trace_path) and mode == modes[-1]
         srv = FilterServer(ServeConfig.from_kwargs(
-            buckets=BUCKETS, grouped=g, async_dispatch=async_dispatch,
-            mesh=mesh, trace=traced,
+            buckets=BUCKETS, grouped=g, quantized=q,
+            async_dispatch=async_dispatch, mesh=mesh, trace=traced,
             trace_path=trace_path if traced else None))
         for name, (_, idx) in fleet.items():
             srv.admit(TenantSpec(name, index=idx))
@@ -313,58 +345,65 @@ def run_many_tenant_scenario(*, tenants: int, rows_per_request: int,
         reqs = dict(zip(pools, srv.submit_many(
             [(name, pool[:k]) for name, pool in pools.items()])))
         srv.run_until_drained()
-        answers[g] = {name: r.answers.copy() for name, r in reqs.items()}
+        answers[mode] = {name: r.answers.copy()
+                         for name, r in reqs.items()}
         churn = (_ReloadChurn(srv, sorted(fleet), bases, reload_every)
                  if reload_every else None)
-        ctx[g] = (srv, pools, churn)
-    if grouped:     # grouped answers must be bit-equal to ungrouped
-        for name, ans in answers[True].items():
-            np.testing.assert_array_equal(ans, answers[False][name])
+        ctx[mode] = (srv, pools, churn)
+    _check_answers(modes, answers, grouped)
 
     rounds = max(2, target_queries // (len(fleet) * k))
-    qps: Dict[bool, List[float]] = {g: [] for g in modes}
+    qps: Dict[tuple, List[float]] = {m: [] for m in modes}
     for _ in range(repeats):
-        for g in modes:
-            srv, pools, churn = ctx[g]
-            qps[g].append(_measure_window(srv, pools, k, rounds, churn))
-    med = {g: sorted(qps[g])[len(qps[g]) // 2] for g in modes}
+        for mode in modes:
+            srv, pools, churn = ctx[mode]
+            qps[mode].append(_measure_window(srv, pools, k, rounds,
+                                             churn))
+    med = {m: sorted(qps[m])[len(qps[m]) // 2] for m in modes}
 
     if grouped and reload_every:
         # post-churn verification tick: the shared reload schedule left
-        # both modes with the same tenant->index mapping, so grouped
-        # answers must STILL be bit-equal to ungrouped after the swaps
-        post: Dict[bool, dict] = {}
-        for g in modes:
-            srv, pools, _ = ctx[g]
+        # every mode with the same tenant->index mapping, so the
+        # cross-mode equalities must STILL hold after the swaps
+        post: Dict[tuple, dict] = {}
+        for mode in modes:
+            srv, pools, _ = ctx[mode]
             reqs = dict(zip(pools, srv.submit_many(
                 [(name, pool[:k]) for name, pool in pools.items()])))
             srv.run_until_drained()
-            post[g] = {name: r.answers.copy()
-                       for name, r in reqs.items()}
-        for name, ans in post[True].items():
-            np.testing.assert_array_equal(ans, post[False][name])
+            post[mode] = {name: r.answers.copy()
+                          for name, r in reqs.items()}
+        _check_answers(modes, post, grouped)
 
+    # snapshot every mode BEFORE building rows: the quant rows compare
+    # their arena footprint against the fp32 sibling's
+    snaps = {m: ctx[m][0].stats_snapshot() for m in modes}
     rows = []
-    for g in modes:
-        srv, _, churn = ctx[g]
-        snap = srv.stats_snapshot()
+    for mode in modes:
+        g, q = mode
+        snap = snaps[mode]
         row = {
             "scenario": "many_tenant",
             "tenants": len(fleet),
             "rows_per_request": k,
             "grouped": g,
+            "quantized": q,
             "async_dispatch": async_dispatch,
             "queries": repeats * rounds * len(fleet) * k,
-            "qps": med[g],
-            "qps_windows": [round(q) for q in qps[g]],
-            "us_per_query": 1e6 / med[g],
+            "qps": med[mode],
+            "qps_windows": [round(v) for v in qps[mode]],
+            "us_per_query": 1e6 / med[mode],
             "batches": int(snap["batches"]),
             "grouped_batches": int(snap["grouped_batches"]),
             "batch_occupancy": round(snap["batch_occupancy"], 3),
             "batch_p99_ms": round(snap["batch_p99_ms"], 3),
             "queue_p99_ms": round(snap["queue_p99_ms"], 3),
             "plan_groups": int(snap["plan_groups"]),
+            "arena_mb": round(snap["arena_mb"], 4),
+            "arena_quant_mb": round(snap["arena_quant_mb"], 4),
+            "tenants_per_gb": round(snap["tenants_per_gb"], 1),
         }
+        srv = ctx[mode][0]
         if snap["trace_events"]:
             row["trace"] = srv.dump_trace(trace_path)
             row["trace_events"] = int(snap["trace_events"])
@@ -373,9 +412,38 @@ def run_many_tenant_scenario(*, tenants: int, rows_per_request: int,
             row["reloads"] = int(snap["reloads"])
             row["reload_p99_ms"] = round(snap["reload_p99_ms"], 3)
         if g:
-            row["speedup_vs_ungrouped"] = round(med[True] / med[False], 1)
+            row["speedup_vs_ungrouped"] = round(
+                med[mode] / med[(False, q)], 1)
+        if q:
+            row["qps_vs_fp32"] = round(med[mode] / med[(g, False)], 2)
+            fp32_mb = snaps[(g, False)]["arena_mb"]
+            if snap["arena_mb"] and fp32_mb:
+                row["arena_shrink_vs_fp32"] = round(
+                    fp32_mb / snap["arena_mb"], 2)
         rows.append(row)
     return rows
+
+
+def _check_answers(modes, answers: Dict[tuple, dict],
+                   grouped: bool) -> None:
+    """Cross-mode answer invariants on a verification tick: grouped
+    bit-equal to ungrouped (per storage dtype), and — because the
+    tick's rows are all INDEXED records — every mode must answer yes
+    on every row (zero false negatives; for the quantized modes this
+    is the calibrated-threshold no-FN guarantee at work)."""
+    dtypes = {q for _, q in modes}
+    if grouped:
+        for q in dtypes:
+            for name, ans in answers[(True, q)].items():
+                np.testing.assert_array_equal(
+                    ans, answers[(False, q)][name],
+                    err_msg=f"grouped != ungrouped (quant={q}) "
+                            f"for {name}")
+    for mode, per_tenant in answers.items():
+        for name, ans in per_tenant.items():
+            assert np.asarray(ans).all(), \
+                f"false negative on indexed rows: mode={mode} " \
+                f"tenant={name}"
 
 def _verify_trace(path: str, async_dispatch: bool) -> None:
     """Self-check an exported trace: well-formed Chrome events, and the
@@ -469,18 +537,48 @@ def record(rows: List[dict], path: Optional[str]) -> None:
 
 
 def _print_many_tenant(rows: List[dict]) -> None:
-    hdr = f"{'mode':>9} {'tenants':>7} {'rows/req':>8} {'qps':>12} " \
-          f"{'batches':>8} {'occupancy':>9} {'speedup':>8}"
+    hdr = f"{'mode':>12} {'tenants':>7} {'rows/req':>8} {'qps':>12} " \
+          f"{'batches':>8} {'occupancy':>9} {'arena MB':>9} " \
+          f"{'speedup':>8}"
     print(hdr)
     for r in rows:
-        mode = "grouped" if r["grouped"] else "ungrouped"
+        mode = ("grouped" if r["grouped"] else "ungrouped") \
+            + ("/q8" if r.get("quantized") else "")
         churn = (f"  reloads={r['reloads']} "
                  f"(p99 {r['reload_p99_ms']}ms)"
                  if "reloads" in r else "")
-        print(f"{mode:>9} {r['tenants']:>7} {r['rows_per_request']:>8} "
+        qinfo = ""
+        if r.get("quantized"):
+            if "arena_shrink_vs_fp32" in r:
+                qinfo += f"  shrink={r['arena_shrink_vs_fp32']}x"
+            qinfo += f"  qps_vs_fp32={r['qps_vs_fp32']}" \
+                     f"  tenants/GB={r['tenants_per_gb']}"
+        print(f"{mode:>12} {r['tenants']:>7} {r['rows_per_request']:>8} "
               f"{r['qps']:>12.0f} {r['batches']:>8} "
               f"{r['batch_occupancy']:>9} "
-              f"{r.get('speedup_vs_ungrouped', ''):>8}{churn}")
+              f"{r.get('arena_mb', 0.0):>9} "
+              f"{r.get('speedup_vs_ungrouped', ''):>8}{churn}{qinfo}")
+
+
+def _check_quant_rows(rows: List[dict], *, smoke: bool) -> None:
+    """Assert the compressed-arena headline numbers when --quant ran
+    grouped: the int8 arena's per-shard device footprint must be >= 3x
+    smaller than fp32's for the same fleet (>= 2x in smoke, whose tiny
+    fleet amortizes scale vectors and tile padding worse), and grouped
+    quantized throughput must stay within 10% of fp32 (full runs only
+    — smoke windows are too short to compare)."""
+    qrows = [r for r in rows
+             if r.get("quantized") and r.get("grouped")]
+    for r in qrows:
+        floor = 2.0 if smoke else 3.0
+        shrink = r.get("arena_shrink_vs_fp32", 0.0)
+        assert shrink >= floor, \
+            f"quantized arena only {shrink}x smaller than fp32 " \
+            f"(need >= {floor}x)"
+        if not smoke:
+            assert r["qps_vs_fp32"] >= 0.9, \
+                f"grouped quantized q/s {r['qps_vs_fp32']}x of fp32 " \
+                "(need within 10%)"
 
 
 def main():
@@ -496,7 +594,8 @@ def main():
         many = run_many_tenant_scenario(
             tenants=_ARGS.tenants or 8,
             rows_per_request=_ARGS.rows_per_request,
-            grouped=True, steps=min(_ARGS.steps, 10),
+            grouped=True, quant=_ARGS.quant,
+            steps=min(_ARGS.steps, 10),
             async_dispatch=_ARGS.async_dispatch,
             reload_every=_ARGS.reload_every,
             target_queries=1024 if _ARGS.reload_every else 384,
@@ -504,6 +603,7 @@ def main():
         print("smoke: many-tenant scenario "
               + ("(sharded arenas) " if mesh is not None else "")
               + "(grouped answers verified bit-equal to ungrouped"
+              + (", incl. quantized modes" if _ARGS.quant else "")
               + (", incl. post-reload-churn)" if _ARGS.reload_every
                  else ")"))
         _print_many_tenant(many)
@@ -512,6 +612,7 @@ def main():
         if _ARGS.reload_every:
             assert all(r["reloads"] > 0 for r in many), \
                 "churn scenario never hot-reloaded"
+        _check_quant_rows(many, smoke=True)
         rows += many
     else:
         classic = run(executor=_ARGS.executor, shards=_ARGS.shards,
@@ -535,7 +636,8 @@ def main():
             many = run_many_tenant_scenario(
                 tenants=_ARGS.tenants,
                 rows_per_request=_ARGS.rows_per_request,
-                grouped=_ARGS.grouped, steps=_ARGS.steps,
+                grouped=_ARGS.grouped, quant=_ARGS.quant,
+                steps=_ARGS.steps,
                 async_dispatch=_ARGS.async_dispatch,
                 reload_every=_ARGS.reload_every, mesh=mesh,
                 trace_path=_ARGS.trace)
@@ -544,6 +646,7 @@ def main():
                   f"{_ARGS.rows_per_request}-row requests"
                   + (", sharded arenas)" if mesh is not None else ")"))
             _print_many_tenant(many)
+            _check_quant_rows(many, smoke=False)
             rows += many
     if _ARGS.trace and any("trace" in r for r in rows):
         _verify_trace(_ARGS.trace, _ARGS.async_dispatch)

@@ -23,6 +23,7 @@ from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import compression as comp
 from repro.nn import ParamSpec, abstract_params, axes_tree, build_params
@@ -139,6 +140,137 @@ def bce_loss(params, cfg: LMBFConfig, encoded_ids, labels) -> jax.Array:
     # numerically-stable BCE-with-logits
     loss = jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
     return jnp.mean(loss)
+
+
+# ---------------------------------------------------------------------------
+# int8 compressed storage (serving "compressed arenas")
+#
+# Symmetric absmax quantization: embedding tables carry one fp32 scale per
+# ``row_group`` rows, dense weights one fp32 scale per output channel;
+# biases stay fp32.  Every consumer — the reference ``apply_q`` here, the
+# per-tenant jit/shard_map programs, the grouped arena program, and the
+# Pallas q8 gather kernel — dequantizes with the SAME elementwise
+# ``q.astype(f32) * scale`` before reusing the fp32 math, so quantized
+# scores are bit-identical across placements by construction (a psum of
+# masked shards only ever adds exact zeros).
+# ---------------------------------------------------------------------------
+
+def quantize_params(params, cfg: LMBFConfig, row_group: int = 32):
+    """fp32 param tree -> int8 qparams tree (host numpy arrays).
+
+    Returns ``{"embed": {col_i: int8 (rows, e)},
+    "embed_scale": {col_i: f32 (ceil(rows / row_group),)},
+    "dense": {w*: int8, b*: f32}, "dense_scale": {w*: f32 (out_ch,)}}``.
+    Zero rows/channels get scale 1.0 so dequant never divides by zero.
+    """
+    qp = {"embed": {}, "embed_scale": {}, "dense": {}, "dense_scale": {}}
+    for i, (rows, e) in enumerate(cfg.column_encodings):
+        if e is None:
+            continue
+        t = np.asarray(params["embed"][f"col{i}"], np.float32)
+        ng = -(-rows // row_group)
+        pad = ng * row_group - rows
+        absmax = np.abs(np.pad(t, ((0, pad), (0, 0)))) \
+            .reshape(ng, row_group, -1).max(axis=(1, 2))
+        scale = np.where(absmax > 0, absmax / 127.0, 1.0).astype(np.float32)
+        per_row = np.repeat(scale, row_group)[:rows]
+        qp["embed"][f"col{i}"] = np.clip(
+            np.rint(t / per_row[:, None]), -127, 127).astype(np.int8)
+        qp["embed_scale"][f"col{i}"] = scale
+    for name, w in params["dense"].items():
+        w = np.asarray(w, np.float32)
+        if name.startswith("b"):
+            qp["dense"][name] = w
+            continue
+        absmax = np.abs(w).max(axis=0)
+        scale = np.where(absmax > 0, absmax / 127.0, 1.0).astype(np.float32)
+        qp["dense"][name] = np.clip(
+            np.rint(w / scale), -127, 127).astype(np.int8)
+        qp["dense_scale"][name] = scale
+    return qp
+
+
+def q8_gather(q, scale, ids, rows: int, row_group: int, dtype):
+    """Fused int8 row gather + per-row-group dequant.
+
+    Mirrors ``jnp.take``'s embedding semantics exactly — negative ids
+    wrap pythonically, out-of-bounds rows become NaN — so quantized
+    features degrade identically to the fp32 gather on bad ids.
+    """
+    wrapped = jnp.where(ids < 0, ids + rows, ids)
+    valid = (wrapped >= 0) & (wrapped < rows)
+    safe = jnp.clip(wrapped, 0, rows - 1)
+    g = (jnp.take(q, safe, axis=0).astype(dtype)
+         * jnp.take(scale, safe // row_group)[..., None].astype(dtype))
+    return jnp.where(valid[..., None], g, jnp.asarray(jnp.nan, dtype))
+
+
+def dequantize_dense(qparams, dtype):
+    """int8 dense stack -> fp32 dict for :func:`mlp_head` (biases pass
+    through; weights are elementwise ``q * per_channel_scale``)."""
+    dense = {}
+    for name, w in qparams["dense"].items():
+        if name.startswith("b"):
+            dense[name] = jnp.asarray(w, dtype)
+        else:
+            dense[name] = (jnp.asarray(w).astype(dtype)
+                           * jnp.asarray(qparams["dense_scale"][name], dtype))
+    return dense
+
+
+def apply_q(qparams, cfg: LMBFConfig, encoded_ids,
+            row_group: int = 32) -> jax.Array:
+    """Quantized-reference logits: fused gather→dequant features into the
+    standard :func:`mlp_head` on dequantized dense weights."""
+    feats = []
+    for i, (rows, e) in enumerate(cfg.column_encodings):
+        ids = encoded_ids[..., i]
+        if e is None:
+            feats.append(jax.nn.one_hot(ids, rows, dtype=cfg.dtype))
+        else:
+            feats.append(q8_gather(
+                jnp.asarray(qparams["embed"][f"col{i}"]),
+                jnp.asarray(qparams["embed_scale"][f"col{i}"]),
+                ids, rows, row_group, cfg.dtype))
+    x = jnp.concatenate(feats, axis=-1)
+    return mlp_head({"dense": dequantize_dense(qparams, cfg.dtype)}, cfg, x)
+
+
+def predict_q(qparams, cfg: LMBFConfig, encoded_ids,
+              row_group: int = 32) -> jax.Array:
+    return jax.nn.sigmoid(apply_q(qparams, cfg, encoded_ids, row_group))
+
+
+def calibrated_tau(params, qparams, cfg: LMBFConfig, tau: float, *,
+                   row_group: int = 32, n_samples: int = 512,
+                   safety: float = 2.0, floor: float = 1e-3,
+                   seed: int = 0) -> float:
+    """Serving threshold for a quantized tenant.
+
+    Quantization perturbs logits, so a key the fp32 model accepted at
+    ``tau`` could flip below it and — because the fixup filter only
+    covers fp32-model FNs from fit time — become a false negative.  We
+    close that hole empirically: measure the max |fp32 − int8| logit gap
+    over ``n_samples`` deterministic draws from the tenant's own encoded
+    domain, then serve at ``sigmoid(logit(tau) − safety·gap − floor)``.
+    Any fp32-accepted key stays model-positive under int8 as long as its
+    own gap is within the calibrated margin; keys the fp32 model
+    rejected stay covered by the bit-exact fixup probe either way.  The
+    same (params, seed) always yields the same threshold, so grouped,
+    ungrouped, and sharded placements of one tenant agree exactly.
+    """
+    rng = np.random.default_rng(seed)
+    cols = [rng.integers(0, rows, size=n_samples)
+            for rows, _e in cfg.column_encodings]
+    enc = jnp.asarray(np.stack(cols, axis=-1).astype(np.int32))
+    z = apply(params, cfg, enc)
+    zq = apply_q(qparams, cfg, enc, row_group=row_group)
+    gap = float(jnp.max(jnp.abs(z - zq)))
+    if not math.isfinite(gap):      # defensive: never serve a NaN threshold
+        gap = 0.0
+    t = min(max(float(tau), 1e-6), 1.0 - 1e-6)
+    margin = safety * gap + floor
+    return 1.0 / (1.0 + math.exp(-(math.log(t / (1.0 - t)) - margin)))
 
 
 def count_params(cfg: LMBFConfig) -> int:

@@ -1,2 +1,2 @@
-from repro.kernels.qr_embed.ops import qr_embed
-from repro.kernels.qr_embed.ref import qr_embed_ref
+from repro.kernels.qr_embed.ops import q8_embed_lookup, qr_embed
+from repro.kernels.qr_embed.ref import q8_gather_ref, qr_embed_ref

@@ -1,10 +1,18 @@
-"""Public jit'd wrapper: arbitrary-rank ids, model-layer integration."""
+"""Public jit'd wrappers: arbitrary-rank ids, model-layer integration."""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.qr_embed.q8_gather import q8_gather_call
 from repro.kernels.qr_embed.qr_embed import qr_embed_call
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode unless we are actually on TPU."""
+    return jax.default_backend() != "tpu"
 
 
 def qr_embed(ids, table_q, table_r, *, divisor: int, block_n: int = 1024,
@@ -20,3 +28,20 @@ def qr_embed(ids, table_q, table_r, *, divisor: int, block_n: int = 1024,
     out = qr_embed_call(flat, table_q, table_r, divisor=divisor,
                         block_n=block_n, interpret=interpret)
     return out.reshape(*shape, table_q.shape[1])
+
+
+def q8_embed_lookup(idx, sidx, table, scales, *, block_n: int = 1024,
+                    interpret: Optional[bool] = None):
+    """idx, sidx: (...,) int32 -> (..., d) fused int8 gather + dequant.
+
+    Equivalent to ``table[idx].astype(f32) * scales[sidx][..., None]``
+    with the int8 table VMEM-pinned and the scales applied in-tile (see
+    q8_gather.py).  Indices must be pre-clipped in-bounds — the caller
+    owns wrap/NaN out-of-bounds semantics.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    shape = idx.shape
+    out = q8_gather_call(idx.reshape(-1), sidx.reshape(-1), table, scales,
+                         block_n=block_n, interpret=interpret)
+    return out.reshape(*shape, table.shape[1])

@@ -1,0 +1,61 @@
+"""Fused int8 gather + in-tile dequant for compressed serving arenas.
+
+Compressed arenas (serve_filter PR 7) hold the combined embedding matrix
+as int8 with one fp32 scale per row group.  The hot path must never
+widen that table in HBM: this kernel reads int8 rows and applies the
+scales in-tile, so fp32 exists only in the (bn, d) output block that
+feeds the MLP —
+
+    out[i] = table[idx[i]].astype(f32) * scales[sidx[i]]
+
+``idx`` indexes rows of the int8 table and ``sidx`` the flat scale
+vector; both are precomputed (clipped in-bounds) by the caller, which
+also owns the wrap/NaN out-of-bounds semantics.  The elementwise
+dequant is exactly the reference ``lmbf.q8_gather`` math, so kernel and
+pure-JAX paths produce bit-identical floats.
+
+Grid: one program per block of ``bn`` ids; the table and scale vector
+map fully into VMEM for every program (index_map -> 0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(idx_ref, sidx_ref, tab_ref, scale_ref, out_ref):
+    rows = jnp.take(tab_ref[...], idx_ref[...], axis=0).astype(out_ref.dtype)
+    s = jnp.take(scale_ref[...], sidx_ref[...]).astype(out_ref.dtype)
+    out_ref[...] = rows * s[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def q8_gather_call(idx, sidx, table, scales, *, block_n: int = 1024,
+                   interpret: bool = True):
+    """idx, sidx: (N,) int32; table: (rows, d) int8; scales: (ng,) f32
+    -> (N, d) f32: ``table[idx].astype(f32) * scales[sidx][:, None]``."""
+    n = idx.shape[0]
+    d = table.shape[1]
+    bn = min(block_n, n)
+    pad = (-n) % bn
+    if pad:
+        idx = jnp.pad(idx, (0, pad))
+        sidx = jnp.pad(sidx, (0, pad))
+    grid = (idx.shape[0] // bn,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec(table.shape, lambda i: (0, 0)),
+            pl.BlockSpec(scales.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((idx.shape[0], d), scales.dtype),
+        interpret=interpret,
+    )(idx, sidx, table, scales)
+    return out[:n] if pad else out

@@ -12,3 +12,10 @@ def qr_embed_ref(ids, table_q, table_r, *, divisor: int):
     return (jnp.take(table_q, q, axis=0).astype(jnp.float32) +
             jnp.take(table_r, r, axis=0).astype(jnp.float32)
             ).astype(table_q.dtype)
+
+
+def q8_gather_ref(idx, sidx, table, scales):
+    """idx, sidx: (N,) int32 -> (N, d): fused int8 gather + dequant,
+    ``table[idx].astype(f32) * scales[sidx][:, None]``."""
+    return (jnp.take(table, idx, axis=0).astype(scales.dtype)
+            * jnp.take(scales, sidx)[:, None])

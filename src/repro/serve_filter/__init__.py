@@ -24,10 +24,12 @@ Module map
 ``plan``
     :class:`QueryPlan` — a frozen, hashable description of HOW a filter
     runs: plan shape (``LMBFConfig`` + ``BloomParams``), probe flavor
-    (:class:`ProbeConfig`: pure-JAX vs Pallas kernel), and
-    :class:`Placement` (local vs mesh-sharded). :func:`plan_query` is
-    the planner: config + fixup params + an optional target ``Mesh``
-    in, plan out.
+    (:class:`ProbeConfig`: pure-JAX vs Pallas kernel),
+    :class:`Placement` (local vs mesh-sharded), and
+    :class:`QuantConfig` (fp32 vs int8 compressed storage — part of
+    plan AND group-key identity, so quantized and fp32 tenants never
+    share a program or an arena). :func:`plan_query` is the planner:
+    config + fixup params + an optional target ``Mesh`` in, plan out.
 
 ``executors``
     ONE composed core with two orthogonal axes — grouping (per-tenant
@@ -52,7 +54,11 @@ Module map
     one member's slot in place. On a sharded group key the device
     views are ``device_put`` with ``NamedSharding`` per slice (matrix
     row-sharded, bitsets word-sharded, padded to divide the shard
-    count) — no full replica ever materializes on one device.
+    count) — no full replica ever materializes on one device. Under a
+    quantized group key the arena stores int8 tables + per-slot scale
+    vectors and each member's calibrated threshold — tenants quantize
+    ONCE at admit/reload, and the executors fuse dequant into the
+    query body (no fp32 table ever materializes).
 
 ``registry``
     :class:`FilterRegistry` — owns the tenants and DRIVES the
@@ -153,7 +159,8 @@ from repro.serve_filter.executors import (Executor, GroupedExecutor,
                                           release_grouped_executor,
                                           release_plan)
 from repro.serve_filter.plan import (GroupKey, Placement, ProbeConfig,
-                                     QueryPlan, group_key, plan_query)
+                                     QuantConfig, QueryPlan, group_key,
+                                     plan_query)
 from repro.serve_filter.registry import FilterEntry, FilterRegistry
 from repro.serve_filter.scheduler import (DEFAULT_BUCKETS,
                                           FilterServeError, QueryFuture,

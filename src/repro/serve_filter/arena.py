@@ -96,9 +96,22 @@ class PlanGroupArena:
                           if e is not None]
         self._emb_rows = sum(rows for _, rows, _ in self._emb_cols)
         self._e_max = max((e for _, _, e in self._emb_cols), default=1)
+        # compressed storage: a quantized group key stores the combined
+        # matrix int8 with a flat per-row-group scale vector laid out
+        # [column block][slot][group] (a scale group never straddles a
+        # tenant boundary), and the dense stacks int8 with per-slot
+        # per-channel scale stacks — the device views carry the
+        # compressed dtype, so device_nbytes drops for real
+        self._quant = key.quant.enabled
+        self._rg = key.quant.row_group
+        self._sg_cols = [-(-rows // self._rg)
+                         for _, rows, _ in self._emb_cols]
+        self._sg_rows = sum(self._sg_cols)
+        self._embed_scale = np.zeros(0, np.float32)
         # host mirrors (authoritative); shapes carry a leading slot axis
-        self._embed_flat = np.zeros((0, self._e_max),
-                                    jnp.dtype(key.cfg.dtype))
+        self._embed_flat = np.zeros(
+            (0, self._e_max),
+            np.int8 if self._quant else jnp.dtype(key.cfg.dtype))
         self._params: Dict[str, Dict[str, np.ndarray]] = {}
         self._tau = np.zeros(0, np.float32)
         self._m_bits = np.zeros(0, np.uint32)
@@ -139,8 +152,8 @@ class PlanGroupArena:
         columns; compaction pulls it back down). The registry's
         ``budget_mb`` counts nominal per-filter sizes; this is the
         observable truth for capacity planning."""
-        n = self._embed_flat.nbytes + self._bits.nbytes + \
-            self._tau.nbytes + self._m_bits.nbytes + \
+        n = self._embed_flat.nbytes + self._embed_scale.nbytes + \
+            self._bits.nbytes + self._tau.nbytes + self._m_bits.nbytes + \
             self._word_base.nbytes + self._word_len.nbytes
         for d in self._params.values():
             for arr in d.values():
@@ -168,6 +181,7 @@ class PlanGroupArena:
         per_shard = -(-self._embed_flat.shape[0] // n) * \
             self._e_max * self._embed_flat.itemsize
         per_shard += -(-self._bits.size // n) * self._bits.itemsize
+        per_shard += self._embed_scale.nbytes      # replicated (tiny)
         per_shard += self._tau.nbytes + self._m_bits.nbytes + \
             self._word_base.nbytes
         for d in self._params.values():
@@ -223,6 +237,15 @@ class PlanGroupArena:
             prefix += rows
         return starts
 
+    def _sg_starts(self, cap: int) -> List[int]:
+        """Start index of each embedded column's block in the flat
+        per-row-group scale vector, for a given slot capacity."""
+        starts, prefix = [], 0
+        for ng in self._sg_cols:
+            starts.append(cap * prefix)
+            prefix += ng
+        return starts
+
     def _write_slot(self, slot: int,
                     index: existence.ExistenceIndex) -> None:
         """Write a fitted index's payload into an OWNED slot whose
@@ -230,15 +253,42 @@ class PlanGroupArena:
         ``word_len`` set for this index's filter): dense params,
         embedding blocks, tau, bitset words, m_bits. Shared by admit
         (:meth:`add`) and hot-reload (:meth:`swap`) so the two paths
-        can never drift."""
-        for name, arr in index.params["dense"].items():
-            self._params["dense"][name][slot] = np.asarray(arr)
-        starts = self._emb_starts(self.capacity)
-        for (i, rows, e), start in zip(self._emb_cols, starts):
-            tbl = np.asarray(index.params["embed"][f"col{i}"])
-            self._embed_flat[start + slot * rows:
-                             start + (slot + 1) * rows, :e] = tbl
-        self._tau[slot] = np.float32(index.tau)
+        can never drift.  A quantized arena quantizes HERE — once per
+        admit/reload — and stores the tenant's calibrated threshold in
+        the tau vector, so quantized slots keep the no-false-negative
+        invariant and reload stays zero-drain (the mirrors mutate, but
+        in-flight batches hold the previous device snapshots)."""
+        if self._quant:
+            qc = self.key.quant
+            qp = lmbf.quantize_params(index.params, self.key.cfg,
+                                      self._rg)
+            tau = lmbf.calibrated_tau(
+                index.params, qp, self.key.cfg, index.tau,
+                row_group=self._rg, n_samples=qc.calib_samples,
+                safety=qc.margin_safety, floor=qc.margin_floor)
+            for name, arr in qp["dense"].items():
+                self._params["dense"][name][slot] = arr
+            for name, arr in qp["dense_scale"].items():
+                self._params["dense_scale"][name][slot] = arr
+            for (i, rows, e), start, sstart, ng in zip(
+                    self._emb_cols, self._emb_starts(self.capacity),
+                    self._sg_starts(self.capacity), self._sg_cols):
+                self._embed_flat[start + slot * rows:
+                                 start + (slot + 1) * rows, :e] = \
+                    qp["embed"][f"col{i}"]
+                self._embed_scale[sstart + slot * ng:
+                                  sstart + (slot + 1) * ng] = \
+                    qp["embed_scale"][f"col{i}"]
+            self._tau[slot] = np.float32(tau)
+        else:
+            for name, arr in index.params["dense"].items():
+                self._params["dense"][name][slot] = np.asarray(arr)
+            starts = self._emb_starts(self.capacity)
+            for (i, rows, e), start in zip(self._emb_cols, starts):
+                tbl = np.asarray(index.params["embed"][f"col{i}"])
+                self._embed_flat[start + slot * rows:
+                                 start + (slot + 1) * rows, :e] = tbl
+            self._tau[slot] = np.float32(index.tau)
         fp = index.fixup_filter.params
         base = int(self._word_base[slot])
         self._bits[base:base + fp.n_words] = \
@@ -361,6 +411,10 @@ class PlanGroupArena:
             params = {g: {k: snap(v) for k, v in d.items()}
                       for g, d in self._params.items()}
             params["embed_flat"] = snap(self._embed_flat, P(axis, None))
+            if self._quant:
+                # flat scale vector: replicated on every placement —
+                # it is ~1/(row_group * e_max) the matrix's size
+                params["embed_scale"] = snap(self._embed_scale)
             self._device = (params, snap(self._bits, P(axis)),
                             snap(self._tau),
                             snap(self._m_bits),
@@ -429,6 +483,11 @@ class PlanGroupArena:
                                        self._emb_starts(self.capacity)):
             self._embed_flat[start + slot * rows:
                              start + (slot + 1) * rows] = 0
+        if self._quant:
+            for ng, sstart in zip(self._sg_cols,
+                                  self._sg_starts(self.capacity)):
+                self._embed_scale[sstart + slot * ng:
+                                  sstart + (slot + 1) * ng] = 0
         self._tau[slot] = 0.0
         self._m_bits[slot] = 32
         self._word_base[slot] = 0
@@ -452,9 +511,17 @@ class PlanGroupArena:
         old = self.capacity
         keep = min(old, new_cap)
         fresh: Dict[str, Dict[str, np.ndarray]] = {"dense": {}}
+        if self._quant:
+            fresh["dense_scale"] = {}
         for name, s in spec["dense"].items():
-            arr = np.zeros((new_cap,) + tuple(s.shape),
-                           jnp.dtype(s.dtype))
+            dtype = jnp.dtype(s.dtype)
+            if self._quant and name.startswith("w"):
+                dtype = np.dtype(np.int8)
+                sc = np.zeros((new_cap, s.shape[-1]), np.float32)
+                if old:
+                    sc[:keep] = self._params["dense_scale"][name][:keep]
+                fresh["dense_scale"][name] = sc
+            arr = np.zeros((new_cap,) + tuple(s.shape), dtype)
             if old:
                 arr[:keep] = self._params["dense"][name][:keep]
             fresh["dense"][name] = arr
@@ -468,6 +535,15 @@ class PlanGroupArena:
                 flat[new_start:new_start + keep * rows] = \
                     self._embed_flat[old_start:old_start + keep * rows]
         self._embed_flat = flat
+        if self._quant:
+            scale = np.zeros(new_cap * self._sg_rows, np.float32)
+            if old:
+                for ng, new_start, old_start in zip(
+                        self._sg_cols, self._sg_starts(new_cap),
+                        self._sg_starts(old)):
+                    scale[new_start:new_start + keep * ng] = \
+                        self._embed_scale[old_start:old_start + keep * ng]
+            self._embed_scale = scale
 
         def vec(v, fill, dtype):
             out = np.full(new_cap, fill, dtype)
@@ -513,6 +589,7 @@ class PlanGroupArena:
         old_tau, old_mb = self._tau, self._m_bits
         old_base, old_len = self._word_base, self._word_len
         old_flat, old_cap = self._embed_flat, self.capacity
+        old_scale = self._embed_scale
 
         new_cap = self.min_capacity
         while new_cap < len(live):
@@ -532,6 +609,8 @@ class PlanGroupArena:
 
         new_starts = self._emb_starts(new_cap)
         old_starts = self._emb_starts(old_cap)
+        new_sg = self._sg_starts(new_cap)
+        old_sg = self._sg_starts(old_cap)
         cursor = 0
         for new_slot, (tenant, old_slot) in enumerate(live):
             for group, d in self._params.items():
@@ -543,6 +622,12 @@ class PlanGroupArena:
                                  ns + (new_slot + 1) * rows] = \
                     old_flat[os_ + old_slot * rows:
                              os_ + (old_slot + 1) * rows]
+            if self._quant:
+                for ng, ns_, os_ in zip(self._sg_cols, new_sg, old_sg):
+                    self._embed_scale[ns_ + new_slot * ng:
+                                      ns_ + (new_slot + 1) * ng] = \
+                        old_scale[os_ + old_slot * ng:
+                                  os_ + (old_slot + 1) * ng]
             self._tau[new_slot] = old_tau[old_slot]
             self._m_bits[new_slot] = old_mb[old_slot]
             length = int(old_len[old_slot])

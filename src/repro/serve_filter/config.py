@@ -47,7 +47,8 @@ from typing import Optional, Sequence, Tuple
 from jax.sharding import Mesh
 
 from repro.core import existence
-from repro.serve_filter.plan import DEFAULT_TILE_ROWS, ProbeConfig
+from repro.serve_filter.plan import (DEFAULT_TILE_ROWS, ProbeConfig,
+                                     QuantConfig)
 
 # the scheduler's historical default ladder (re-exported by scheduler.py)
 DEFAULT_BUCKETS = (64, 256, 1024, 4096)
@@ -193,6 +194,7 @@ class ServeConfig:
     dispatch: DispatchConfig = DispatchConfig()
     grouping: GroupingConfig = GroupingConfig()
     probe: ProbeConfig = ProbeConfig()
+    quant: QuantConfig = QuantConfig()
     metrics: MetricsConfig = MetricsConfig()
 
     @classmethod
@@ -207,6 +209,8 @@ class ServeConfig:
                     max_inflight: int = 2,
                     grouped: bool = False,
                     tile_rows: int = DEFAULT_TILE_ROWS,
+                    quantized: bool = False,
+                    quant_row_group: int = 32,
                     metrics_path: Optional[str] = None,
                     metrics_echo: bool = False,
                     trace: bool = False,
@@ -223,6 +227,8 @@ class ServeConfig:
                                     tile_rows=int(tile_rows)),
             probe=ProbeConfig(use_kernel=bool(use_kernel),
                               interpret=interpret, block_n=int(block_n)),
+            quant=QuantConfig(enabled=bool(quantized),
+                              row_group=int(quant_row_group)),
             metrics=MetricsConfig(path=metrics_path,
                                   echo=bool(metrics_echo),
                                   trace=bool(trace),

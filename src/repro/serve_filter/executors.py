@@ -79,6 +79,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import bloom, existence, lmbf
 from repro.kernels.bloom_query import ops as bloom_ops
+from repro.kernels.qr_embed import ops as qr_ops
 from repro.nn.spec import is_spec
 from repro.serve_filter.plan import GroupKey, PROBE_KERNEL, QueryPlan
 from repro.sharding import rules
@@ -157,10 +158,15 @@ class PlacedFilter:
     For local placement these are plain single-device arrays; for
     sharded placement the embedding tables / bitset are padded to
     divide the shard count and carry ``NamedSharding`` over the plan's
-    mesh axis.
+    mesh axis.  Under a quantized plan ``params`` is the int8 qparams
+    tree (tables + dense int8, per-row-group / per-channel fp32 scales)
+    and ``tau`` carries the tenant's calibrated serving threshold —
+    lowered by the admit-time logit margin so quantized scores never
+    flip an fp32-accepted key into a false negative.
     """
-    params: object              # model params pytree
+    params: object              # model params pytree (int8 qparams if quant)
     bits: jax.Array             # packed fixup bitset
+    tau: Optional[float] = None  # calibrated threshold override (quant)
 
 
 class Executor:
@@ -173,6 +179,8 @@ class Executor:
         raise NotImplementedError
 
     def __call__(self, placed: PlacedFilter, tau, raw_ids):
+        if placed.tau is not None:
+            tau = placed.tau
         out, _ = _timed_call(self, self.plan.describe(),
                              raw_ids.shape[0], placed.params,
                              placed.bits, tau, raw_ids)
@@ -250,12 +258,80 @@ def _sharded_tenant_predict(cfg, axis: str):
     return predict_fn
 
 
+def _sharded_quant_predict(cfg, axis: str, row_group: int):
+    """The quantized flavor of :func:`_sharded_tenant_predict`: int8
+    tables row-sharded, fp32 scale vectors replicated (they are tiny).
+    The owning shard dequantizes its row in place — ``q.astype(f32) *
+    scale``, the reference ``lmbf.q8_gather`` math — and the psum adds
+    exact zeros from everyone else, so quantized-sharded scores are
+    bit-identical to quantized-local.  Out-of-vocab ids wrap/NaN-fill
+    exactly like the local gather, applied post-psum."""
+
+    def predict_fn(params, cfg_, enc):
+        shard = jax.lax.axis_index(axis)
+        pieces, masks = [], []
+        for i, (rows, e) in enumerate(cfg_.column_encodings):
+            ids = enc[..., i]
+            if e is None:
+                oh = jax.nn.one_hot(ids, rows, dtype=cfg_.dtype)
+                pieces.append(jnp.where(shard == 0, oh,
+                                        jnp.zeros_like(oh)))
+                masks.append(None)
+            else:
+                q = params["embed"][f"col{i}"]          # (rows_local, e) i8
+                s = params["embed_scale"][f"col{i}"]    # (ng,) f32, repl
+                rl = q.shape[0]
+                wrapped = jnp.where(ids < 0, ids + rows, ids)
+                valid = (wrapped >= 0) & (wrapped < rows)
+                safe = jnp.clip(wrapped, 0, rows - 1)
+                lid = safe - shard * rl
+                ok = (lid >= 0) & (lid < rl)
+                g = (jnp.take(q, jnp.clip(lid, 0, rl - 1), axis=0)
+                     .astype(cfg_.dtype)
+                     * jnp.take(s, safe // row_group)[..., None]
+                     .astype(cfg_.dtype))
+                pieces.append(jnp.where(ok[..., None], g,
+                                        jnp.zeros_like(g)))
+                masks.append(valid)
+        x = jax.lax.psum(jnp.concatenate(pieces, axis=-1), axis)
+        segs, off = [], 0
+        for i, (rows, e) in enumerate(cfg_.column_encodings):
+            w = e if e is not None else rows
+            seg = x[..., off:off + w]
+            if masks[i] is not None:
+                seg = jnp.where(masks[i][..., None], seg,
+                                jnp.asarray(jnp.nan, cfg_.dtype))
+            segs.append(seg)
+            off += w
+        x = jnp.concatenate(segs, axis=-1)
+        dense = lmbf.dequantize_dense(params, cfg_.dtype)
+        return jax.nn.sigmoid(lmbf.mlp_head({"dense": dense}, cfg_, x))
+
+    return predict_fn
+
+
+def _quantize_index(plan: QueryPlan, index: existence.ExistenceIndex):
+    """Admit/reload-time quantization of one tenant: int8 qparams tree +
+    calibrated serving threshold.  Deterministic in (params, QuantConfig),
+    so grouped / ungrouped / sharded placements of the same index agree
+    exactly."""
+    qc = plan.quant
+    qp = lmbf.quantize_params(index.params, plan.cfg, qc.row_group)
+    tau_q = lmbf.calibrated_tau(
+        index.params, qp, plan.cfg, index.tau,
+        row_group=qc.row_group, n_samples=qc.calib_samples,
+        safety=qc.margin_safety, floor=qc.margin_floor)
+    return qp, tau_q
+
+
 # ------------------------------------------- single-tenant (grouping off)
 
 def _tenant_program(plan: QueryPlan, mesh: Optional[Mesh]):
     """One compiled program for one tenant's arrays, on either
     placement: the grouping-OFF leg of the composed core."""
     cfg, fp = plan.cfg, plan.fixup_params
+    quant = plan.quant.enabled
+    rg = plan.quant.row_group
 
     if not plan.placement.sharded:
         if plan.probe == PROBE_KERNEL:
@@ -266,16 +342,26 @@ def _tenant_program(plan: QueryPlan, mesh: Optional[Mesh]):
         else:
             probe = None
 
+        if quant:
+            # fused dequant: the program binds the int8 qparams tree and
+            # applies q.astype(f32) * scale inside the gather/GEMM body
+            def local_predict(p, cfg_, enc):
+                return lmbf.predict_q(p, cfg_, enc, row_group=rg)
+        else:
+            local_predict = None
+
         @jax.jit
         def fused(params, bits, tau, raw_ids):
             return existence.query_stages(params, cfg, tau, bits, fp,
-                                          raw_ids, probe_fn=probe)
+                                          raw_ids, probe_fn=probe,
+                                          predict_fn=local_predict)
 
         return fused
 
     axis = plan.placement.axis
     wl = plan.words_per_shard()
-    predict_fn = _sharded_tenant_predict(cfg, axis)
+    predict_fn = (_sharded_quant_predict(cfg, axis, rg) if quant
+                  else _sharded_tenant_predict(cfg, axis))
 
     if plan.probe == PROBE_KERNEL:
         def local_miss(bits_local, ids):
@@ -299,46 +385,72 @@ def _tenant_program(plan: QueryPlan, mesh: Optional[Mesh]):
                                       fp, raw_ids, probe_fn=probe_fn,
                                       predict_fn=predict_fn)
 
+    if quant:
+        # qparams tree: int8 tables row-sharded like their fp32
+        # counterparts; scale vectors and the (int8) dense stack are
+        # tiny, so they replicate (pytree-prefix specs)
+        param_specs = {"embed": P(axis, None), "embed_scale": P(),
+                       "dense": P(), "dense_scale": P()}
+    else:
+        param_specs = _tenant_param_specs(plan, mesh)
     return _shard_wrap(mesh, body,
-                       (_tenant_param_specs(plan, mesh), P(axis), P(), P()),
+                       (param_specs, P(axis), P(), P()),
                        (P(), P(), P()),
                        check_rep=plan.probe != PROBE_KERNEL)
 
 
-def _place_local(index: existence.ExistenceIndex) -> PlacedFilter:
-    return PlacedFilter(params=index.params,
-                        bits=jnp.asarray(index.fixup_filter.bits))
+def _place_local(plan: QueryPlan,
+                 index: existence.ExistenceIndex) -> PlacedFilter:
+    if not plan.quant.enabled:
+        return PlacedFilter(params=index.params,
+                            bits=jnp.asarray(index.fixup_filter.bits))
+    qp, tau_q = _quantize_index(plan, index)
+    return PlacedFilter(params=jax.tree.map(jnp.asarray, qp),
+                        bits=jnp.asarray(index.fixup_filter.bits),
+                        tau=tau_q)
 
 
 def _place_sharded(plan: QueryPlan, mesh: Mesh,
                    index: existence.ExistenceIndex) -> PlacedFilter:
     """Pad + scatter a fitted index onto the mesh: each shard gets its
     table-row and bitset-word slice directly (no full-size replica
-    materializes on any one device)."""
+    materializes on any one device).  Quantized plans scatter the int8
+    tables (4x fewer bytes per shard) and replicate the fp32 scale
+    vectors alongside the dense stack."""
     cfg = plan.cfg
     n = plan.placement.n_shards
     axis = plan.placement.axis
     shard1d = NamedSharding(mesh, P(axis))
     repl = NamedSharding(mesh, P())
+    quant = plan.quant.enabled
+    src, tau_q = ((index.params, None) if not quant
+                  else _quantize_index(plan, index))
 
     embed = {}
     for i, (rows, e) in enumerate(cfg.column_encodings):
         if e is None:
             continue
-        tbl = np.asarray(index.params["embed"][f"col{i}"])
+        tbl = np.asarray(src["embed"][f"col{i}"])
         rl = plan.table_rows_per_shard(rows)
         padded = np.zeros((rl * n,) + tbl.shape[1:], tbl.dtype)
         padded[:rows] = tbl
         embed[f"col{i}"] = jax.device_put(
             padded, NamedSharding(mesh, P(axis, None)))
     dense = {k: jax.device_put(np.asarray(v), repl)
-             for k, v in index.params["dense"].items()}
+             for k, v in src["dense"].items()}
+    params = {"embed": embed, "dense": dense}
+    if quant:
+        params["embed_scale"] = {k: jax.device_put(v, repl)
+                                 for k, v in src["embed_scale"].items()}
+        params["dense_scale"] = {k: jax.device_put(v, repl)
+                                 for k, v in src["dense_scale"].items()}
 
     bits = np.asarray(index.fixup_filter.bits)
     padded_bits = np.zeros(plan.words_per_shard() * n, np.uint32)
     padded_bits[:bits.size] = bits
-    return PlacedFilter(params={"embed": embed, "dense": dense},
-                        bits=jax.device_put(padded_bits, shard1d))
+    return PlacedFilter(params=params,
+                        bits=jax.device_put(padded_bits, shard1d),
+                        tau=tau_q)
 
 
 # ------------------------------------------------- grouped (grouping on)
@@ -369,12 +481,18 @@ def _grouped_program(key: GroupKey, mesh: Optional[Mesh]):
     n_hidden = len(cfg.hidden)
     sharded = key.placement.sharded
     axis = key.placement.axis
+    quant = key.quant.enabled
+    rg = key.quant.row_group
     # combined-embedding layout (must mirror PlanGroupArena's):
     # embedded columns' tables live back to back in one row-padded
     # matrix so ONE gather serves every subcolumn
     emb_cols = [(i, rows, e)
                 for i, (rows, e) in enumerate(cfg.column_encodings)
                 if e is not None]
+    # per-column scale-group counts: the arena's flat scale vector is
+    # laid out [column block][slot][row group], so a scale group never
+    # straddles a tenant boundary
+    sg_cols = [-(-rows // rg) for _, rows, _ in emb_cols]
 
     @jax.jit
     def gather_tiles(params, tile_idx):
@@ -383,15 +501,28 @@ def _grouped_program(key: GroupKey, mesh: Optional[Mesh]):
         scheduler-controlled live slots, so the bounds check is
         safely skipped. Dense stacks are replicated on every
         placement (tables + bitsets carry the bytes), so the tiles
-        are too."""
+        are too.  Quantized arenas dequantize HERE — int8 stacks stay
+        int8 in device memory; only the (tiny, memoized) gathered
+        tiles widen to fp32, via the same per-channel q * scale as
+        the ungrouped path."""
         tiles = {}
         for li in range(n_hidden):
-            tiles[f"w{li}"] = params["dense"][f"w{li}"] \
+            w = params["dense"][f"w{li}"] \
                 .at[tile_idx].get(mode="promise_in_bounds")
+            if quant:
+                s = params["dense_scale"][f"w{li}"] \
+                    .at[tile_idx].get(mode="promise_in_bounds")
+                w = w.astype(cfg.dtype) * s[:, None, :]
+            tiles[f"w{li}"] = w
             tiles[f"b{li}"] = params["dense"][f"b{li}"] \
                 .at[tile_idx].get(mode="promise_in_bounds")
-        tiles["w_out"] = params["dense"]["w_out"] \
+        w_out = params["dense"]["w_out"] \
             .at[tile_idx].get(mode="promise_in_bounds")[..., 0]
+        if quant:
+            s = params["dense_scale"]["w_out"] \
+                .at[tile_idx].get(mode="promise_in_bounds")  # (g, 1)
+            w_out = w_out.astype(cfg.dtype) * s
+        tiles["w_out"] = w_out
         tiles["b_out"] = params["dense"]["b_out"] \
             .at[tile_idx].get(mode="promise_in_bounds")[..., 0]
         return tiles
@@ -432,8 +563,8 @@ def _grouped_program(key: GroupKey, mesh: Optional[Mesh]):
                 # so their length IS the arena capacity — the combined
                 # matrix itself may carry shard-padding rows
                 cap = tau_vec.shape[0]
-                parts, prefix = [], 0
-                for i, rows, _ in emb_cols:
+                parts, sparts, prefix, sprefix = [], [], 0, 0
+                for (i, rows, _), ng in zip(emb_cols, sg_cols):
                     # reproduce the local path's jnp.take semantics
                     # EXACTLY — negative ids wrap pythonically,
                     # out-of-bounds ids become NaN rows — while
@@ -446,8 +577,24 @@ def _grouped_program(key: GroupKey, mesh: Optional[Mesh]):
                     safe = jnp.clip(wrapped, 0, rows - 1)
                     parts.append(cap * prefix + tenant_idx * rows
                                  + safe)
+                    if quant:
+                        sparts.append(cap * sprefix + tenant_idx * ng
+                                      + safe // rg)
                     prefix += rows
+                    sprefix += ng
                 idx = jnp.stack(parts, axis=-1)     # (n, C) global rows
+                sidx = jnp.stack(sparts, axis=-1) if quant else None
+
+                def dequant(g, shape):
+                    # fused dequant: the replicated flat scale vector
+                    # is slot-blocked, so sidx never reads a neighbor
+                    # tenant's scales; q.astype(f32) * scale is the
+                    # reference lmbf.q8_gather math, bit-identical on
+                    # every placement
+                    sc = p["embed_scale"].at[sidx.reshape(-1)] \
+                        .get(mode="promise_in_bounds").reshape(shape)
+                    return g.astype(cfg_.dtype) * sc[..., None]
+
                 if sharded:
                     # row-sharded combined matrix: every global row is
                     # owned by exactly one shard — masked local gather,
@@ -458,13 +605,24 @@ def _grouped_program(key: GroupKey, mesh: Optional[Mesh]):
                     g = flat.at[jnp.clip(local, 0, rl - 1).reshape(-1)] \
                         .get(mode="promise_in_bounds") \
                         .reshape(idx.shape[0], len(emb_cols), -1)
+                    if quant:
+                        g = dequant(g, idx.shape[:1] + (len(emb_cols),))
                     gathered = jax.lax.psum(
                         jnp.where(owned[..., None], g,
                                   jnp.zeros_like(g)), axis)
+                elif quant and key.probe == PROBE_KERNEL:
+                    # Pallas q8 gather: int8 rows never widen in HBM,
+                    # scales applied in-tile (same elementwise math)
+                    gathered = qr_ops.q8_embed_lookup(
+                        idx, sidx, flat, p["embed_scale"],
+                        block_n=key.block_n, interpret=key.interpret)
                 else:
                     gathered = flat.at[idx.reshape(-1)] \
                         .get(mode="promise_in_bounds") \
                         .reshape(idx.shape[0], len(emb_cols), -1)
+                    if quant:
+                        gathered = dequant(
+                            gathered, idx.shape[:1] + (len(emb_cols),))
             feats, gi = [], 0
             for i, (rows, e) in enumerate(cfg_.column_encodings):
                 if e is None:
@@ -527,7 +685,14 @@ def _grouped_program(key: GroupKey, mesh: Optional[Mesh]):
     if not sharded:
         return jax.jit(fused_body), gather_tiles
 
-    in_specs = ({"dense": P(), "embed_flat": P(axis, None)},  # params
+    if quant:
+        # int8 combined matrix row-sharded; flat scale vector + int8
+        # dense stacks (and their channel scales) replicated
+        param_specs = {"dense": P(), "dense_scale": P(),
+                       "embed_flat": P(axis, None), "embed_scale": P()}
+    else:
+        param_specs = {"dense": P(), "embed_flat": P(axis, None)}
+    in_specs = (param_specs,                                  # params
                 P(),                                          # tiles
                 P(axis),                                      # bits
                 P(), P(), P(), P(), P())
@@ -549,7 +714,7 @@ class LocalExecutor(Executor):
         self.fn = _tenant_program(plan, None)
 
     def place(self, index: existence.ExistenceIndex) -> PlacedFilter:
-        return _place_local(index)
+        return _place_local(self.plan, index)
 
 
 class ShardedExecutor(Executor):

@@ -68,6 +68,48 @@ class ProbeConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Compressed-arena storage mode for tenant state.
+
+    ``enabled=False`` (the default) keeps today's fp32 arenas.  When
+    enabled, embedding tables are stored int8 with one fp32 scale per
+    ``row_group`` rows and dense MLP weights int8 with one fp32 scale
+    per output channel (biases stay fp32, the fixup bitset is already
+    bit-packed).  Dequantization is fused into the query program —
+    ``q.astype(f32) * scale`` feeds the existing gather→GEMM body — so
+    the fp32 table never materializes in device memory.
+
+    Because int8 scores can flip at ``tau``, each tenant's serving
+    threshold is lowered by an empirical logit margin calibrated at
+    admit/reload time: ``margin_safety`` × the max |fp32 − int8| logit
+    gap over ``calib_samples`` deterministic draws from the tenant's own
+    encoded-id domain, plus ``margin_floor``.  Keys the fp32 model
+    accepted therefore stay model-positive under int8, and keys it
+    rejected remain covered by the bit-exact fixup probe — the
+    no-false-negative invariant survives quantization unconditionally.
+
+    Frozen and hashable: it rides in :class:`QueryPlan` and
+    :class:`GroupKey`, so quantized and fp32 tenants never share a
+    compiled program or an arena.
+    """
+    enabled: bool = False
+    row_group: int = 32        # embedding rows sharing one scale
+    calib_samples: int = 512   # tau-margin calibration sample size
+    margin_safety: float = 2.0  # multiplier on the observed max logit gap
+    margin_floor: float = 1e-3  # additive logit floor on the margin
+
+    def __post_init__(self):
+        if self.row_group < 1:
+            raise ValueError("row_group must be >= 1")
+        if self.calib_samples < 1:
+            raise ValueError("calib_samples must be >= 1")
+        if self.margin_safety < 1.0:
+            raise ValueError("margin_safety must be >= 1.0")
+        if self.margin_floor < 0.0:
+            raise ValueError("margin_floor must be >= 0.0")
+
+
+@dataclasses.dataclass(frozen=True)
 class Placement:
     """Where a tenant's arrays live.
 
@@ -100,6 +142,7 @@ class QueryPlan:
     interpret: Optional[bool] = None     # Pallas interpret override
     block_n: int = 2048                  # Pallas key-block size
     placement: Placement = Placement()
+    quant: QuantConfig = QuantConfig()
 
     def __post_init__(self):
         if self.probe not in (PROBE_JAX, PROBE_KERNEL):
@@ -114,9 +157,10 @@ class QueryPlan:
         probe flavor, plan width, fixup geometry, placement."""
         where = (f"sharded[{self.placement.axis}x{self.placement.n_shards}]"
                  if self.placement.sharded else "local")
+        q8 = "/q8" if self.quant.enabled else ""
         return (f"{self.probe}/{self.n_cols}c/"
                 f"m{self.fixup_params.m_bits}k{self.fixup_params.n_hashes}/"
-                f"{where}")
+                f"{where}{q8}")
 
     # ---- sharded-layout geometry (padding so slices divide evenly) ----
     def words_per_shard(self) -> int:
@@ -164,6 +208,7 @@ class GroupKey:
     block_n: int = 2048
     tile_rows: int = DEFAULT_TILE_ROWS
     placement: Placement = Placement()
+    quant: QuantConfig = QuantConfig()
 
     def __post_init__(self):
         if self.tile_rows < 1:
@@ -173,8 +218,9 @@ class GroupKey:
         """Short human label for telemetry (compile events, traces)."""
         where = (f"sharded[{self.placement.axis}x{self.placement.n_shards}]"
                  if self.placement.sharded else "local")
+        q8 = "/q8" if self.quant.enabled else ""
         return (f"group:{self.probe}/{self.cfg.plan.n_columns}c/"
-                f"k{self.n_hashes}/t{self.tile_rows}/{where}")
+                f"k{self.n_hashes}/t{self.tile_rows}/{where}{q8}")
 
 
 def group_key(plan: QueryPlan,
@@ -187,14 +233,15 @@ def group_key(plan: QueryPlan,
     return GroupKey(cfg=plan.cfg, n_hashes=plan.fixup_params.n_hashes,
                     probe=plan.probe, interpret=plan.interpret,
                     block_n=plan.block_n, tile_rows=int(tile_rows),
-                    placement=plan.placement)
+                    placement=plan.placement, quant=plan.quant)
 
 
 def plan_query(cfg: lmbf.LMBFConfig, fixup_params: bloom.BloomParams, *,
                mesh: Optional[Mesh] = None, shard_axis: str = "data",
                probe: Optional[ProbeConfig] = None,
                use_kernel: bool = False, interpret: Optional[bool] = None,
-               block_n: int = 2048) -> QueryPlan:
+               block_n: int = 2048,
+               quant: Optional[QuantConfig] = None) -> QueryPlan:
     """Resolve config + fixup params + target mesh into a QueryPlan.
 
     Sharded placement is chosen iff ``mesh`` is given and carries
@@ -217,4 +264,5 @@ def plan_query(cfg: lmbf.LMBFConfig, fixup_params: bloom.BloomParams, *,
     return QueryPlan(cfg=cfg, fixup_params=fixup_params,
                      probe=PROBE_KERNEL if probe.use_kernel else PROBE_JAX,
                      interpret=probe.interpret, block_n=int(probe.block_n),
-                     placement=placement)
+                     placement=placement,
+                     quant=quant if quant is not None else QuantConfig())

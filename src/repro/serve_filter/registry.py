@@ -62,8 +62,8 @@ from repro.serve_filter.arena import PlanGroupArena
 from repro.serve_filter.config import (GroupingConfig, LIFECYCLE_TRANSITIONS,
                                        PlacementConfig, TenantSpec,
                                        TenantState)
-from repro.serve_filter.plan import (GroupKey, ProbeConfig, QueryPlan,
-                                     group_key, plan_query)
+from repro.serve_filter.plan import (GroupKey, ProbeConfig, QuantConfig,
+                                     QueryPlan, group_key, plan_query)
 
 # hook signature: (tenant, from_state_or_None, to_state)
 TransitionHook = Callable[[str, Optional[TenantState], TenantState], None]
@@ -139,6 +139,14 @@ class FilterRegistry:
     (``grouping.placement="local"`` keeps sharded tenants out of
     arenas instead).
 
+    ``quant.enabled`` turns on compressed storage for every admitted
+    tenant: the plan (and so the group key) carries the
+    :class:`~repro.serve_filter.plan.QuantConfig`, quantization +
+    threshold calibration happen once at admit/reload time, and the
+    placed arrays / arena slots hold int8 payloads with fused dequant
+    in the compiled programs. Quantized and fp32 tenants never share a
+    program or an arena (the config is part of both cache keys).
+
     ``budget_mb`` counts NOMINAL per-filter sizes (weights + packed
     bitset). A grouped arena's real footprint carries bounded overhead
     on top (e_max-padded embedding columns, <= 2x slot headroom after
@@ -151,12 +159,14 @@ class FilterRegistry:
                  probe: ProbeConfig = ProbeConfig(),
                  placement: PlacementConfig = PlacementConfig(),
                  grouping: GroupingConfig = GroupingConfig(),
+                 quant: QuantConfig = QuantConfig(),
                  on_transition: Optional[TransitionHook] = None,
                  tracer: Optional[Tracer] = None):
         self.budget_mb = budget_mb
         self.probe = probe
         self.placement = placement
         self.grouping = grouping
+        self.quant = quant
         self.on_transition = on_transition
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self._entries: Dict[str, FilterEntry] = {}
@@ -237,7 +247,7 @@ class FilterRegistry:
         return plan_query(index.cfg, index.fixup_filter.params,
                           mesh=self.placement.mesh,
                           shard_axis=self.placement.shard_axis,
-                          probe=self.probe)
+                          probe=self.probe, quant=self.quant)
 
     def admit(self, spec: TenantSpec) -> FilterEntry:
         """Drive a tenant spec through ADMITTED -> HYDRATING -> SERVING.

@@ -196,6 +196,7 @@ class FilterServer:
         self.registry = FilterRegistry(
             config.budget_mb, probe=config.probe,
             placement=config.placement, grouping=config.grouping,
+            quant=config.quant,
             on_transition=self._on_transition, tracer=self.tracer)
         self.scheduler = QueryScheduler(
             self.registry, buckets=config.buckets.sizes, stats=self.stats,
@@ -298,6 +299,15 @@ class FilterServer:
         return self.stats.tenant_snapshot(tenant)
 
     def stats_snapshot(self) -> Dict[str, float]:
+        # refresh the per-dtype arena membership gauges BEFORE the
+        # snapshot so they ride along in the same flat dict
+        n_int8 = n_fp32 = 0
+        for a in self.registry.groups.values():
+            if a.key.quant.enabled:
+                n_int8 += len(a)
+            else:
+                n_fp32 += len(a)
+        self.stats.set_arena_membership(n_int8, n_fp32)
         snap = self.stats.snapshot()
         snap["registered_filters"] = float(len(self.registry))
         snap["registry_mb"] = self.registry.total_mb
@@ -336,6 +346,16 @@ class FilterServer:
                                self.registry.groups.values()) / 2 ** 20
         snap["arena_host_mb"] = sum(a.nbytes for a in
                                     self.registry.groups.values()) / 2 ** 20
+        # compressed-arena gauges: device footprint of the QUANTIZED
+        # arenas alone (subset of arena_mb), and fleet density — live
+        # grouped tenants per GB of arena device memory, the number the
+        # compression tentpole moves (ISSUE 7 / the paper's point:
+        # smaller learned filters => more tenants per device)
+        snap["arena_quant_mb"] = sum(
+            a.device_nbytes for a in self.registry.groups.values()
+            if a.key.quant.enabled) / 2 ** 20
+        arena_gb = snap["arena_mb"] / 1024.0
+        snap["tenants_per_gb"] = (live / arena_gb) if arena_gb else 0.0
         return snap
 
     def dump_trace(self, path: Optional[str] = None) -> str:

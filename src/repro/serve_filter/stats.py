@@ -233,6 +233,11 @@ class ServeStats:
             {s: 0 for s in TenantState}
         self.lifecycle_events: collections.deque = \
             collections.deque(maxlen=256)    # (tenant, frm, to)
+        # live arena membership by storage dtype (set by the server on
+        # each snapshot: how many grouped tenants sit in int8 vs fp32
+        # arenas right now — gauges, not cumulative counters)
+        self.arena_tenants_int8 = 0
+        self.arena_tenants_fp32 = 0
 
     # ---------------------------------------------------------- recording
     def tenant(self, name: str) -> TenantStats:
@@ -308,6 +313,14 @@ class ServeStats:
         self.totals.reloads += 1
         self.reload_latency.record(latency_s)
 
+    def set_arena_membership(self, int8_tenants: int,
+                             fp32_tenants: int) -> None:
+        """Record how many live grouped tenants sit in quantized (int8)
+        vs full-precision (fp32) arenas — per-dtype occupancy gauges
+        refreshed by the server before each snapshot."""
+        self.arena_tenants_int8 = int(int8_tenants)
+        self.arena_tenants_fp32 = int(fp32_tenants)
+
     def reset_tenant_baseline(self, tenant: str) -> None:
         """Restart a tenant's drift baseline (called on hot-reload)."""
         ts = self.tenants.get(tenant)
@@ -351,6 +364,8 @@ class ServeStats:
             "overlapped_batches": float(t.overlapped),
             "grouped_batches": float(t.grouped),
             "reloads": float(t.reloads),
+            "arena_tenants_int8": float(self.arena_tenants_int8),
+            "arena_tenants_fp32": float(self.arena_tenants_fp32),
             "max_drift_score": max(
                 (ts.drift_score for ts in self.tenants.values()),
                 default=0.0),

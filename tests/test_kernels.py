@@ -6,7 +6,8 @@ import pytest
 from repro.core import bloom
 from repro.kernels.bloom_query import bloom_query, bloom_query_ref
 from repro.kernels.flash_attention import attention_ref, flash_attention
-from repro.kernels.qr_embed import qr_embed, qr_embed_ref
+from repro.kernels.qr_embed import (q8_embed_lookup, q8_gather_ref,
+                                    qr_embed, qr_embed_ref)
 
 
 # ------------------------------------------------------------- qr_embed
@@ -43,6 +44,49 @@ def test_qr_embed_nd_ids(rng):
     ref = qr_embed_ref(ids.reshape(-1), tq, tr, divisor=dv)
     np.testing.assert_allclose(np.asarray(out).reshape(-1, d),
                                np.asarray(ref), rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------------ q8_gather
+
+@pytest.mark.parametrize("rows,d,n,rg", [
+    (4096, 8, 1000, 32),
+    (3527, 16, 4096, 32),        # the bench fleet's combined-arena shape
+    (900, 4, 777, 64),           # non-multiple-of-block n, coarse groups
+    (50, 2, 64, 32),             # rows < 2 * row_group
+])
+def test_q8_gather_bit_exact(rng, rows, d, n, rg):
+    """The Pallas q8 gather == the jnp oracle BIT-exact: both apply
+    the identical elementwise dequant (int8 -> f32 -> * scale), the
+    invariant the grouped kernel probe's bit-identity rests on."""
+    table = jnp.asarray(rng.integers(-127, 128, size=(rows, d)),
+                        jnp.int8)
+    ng = -(-rows // rg)
+    scales = jnp.asarray(rng.uniform(1e-3, 0.1, size=(ng,)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, rows, size=(n,)), jnp.int32)
+    sidx = idx // rg
+    out = q8_embed_lookup(idx, sidx, table, scales, block_n=256,
+                          interpret=True)
+    ref = q8_gather_ref(idx, sidx, table, scales)
+    assert out.dtype == jnp.float32 and out.shape == (n, d)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_q8_gather_nd_ids_and_lmbf_parity(rng):
+    """nd index shapes flatten/reshape correctly, and on valid ids the
+    kernel matches ``lmbf.q8_gather`` (the per-tenant dequant path)
+    bit-for-bit."""
+    from repro.core import lmbf
+    rows, d, rg = 1200, 8, 32
+    table = jnp.asarray(rng.integers(-127, 128, size=(rows, d)),
+                        jnp.int8)
+    ng = -(-rows // rg)
+    scales = jnp.asarray(rng.uniform(1e-3, 0.1, size=(ng,)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, rows, size=(5, 7)), jnp.int32)
+    out = q8_embed_lookup(ids, ids // rg, table, scales, block_n=16,
+                          interpret=True)
+    assert out.shape == (5, 7, d)
+    want = lmbf.q8_gather(table, scales, ids, rows, rg, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
 
 
 # ---------------------------------------------------------- bloom_query

@@ -81,6 +81,9 @@ SNAPSHOT_KEYS = {
     "arena_holes", "arena_dead_words", "arena_slot_occupancy",
     "arena_compactions", "arena_growths", "arena_mb", "arena_host_mb",
     "trace_events",
+    # compressed arenas (quantized tenant state)
+    "arena_quant_mb", "tenants_per_gb",
+    "arena_tenants_int8", "arena_tenants_fp32",
 }
 
 TENANT_KEYS = {
