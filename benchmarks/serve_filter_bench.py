@@ -34,9 +34,20 @@ Tracks the batched-query serving trajectory of ``repro.serve_filter``:
   arena shrinks >= 3x (>= 2x in smoke) at matched answers: quantized
   answers are cross-checked grouped == ungrouped and zero-false-
   negative on indexed rows,
+* ``--chaos`` runs the FAULT-TOLERANCE scenario instead of the
+  throughput sweep: a grouped many-tenant fleet hydrated from real
+  checkpoints under a seeded ``FaultConfig`` storm (checkpoint-read /
+  hydrate / dispatch faults) with hydration retry + degraded-mode
+  fallback, deadline pressure (tight ``deadline_ms`` on part of the
+  traffic) and ``max_queued_rows`` backpressure. The storm quiesces
+  (``max_faults``), the injector is suspended, every tenant is
+  re-hydrated to SERVING, and a post-chaos verification tick asserts
+  grouped == ungrouped bit-identical with zero false negatives; the
+  JSON rows carry the shed/retry/deadline/degraded counters,
 * ``--smoke`` is the CI fast path: a few hundred queries through the
   many-tenant scenario, grouped AND ungrouped, with a bit-equality
-  cross-check instead of throughput assertions,
+  cross-check instead of throughput assertions (with ``--chaos``, a
+  small-fleet chaos run),
 * the anti-baseline: a per-query Python loop over
   ``ExistenceIndex.query`` — the fused jitted path must beat it by
   >= 10x (asserted when run as a script).
@@ -51,7 +62,7 @@ trajectories stay comparable across boxes.
 Usage: PYTHONPATH=src python benchmarks/serve_filter_bench.py
            [--executor {local,sharded}] [--shards N] [--async-dispatch]
            [--tenants N] [--rows-per-request K] [--grouped] [--quant]
-           [--reload-every N] [--smoke] [--json-out PATH]
+           [--reload-every N] [--chaos] [--smoke] [--json-out PATH]
 """
 from __future__ import annotations
 
@@ -93,6 +104,13 @@ def make_parser() -> argparse.ArgumentParser:
                     help="many-tenant churn: hot-reload one tenant via "
                          "TenantHandle.reload every N fleet ticks "
                          "(0 disables)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the fault-tolerance scenario: grouped "
+                         "fleet hydrated from checkpoints under a "
+                         "seeded fault storm with retries, degraded "
+                         "mode, deadlines and backpressure; post-chaos "
+                         "recovery is verified grouped == ungrouped "
+                         "bit-identical")
     ap.add_argument("--smoke", action="store_true",
                     help="CI fast path: tiny many-tenant run (grouped + "
                          "ungrouped, bit-equality checked), no classic "
@@ -120,8 +138,12 @@ import numpy as np                                    # noqa: E402
 
 from repro.core import existence                      # noqa: E402
 from repro.data import tuples                         # noqa: E402
-from repro.serve_filter import (FilterServer,         # noqa: E402
-                                ServeConfig, TenantSpec)
+from repro.serve_filter import (FaultConfig,          # noqa: E402
+                                FilterServeError, FilterServer,
+                                Overloaded, ReliabilityConfig,
+                                ServeConfig, TenantSpec, TenantState)
+from repro.serve_filter.config import (               # noqa: E402
+    GroupingConfig, LIFECYCLE_TRANSITIONS, PlacementConfig)
 
 BUCKETS = (64, 256, 1024)
 N_QUERIES = 4096            # per tenant per bucket measurement
@@ -424,6 +446,155 @@ def run_many_tenant_scenario(*, tenants: int, rows_per_request: int,
     return rows
 
 
+def run_chaos_scenario(*, tenants: int, rows_per_request: int,
+                       steps: int, mesh=None, seed: int = 29,
+                       rounds: int = 8, smoke: bool = False
+                       ) -> List[dict]:
+    """The fault-tolerance scenario: a many-tenant fleet hydrated from
+    REAL checkpoints under a seeded fault storm, with retries, degraded
+    mode, deadline pressure and backpressure — then recovery.
+
+    Per mode (ungrouped, grouped): every tenant is admitted from its
+    on-disk checkpoint while ``checkpoint_read``/``hydrate``/
+    ``dispatch`` faults fire (hydration retries with seeded backoff;
+    exhaustion falls back to DEGRADED backup-only serving). Traffic
+    rounds mix tight ``deadline_ms`` requests (some expire while the
+    storm slows the pump) against a ``max_queued_rows`` bound (whole
+    submissions shed with ``Overloaded``), with mid-traffic reloads
+    under injection. ``max_faults`` quiesces the storm; the injector is
+    then suspended, every tenant re-hydrates to SERVING, and a
+    verification tick must answer bit-identically across modes with
+    zero false negatives — chaos may cost latency and epochs, never
+    correctness. The JSON rows carry the reliability counters."""
+    import shutil
+    import tempfile
+
+    k = rows_per_request
+    fleet, _ = fit_fleet(tenants, steps=steps)
+    ckroot = tempfile.mkdtemp(prefix="chaos_ckpt_")
+    for name, (_, idx) in fleet.items():
+        existence.save_index(os.path.join(ckroot, name), idx, step=0)
+    pools = {name: _query_pool(ds, max(k * 4, 64), seed=3)
+             for name, (ds, _) in fleet.items()}
+    names = sorted(fleet)
+    rows, answers = [], {}
+    try:
+        for grouped in (False, True):
+            srv = FilterServer(ServeConfig(
+                placement=PlacementConfig(mesh=mesh),
+                grouping=GroupingConfig(enabled=grouped),
+                faults=FaultConfig(
+                    enabled=True, seed=seed,
+                    rates={"checkpoint_read": 0.25, "hydrate": 0.1,
+                           "dispatch": 0.2},
+                    max_faults=20 if smoke else 120),
+                reliability=ReliabilityConfig(
+                    retries=2, backoff_base_s=0.001, backoff_mult=2.0,
+                    backoff_cap_s=0.01, jitter=0.1, degraded=True,
+                    max_queued_rows=max(k + 1, tenants * k // 2))))
+            shed_calls = 0
+            for name in names:
+                try:
+                    srv.admit(TenantSpec(name, checkpoint=ckroot))
+                except FilterServeError:
+                    pass        # exhausted w/o backup: re-admitted below
+            for rnd in range(rounds):
+                for i, name in enumerate(names):
+                    if srv.registry.state_of(name) is TenantState.RETIRED:
+                        continue
+                    # deadline pressure on a third of the traffic: with
+                    # dispatch faults requeueing batches, queue waits
+                    # stretch and some of these expire (typed, counted)
+                    ddl = 2.0 if (rnd + i) % 3 == 0 else None
+                    try:
+                        srv.submit(name, pools[name][:k],
+                                   deadline_ms=ddl)
+                    except Overloaded:
+                        shed_calls += 1
+                if rnd % 2 == 1:    # reload under injection, mid-queue
+                    try:
+                        srv.admit(TenantSpec(names[rnd % len(names)],
+                                             checkpoint=ckroot))
+                    except FilterServeError:
+                        pass
+                srv.run_until_drained()
+            # the storm never wedges a tenant outside the legal states,
+            # and every recorded trail walks the lifecycle graph
+            degraded_peak = 0
+            for name in names:
+                st = srv.registry.state_of(name)
+                assert st in (TenantState.SERVING, TenantState.DEGRADED,
+                              TenantState.RETIRED), (name, st)
+                degraded_peak += st is TenantState.DEGRADED
+                for frm, to in srv.stats.transitions_of(name):
+                    assert to in LIFECYCLE_TRANSITIONS[frm], \
+                        f"{name}: illegal {frm} -> {to}"
+            # recovery: storm off, every tenant back to SERVING
+            srv.faults.suspend()
+            for name in names:
+                srv.admit(TenantSpec(name, checkpoint=ckroot))
+                assert (srv.registry.state_of(name)
+                        is TenantState.SERVING), name
+            # verification tick, paced under the still-active
+            # max_queued_rows bound (one tenant in the queue at a time)
+            got = {}
+            for name in names:
+                fut = srv.submit(name, pools[name][:k])
+                got[name] = np.asarray(fut.result()).copy()
+            answers[grouped] = got
+            snap = srv.stats_snapshot()
+            rows.append({
+                "scenario": "chaos",
+                "tenants": len(fleet),
+                "rows_per_request": k,
+                "grouped": grouped,
+                "rounds": rounds,
+                "fault_seed": seed,
+                "faults_injected": srv.faults.injected,
+                "faults_by_site": {s: n for s, n
+                                   in srv.faults.by_site.items() if n},
+                "dispatch_faults": srv.scheduler.dispatch_faults,
+                "hydration_retries": int(snap["hydration_retries"]),
+                "checksum_failures": int(snap["checksum_failures"]),
+                "deadline_expired": int(snap["deadline_expired"]),
+                "shed_rows": int(snap["shed_rows"]),
+                "shed_calls": shed_calls,
+                "degraded_peak": degraded_peak,
+                "lifecycle_degraded": int(snap["lifecycle_degraded"]),
+                "queries": int(snap["queries"]),
+                "reloads": int(snap["reloads"]),
+            })
+            srv.close()
+        for name in names:      # post-chaos: grouped == ungrouped, no FN
+            np.testing.assert_array_equal(
+                answers[True][name], answers[False][name],
+                err_msg=f"post-chaos grouped != ungrouped for {name}")
+            assert np.asarray(answers[True][name]).all(), \
+                f"post-chaos false negative on indexed rows: {name}"
+        for row in rows:
+            row["post_chaos_bitequal"] = True
+        assert any(r["faults_injected"] > 0 for r in rows), \
+            "chaos scenario injected nothing — storm misconfigured"
+        assert any(r["hydration_retries"] > 0 for r in rows), \
+            "chaos scenario never exercised hydration retry"
+    finally:
+        shutil.rmtree(ckroot, ignore_errors=True)
+    return rows
+
+
+def _print_chaos(rows: List[dict]) -> None:
+    hdr = f"{'mode':>10} {'tenants':>7} {'faults':>7} {'retries':>8} " \
+          f"{'deadline':>9} {'shed':>6} {'degraded':>9} {'queries':>8} " \
+          f"{'bitequal':>9}"
+    print(hdr)
+    for r in rows:
+        mode = "grouped" if r["grouped"] else "ungrouped"
+        print(f"{mode:>10} {r['tenants']:>7} {r['faults_injected']:>7} "
+              f"{r['hydration_retries']:>8} {r['deadline_expired']:>9} "
+              f"{r['shed_rows']:>6} {r['lifecycle_degraded']:>9} "
+              f"{r['queries']:>8} {str(r['post_chaos_bitequal']):>9}")
+
+
 def _check_answers(modes, answers: Dict[tuple, dict],
                    grouped: bool) -> None:
     """Cross-mode answer invariants on a verification tick: grouped
@@ -584,6 +755,24 @@ def _check_quant_rows(rows: List[dict], *, smoke: bool) -> None:
 def main():
     rows: List[dict] = []
     mesh = _serve_mesh(_ARGS.executor, _ARGS.shards)
+    if _ARGS.chaos:
+        chaos = run_chaos_scenario(
+            tenants=_ARGS.tenants or (8 if _ARGS.smoke else 64),
+            rows_per_request=_ARGS.rows_per_request,
+            steps=min(_ARGS.steps, 10) if _ARGS.smoke else _ARGS.steps,
+            mesh=mesh, rounds=4 if _ARGS.smoke else 8,
+            smoke=_ARGS.smoke)
+        print("chaos: seeded fault storm + recovery "
+              + ("(sharded arenas) " if mesh is not None else "")
+              + "(post-chaos grouped verified bit-equal to ungrouped, "
+              "zero FN)")
+        _print_chaos(chaos)
+        env = _env_fields(mesh)
+        for r in chaos:
+            for k, v in env.items():
+                r.setdefault(k, v)
+        record(chaos, _ARGS.json_out)
+        return chaos
     if _ARGS.smoke:
         # CI fast signal: tiny fleet, few hundred queries through BOTH
         # paths, grouped answers cross-checked bit-equal to ungrouped

@@ -106,3 +106,39 @@ snap_q = srv_q.stats_snapshot()
 print(f"compressed arena: {snap_q['arena_quant_mb']:.3f}MB int8 on "
       f"device, tenants_per_gb={snap_q['tenants_per_gb']:.0f}, "
       f"no false negatives ✓")
+
+# 9. Reliability: the same server under failure. FaultConfig is a
+#    deterministic seeded injector (for tests / chaos drills);
+#    ReliabilityConfig gives hydration retry with capped exponential
+#    backoff, degraded-mode fallback, per-request queue-wait deadlines
+#    and a queued-rows backpressure bound. Here hydration fails once
+#    (injected), the retry recovers it, an expired deadline and an
+#    oversized burst come back as TYPED errors — callers can tell
+#    "shed" from "wrong answer".
+import time
+
+from repro.serve_filter import (DeadlineExceeded, FaultConfig, Overloaded,
+                                ReliabilityConfig)
+
+srv_r = FilterServer(ServeConfig(
+    buckets=BucketConfig((256, 1024)),
+    faults=FaultConfig(enabled=True, seed=7, rates={"hydrate": 1.0},
+                       max_faults=1),
+    reliability=ReliabilityConfig(retries=2, backoff_base_s=0.01,
+                                  degraded=True, max_queued_rows=2048)))
+hr = srv_r.admit(TenantSpec("quickstart", index=refit))   # survives 1 fault
+assert hr.query(ds.records[:1000]).all()
+fut = srv_r.submit("quickstart", ds.records[:256], deadline_ms=0.5)
+time.sleep(0.002)
+srv_r.step()                                   # expires in-queue, typed
+assert isinstance(fut.exception(), DeadlineExceeded)
+try:
+    srv_r.submit("quickstart", ds.records[:4096])          # > 2048 queued
+except Overloaded as exc:
+    print(f"backpressure: {exc}")
+snap_r = srv_r.stats_snapshot()
+print(f"reliability: hydration_retries={snap_r['hydration_retries']:.0f} "
+      f"deadline_expired={snap_r['deadline_expired']:.0f} "
+      f"shed_rows={snap_r['shed_rows']:.0f} "
+      f"state={hr.state.value} (typed errors, zero-FN preserved)")
+srv_r.close()

@@ -1,2 +1,3 @@
-from repro.checkpoint.manager import (CheckpointManager, latest_step,
-                                      restore, save)
+from repro.checkpoint.manager import (CheckpointCorruption,
+                                      CheckpointManager, latest_step,
+                                      restore, restore_arrays, save)

@@ -10,6 +10,12 @@ Design (mirrors production Orbax-style managers, self-contained here):
 * **Atomicity** — writes go to ``step_<N>.tmp/`` and are ``os.rename``d
   into place (rename is atomic on POSIX); a crashed writer never corrupts
   the latest good checkpoint. A ``COMMIT`` marker file seals the step.
+  Inside the temp dir each file is itself written to a ``.part`` path and
+  ``os.replace``d, so even a crash mid-file never leaves a torn
+  ``arrays.npz`` under a name a reader could open.
+* **Integrity** — every array's CRC32 (of the stored bytes) is recorded
+  in ``meta.json`` and verified on load; a flipped bit or truncated
+  file raises :class:`CheckpointCorruption` instead of being served.
 * **Keep-N GC** — older steps are deleted after a successful commit.
 * **Async** — ``save(..., blocking=False)`` snapshots to host memory
   (device_get) synchronously — cheap — and writes on a daemon thread, so
@@ -24,11 +30,17 @@ import os
 import shutil
 import threading
 import time
-from typing import Any, Callable, Dict, Optional
+import zipfile
+import zlib
+from typing import Any, Callable, Dict, Optional, Sequence
 
 import jax
 import ml_dtypes
 import numpy as np
+
+
+class CheckpointCorruption(ValueError):
+    """A stored array failed its CRC32, or a step file is unreadable."""
 
 # numpy's savez cannot round-trip ml_dtypes (bfloat16, fp8): arrays are
 # stored as same-width unsigned-int views and re-viewed on load using the
@@ -65,6 +77,21 @@ def _path_keys(tree):
     return [jax.tree_util.keystr(p) for p, _ in flat]
 
 
+def _atomic_write(path: str, emit: Callable):
+    """Write ``path`` via a ``.part`` sibling + ``os.replace``.
+
+    ``emit`` receives an OPEN binary file object — np.savez must be
+    handed a file object here, because given a string path without the
+    ``.npz`` suffix it silently appends one.
+    """
+    part = path + ".part"
+    with open(part, "wb") as f:
+        emit(f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(part, path)
+
+
 def save(directory: str, step: int, tree, *, extra: Optional[Dict] = None,
          keep: int = 3, blocking: bool = True,
          _on_done: Optional[Callable] = None) -> threading.Thread | None:
@@ -76,11 +103,13 @@ def save(directory: str, step: int, tree, *, extra: Optional[Dict] = None,
     flat, _ = _flatten_with_paths(tree)
     # snapshot to host synchronously — the only part that must pause training
     host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    storable = {k: _to_storable(v) for k, v in host.items()}
     meta = {
         "step": int(step),
         "time": time.time(),
         "extra": extra or {},
-        "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+        "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype),
+                       "crc32": zlib.crc32(storable[k].tobytes())}
                    for k, v in host.items()},
     }
 
@@ -90,13 +119,13 @@ def save(directory: str, step: int, tree, *, extra: Optional[Dict] = None,
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
-        npz_path = os.path.join(tmp, "arrays.npz")
-        np.savez(npz_path, **{k.replace("/", "|"): _to_storable(v)
-                              for k, v in host.items()})
-        with open(os.path.join(tmp, "meta.json"), "w") as f:
-            json.dump(meta, f)
-        with open(os.path.join(tmp, "COMMIT"), "w") as f:
-            f.write(str(step))
+        _atomic_write(os.path.join(tmp, "arrays.npz"),
+                      lambda f: np.savez(f, **{k.replace("/", "|"): v
+                                               for k, v in storable.items()}))
+        _atomic_write(os.path.join(tmp, "meta.json"),
+                      lambda f: f.write(json.dumps(meta).encode()))
+        _atomic_write(os.path.join(tmp, "COMMIT"),
+                      lambda f: f.write(str(step).encode()))
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
@@ -148,14 +177,7 @@ def restore(directory: str, step: int, abstract_tree, *,
     each leaf onto the *current* mesh — a checkpoint saved on a 2-device
     mesh restores seamlessly onto 4 devices (reshard-on-load).
     """
-    path = os.path.join(directory, f"step_{step}")
-    meta = read_meta(directory, step)
-    with np.load(os.path.join(path, "arrays.npz")) as z:
-        host = {}
-        for k in z.files:
-            key = k.replace("|", "/")
-            host[key] = _from_storable(
-                z[k], meta["arrays"][key]["dtype"])
+    host = restore_arrays(directory, step)
     keys = _path_keys(abstract_tree)
     leaves, treedef = jax.tree_util.tree_flatten(abstract_tree)
     sh_leaves = (jax.tree_util.tree_leaves(shardings)
@@ -172,6 +194,47 @@ def restore(directory: str, step: int, abstract_tree, *,
         else:
             out.append(jax.numpy.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def restore_arrays(directory: str, step: int, *, verify: bool = True,
+                   only: Optional[Sequence[str]] = None) -> Dict[str, np.ndarray]:
+    """Load (a subset of) a step's host arrays, CRC-verified.
+
+    ``only`` limits the read to the named logical keys — the degraded
+    serving path uses this to pull just a fixup bitset out of an index
+    checkpoint whose model arrays may be unreadable. Checksums recorded
+    by newer writers are verified (``verify=False`` skips); checkpoints
+    predating checksums load unverified.
+    """
+    path = os.path.join(directory, f"step_{step}")
+    meta = read_meta(directory, step)
+    want = set(only) if only is not None else None
+    host = {}
+    try:
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            for k in z.files:
+                key = k.replace("|", "/")
+                if want is not None and key not in want:
+                    continue
+                raw = z[k]
+                crc = meta["arrays"].get(key, {}).get("crc32")
+                if verify and crc is not None and \
+                        zlib.crc32(raw.tobytes()) != crc:
+                    raise CheckpointCorruption(
+                        f"array {key!r} in {path} failed its CRC32 "
+                        f"(stored {crc})")
+                host[key] = _from_storable(
+                    raw, meta["arrays"][key]["dtype"])
+    except (OSError, zipfile.BadZipFile, zlib.error, ValueError,
+            KeyError) as e:
+        if isinstance(e, CheckpointCorruption):
+            raise
+        raise CheckpointCorruption(
+            f"unreadable checkpoint step {step} in {directory}: {e}") from e
+    if want is not None and want - set(host):
+        raise CheckpointCorruption(
+            f"checkpoint step {step} missing arrays {sorted(want - set(host))}")
+    return host
 
 
 def read_meta(directory: str, step: int) -> Dict:

@@ -263,3 +263,32 @@ def load_index(directory: str, step: Optional[int] = None) -> ExistenceIndex:
         n_false_negatives=int(meta["fixup"]["n_false_negatives"]))
     return ExistenceIndex(cfg=cfg, params=tree["params"], fixup_filter=fx,
                           tau=float(meta["tau"]), train_log=meta["train_log"])
+
+
+def load_fixup_only(directory: str, step: Optional[int] = None
+                    ) -> Tuple[lmbf.LMBFConfig, fixup.FixupFilter]:
+    """Load ONLY the fixup/backup Bloom structure of a saved index.
+
+    The degraded serving path: when the model arrays are unreadable
+    (corruption, repeated transient failures) the fixup bitset alone
+    still answers conservatively — it is a selective, CRC-verified read
+    of the one ``fixup_bits`` array, so a fault confined to the model
+    payload does not take the tenant down with it."""
+    if step is None:
+        step = ckpt.latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    meta = ckpt.read_meta(directory, step)["extra"]
+    if meta.get("kind") not in _INDEX_KINDS:
+        raise ValueError(f"{directory} step {step} is not an existence "
+                         f"index checkpoint: {meta.get('kind')!r}")
+    cfg = config_from_meta(meta)
+    bp = bloom.BloomParams(m_bits=int(meta["fixup"]["m_bits"]),
+                           n_hashes=int(meta["fixup"]["n_hashes"]))
+    key = "['fixup_bits']"   # the keystr path of the saved tree leaf
+    host = ckpt.restore_arrays(directory, step, only=(key,))
+    bits = np.ascontiguousarray(host[key].astype(np.uint32))
+    fx = fixup.FixupFilter(
+        params=bp, bits=bits,
+        n_false_negatives=int(meta["fixup"]["n_false_negatives"]))
+    return cfg, fx

@@ -60,6 +60,18 @@ Module map
     ONCE at admit/reload, and the executors fuse dequant into the
     query body (no fp32 table ever materializes).
 
+``faults``
+    The reliability vocabulary (PR 8): :class:`FaultConfig` — a
+    deterministic seeded fault injector (:class:`FaultInjector`) with
+    sites threaded through checkpoint read, hydration, device
+    placement, dispatch and compile; disabled it is the shared no-op
+    ``NULL_INJECTOR``. :class:`ReliabilityConfig` — hydration
+    retry/backoff (:func:`backoff_delays` is the pure schedule),
+    degraded-mode fallback, queue-wait deadlines and backpressure
+    bounds. Typed errors: :class:`DeadlineExceeded`,
+    :class:`Overloaded`, :class:`InjectedFault` (all
+    ``FilterServeError`` subclasses).
+
 ``registry``
     :class:`FilterRegistry` — owns the tenants and DRIVES the
     lifecycle: :meth:`~FilterRegistry.admit` takes a ``TenantSpec``
@@ -158,6 +170,10 @@ from repro.serve_filter.executors import (Executor, GroupedExecutor,
                                           release_executor,
                                           release_grouped_executor,
                                           release_plan)
+from repro.serve_filter.faults import (NULL_INJECTOR, DeadlineExceeded,
+                                       FaultConfig, FaultInjector,
+                                       InjectedFault, Overloaded,
+                                       ReliabilityConfig, backoff_delays)
 from repro.serve_filter.plan import (GroupKey, Placement, ProbeConfig,
                                      QuantConfig, QueryPlan, group_key,
                                      plan_query)

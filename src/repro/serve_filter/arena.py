@@ -55,6 +55,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import existence, lmbf
+from repro.serve_filter.faults import NULL_INJECTOR, FaultInjector
 from repro.serve_filter.plan import GroupKey
 
 MIN_CAPACITY = 4
@@ -65,9 +66,14 @@ class PlanGroupArena:
     """Stacked device residence for every tenant sharing one GroupKey."""
 
     def __init__(self, key: GroupKey, executor,
-                 min_capacity: int = MIN_CAPACITY, mesh=None):
+                 min_capacity: int = MIN_CAPACITY, mesh=None,
+                 injector: FaultInjector = NULL_INJECTOR):
         self.key = key
         self.executor = executor            # GroupedExecutor (owns .fn)
+        # fault-injection sites fire BEFORE any mutation (add/swap) or
+        # materialization (device_arrays): an injected fault can fail a
+        # hydration or a dispatch but never corrupt arena bookkeeping
+        self.injector = injector
         # placement axis: a sharded group key means the device views
         # live split over this mesh (normally the executor's own)
         self.mesh = mesh if mesh is not None \
@@ -298,6 +304,7 @@ class PlanGroupArena:
     def add(self, tenant: str, index: existence.ExistenceIndex) -> int:
         """Stack a fitted index into the arena; returns its slot id.
         Re-adding a tenant (hot-swap) releases its old slot first."""
+        self.injector.check("device_put", tenant)
         if tenant in self._slots:
             self.remove(tenant)
         slot = self._free.pop() if self._free else self._grow_one()
@@ -324,6 +331,7 @@ class PlanGroupArena:
         dispatch time) and retire against them; the next dispatch
         materializes fresh views. Returns the (unchanged) slot id.
         """
+        self.injector.check("device_put", tenant)
         slot = self._slots[tenant]
         fp = index.fixup_filter.params
         base, length = int(self._word_base[slot]), int(self._word_len[slot])
@@ -406,6 +414,7 @@ class PlanGroupArena:
         the concatenated bitsets word-sharded over the group key's mesh
         axis; dense stacks and per-slot vectors are replicated."""
         if self._device is None:
+            self.injector.check("device_put", "arena")
             snap = self._snap
             axis = self.key.placement.axis      # None on a local arena
             params = {g: {k: snap(v) for k, v in d.items()}

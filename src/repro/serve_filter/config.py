@@ -14,7 +14,11 @@ names the subsystem it parameterizes:
 * :class:`~repro.serve_filter.plan.ProbeConfig` — fixup-probe flavor
   (pure JAX vs the Pallas kernel; defined next to the planner, re-exported
   here);
-* :class:`MetricsConfig`   — the JSONL metrics sink.
+* :class:`MetricsConfig`   — the JSONL metrics sink;
+* :class:`~repro.serve_filter.faults.FaultConfig` — seeded fault
+  injection for chaos testing (shared no-op when disabled);
+* :class:`~repro.serve_filter.faults.ReliabilityConfig` — hydration
+  retry/backoff, degraded mode, queue bound, dispatch watchdog.
 
 Being frozen, a ``ServeConfig`` is a value: it can be built once at
 deploy time, logged, compared, and handed to any number of servers —
@@ -31,12 +35,18 @@ on a grouped server). ``server.admit(spec)`` turns the spec into a live
 :class:`TenantState` is the per-tenant lifecycle the registry drives::
 
     ADMITTED -> HYDRATING -> SERVING -> DRAINING -> RETIRED
-                    ^            |
-                    +-- reload --+
+                    ^  |         |
+                    |  v         |
+                    +- DEGRADED -+ (reload recovers; drain retires)
 
 ``handle.reload()`` re-enters HYDRATING from SERVING (an atomic swap —
 no drain, no dropped rows) and returns to SERVING; every transition is
-counted by ``ServeStats``.
+counted by ``ServeStats``. When hydration retries exhaust under a
+:class:`~repro.serve_filter.faults.ReliabilityConfig` with
+``degraded=True``, the tenant lands in ``DEGRADED`` instead of wedging:
+it keeps answering from its last-good epoch — or, never hydrated, from
+its fixup/backup Bloom structure alone (conservative: still zero false
+negatives, FPR up to ~1 until a reload restores the model).
 """
 from __future__ import annotations
 
@@ -47,6 +57,7 @@ from typing import Optional, Sequence, Tuple
 from jax.sharding import Mesh
 
 from repro.core import existence
+from repro.serve_filter.faults import FaultConfig, ReliabilityConfig
 from repro.serve_filter.plan import (DEFAULT_TILE_ROWS, ProbeConfig,
                                      QuantConfig)
 
@@ -61,6 +72,8 @@ class TenantState(enum.Enum):
     SERVING = "serving"        # live, accepting submissions
     DRAINING = "draining"      # submissions rejected, queued work finishing
     RETIRED = "retired"        # gone from the registry
+    DEGRADED = "degraded"      # hydration exhausted: last-good epoch or
+                               # backup-Bloom-only answers until a reload
 
 
 # legal transitions; None is the pre-admission pseudo-state
@@ -68,11 +81,14 @@ LIFECYCLE_TRANSITIONS = {
     None: (TenantState.ADMITTED,),
     TenantState.ADMITTED: (TenantState.HYDRATING,),
     TenantState.HYDRATING: (TenantState.SERVING,
-                            TenantState.RETIRED),  # failed fresh hydration
+                            TenantState.RETIRED,    # failed fresh hydration
+                            TenantState.DEGRADED),  # retries exhausted
     TenantState.SERVING: (TenantState.HYDRATING,   # hot-reload re-entry
                           TenantState.DRAINING),
     TenantState.DRAINING: (TenantState.RETIRED,),
     TenantState.RETIRED: (),
+    TenantState.DEGRADED: (TenantState.HYDRATING,  # reload recovery
+                           TenantState.DRAINING),
 }
 
 
@@ -196,6 +212,8 @@ class ServeConfig:
     probe: ProbeConfig = ProbeConfig()
     quant: QuantConfig = QuantConfig()
     metrics: MetricsConfig = MetricsConfig()
+    faults: FaultConfig = FaultConfig()
+    reliability: ReliabilityConfig = ReliabilityConfig()
 
     @classmethod
     def from_kwargs(cls, *, budget_mb: Optional[float] = None,

@@ -104,6 +104,23 @@ _COMPILES: Dict[Tuple[str, int], list] = {}   # (label, bucket) -> [n, sec]
 _CACHE_HITS = 0
 _CACHE_MISSES = 0
 
+# Process-global compile-site fault hook (parallels the process-global
+# compile telemetry: the jit caches are shared across servers, so the
+# injection point must be too). ``None`` unless a chaos-configured
+# server installed its injector via :func:`set_fault_injector`; the
+# fault fires AFTER the program landed in the jit cache — modeling
+# "compile succeeded but blew its budget", so the retry that follows
+# hits the cache instead of recompiling.
+_FAULT_INJECTOR = None
+
+
+def set_fault_injector(injector) -> None:
+    """Install (or with ``None`` uninstall) the compile-site fault
+    injector. Only fault-enabled servers call this; disabled servers
+    leave the hot path untouched."""
+    global _FAULT_INJECTOR
+    _FAULT_INJECTOR = injector
+
 
 def _record_compile(label: str, bucket: int, seconds: float) -> None:
     ev = _COMPILES.setdefault((label, int(bucket)), [0, 0.0])
@@ -122,6 +139,8 @@ def _timed_call(ex, label: str, bucket: int, *operands):
     compiled = ex.program_count() > before
     if compiled:
         _record_compile(label, bucket, dt)
+        if _FAULT_INJECTOR is not None:
+            _FAULT_INJECTOR.check("compile", label)
     return out, compiled
 
 

@@ -31,6 +31,21 @@ prepared afterwards bind the new ones. :meth:`begin_drain` +
 against ``config.LIFECYCLE_TRANSITIONS`` and reported through the
 ``on_transition`` hook (the server wires it to ``ServeStats``).
 
+Reliability: under a :class:`~repro.serve_filter.faults.ReliabilityConfig`
+with ``retries > 0``, transient hydration failures (injected faults,
+checkpoint corruption) are retried with a capped, seeded
+exponential-backoff schedule (:func:`~repro.serve_filter.faults.backoff_delays`).
+When retries exhaust and ``degraded=True``, the tenant enters
+``DEGRADED`` instead of wedging or vanishing: a reloading tenant keeps
+serving its last-good epoch; a never-hydrated tenant gets a
+**backup-only** entry that answers conservatively from its fixup/backup
+Bloom structure alone (:func:`existence.load_fixup_only` — a selective
+CRC-verified read). Backup-only answers treat the unavailable model as
+all-positive — the degenerate sandwich bound of Mitzenmacher
+(arXiv 1901.00902): zero false negatives are preserved but the FPR
+rises toward 1 until a successful ``reload`` restores the model and the
+tenant returns to SERVING.
+
 With grouping enabled the registry additionally maintains plan-group
 membership: groupable tenants whose plans share a
 :class:`~repro.serve_filter.plan.GroupKey` live stacked in ONE
@@ -51,19 +66,30 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import os
+import time
 from typing import Callable, Dict, List, Optional
 
 import jax
+import numpy as np
 
-from repro.core import existence, memory
+from repro.core import existence, fixup as fixup_lib, memory
 from repro.runtime.trace import NULL_TRACER, Tracer
 from repro.serve_filter import executors as executors_lib
 from repro.serve_filter.arena import PlanGroupArena
 from repro.serve_filter.config import (GroupingConfig, LIFECYCLE_TRANSITIONS,
                                        PlacementConfig, TenantSpec,
                                        TenantState)
+from repro.serve_filter.faults import (NULL_INJECTOR, CheckpointCorruption,
+                                       FaultInjector, InjectedFault,
+                                       ReliabilityConfig, backoff_delays)
 from repro.serve_filter.plan import (GroupKey, ProbeConfig, QuantConfig,
                                      QueryPlan, group_key, plan_query)
+
+# hydration failure kinds the retry loop treats as TRANSIENT: injected
+# faults (chaos), and corrupt/unreadable checkpoint reads (a writer may
+# be mid-replace, or the next keep-N step may land). Anything else —
+# planner bugs, OOM, bad specs — fails fast like before.
+TRANSIENT_HYDRATION_ERRORS = (InjectedFault, CheckpointCorruption)
 
 # hook signature: (tenant, from_state_or_None, to_state)
 TransitionHook = Callable[[str, Optional[TenantState], TenantState], None]
@@ -72,9 +98,10 @@ TransitionHook = Callable[[str, Optional[TenantState], TenantState], None]
 @dataclasses.dataclass
 class FilterEntry:
     tenant: str
-    index: existence.ExistenceIndex
-    plan: QueryPlan
-    executor: object                # Executor or GroupedExecutor
+    index: Optional[existence.ExistenceIndex]  # None: backup-only entry
+    plan: Optional[QueryPlan]       # None when backup-only
+    executor: object                # Executor/GroupedExecutor; None when
+                                    # backup-only (degraded, no model)
     placed: Optional[executors_lib.PlacedFilter]  # None when grouped
     model_mb: float
     fixup_mb: float
@@ -85,6 +112,8 @@ class FilterEntry:
     pinned: bool = False            # exempt from LRU budget eviction
     groupable: bool = True          # may join a plan-group arena
     epoch: int = 0                  # bumped on every hot-reload
+    backup_only: Optional[fixup_lib.FixupFilter] = None  # degraded path
+    n_cols_hint: int = 0            # query width when index is None
 
     def run(self, raw_ids):
         """One fused dispatch: (n, n_cols) ids -> (ans, model, backup).
@@ -92,7 +121,19 @@ class FilterEntry:
         arrays immediately — the scheduler exploits that to overlap
         host-side padding with device compute. A grouped entry runs
         through its arena's megabatch program (constant tenant_idx);
-        the scheduler upgrades that to true multi-tenant batches."""
+        the scheduler upgrades that to true multi-tenant batches.
+
+        A backup-only (DEGRADED, never-hydrated) entry has no model: it
+        answers conservatively, treating the unavailable model as
+        all-positive — the degenerate sandwich bound. Zero false
+        negatives survive; the FPR is ~1 until a reload restores the
+        model. The real backup-Bloom probe is still reported so the
+        stage decomposition stays observable."""
+        if self.executor is None:
+            n = np.asarray(raw_ids).shape[0]
+            ones = np.ones(n, dtype=bool)
+            backup = np.asarray(self.backup_only.query(raw_ids))
+            return ones, ones, backup
         if self.group is not None:
             return self.group.run_single(raw_ids, self.slot)
         return self.executor(self.placed, self.index.tau, raw_ids)
@@ -120,6 +161,8 @@ class FilterEntry:
 
     @property
     def n_cols(self) -> int:
+        if self.index is None:
+            return self.n_cols_hint
         return self.index.cfg.plan.n_columns
 
 
@@ -160,15 +203,21 @@ class FilterRegistry:
                  placement: PlacementConfig = PlacementConfig(),
                  grouping: GroupingConfig = GroupingConfig(),
                  quant: QuantConfig = QuantConfig(),
+                 reliability: ReliabilityConfig = ReliabilityConfig(),
                  on_transition: Optional[TransitionHook] = None,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 injector: FaultInjector = NULL_INJECTOR,
+                 stats=None):
         self.budget_mb = budget_mb
         self.probe = probe
         self.placement = placement
         self.grouping = grouping
         self.quant = quant
+        self.reliability = reliability
         self.on_transition = on_transition
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.injector = injector
+        self.stats = stats              # ServeStats or None (counters)
         self._entries: Dict[str, FilterEntry] = {}
         self._groups: Dict[GroupKey, PlanGroupArena] = {}
         self._clock = itertools.count(1)
@@ -262,47 +311,63 @@ class FilterRegistry:
         """
         tenant = spec.tenant
         prev = self._entries.get(tenant)
+        prev_state = prev.state if prev is not None else None
         if prev is None:
             self._transition(tenant, None, TenantState.ADMITTED)
             self._transition(tenant, TenantState.ADMITTED,
                              TenantState.HYDRATING)
         else:
-            if prev.state is not TenantState.SERVING:
+            if prev.state not in (TenantState.SERVING,
+                                  TenantState.DEGRADED):
                 raise RuntimeError(
                     f"tenant {tenant!r} is {prev.state.value}; only a "
-                    "serving tenant can be reloaded")
-            self._transition(tenant, TenantState.SERVING,
-                             TenantState.HYDRATING)
+                    "serving or degraded tenant can be reloaded")
+            self._transition(tenant, prev.state, TenantState.HYDRATING)
             prev.state = TenantState.HYDRATING
         try:
             with self.tracer.span(
                     "reload" if prev is not None else "admit",
                     cat="lifecycle", tenant=tenant):
-                index = spec.index
-                if index is None:
-                    index = existence.load_index(
-                        os.path.join(spec.checkpoint, tenant),
-                        step=spec.step)
-                entry = self._install(tenant, index, prev,
-                                      pinned=spec.pinned,
-                                      groupable=spec.groupable)
-        except BaseException:
+                entry = self._hydrate_with_retries(spec, prev)
+        except BaseException as err:
             # hydration failed: a transient error (bad checkpoint
             # path, device OOM) must not brick a live tenant. Three
             # distinct failure points, all resolved so the tenant
             # never dangles in HYDRATING:
             cur = self._entries.get(tenant)
+            degrade = (self.reliability.degraded
+                       and isinstance(err, TRANSIENT_HYDRATION_ERRORS))
             if prev is not None and cur is prev:
-                # failed BEFORE the swap landed: roll the old entry
-                # back to SERVING — it keeps answering on its current
-                # epoch and a later reload can retry
-                self._transition(tenant, TenantState.HYDRATING,
-                                 TenantState.SERVING)
-                prev.state = TenantState.SERVING
+                if degrade:
+                    # retries exhausted on a LIVE tenant: DEGRADED, not
+                    # an outage — it keeps answering on its last-good
+                    # epoch (or its backup bitset, if it never had a
+                    # model) until a later reload succeeds
+                    self._transition(tenant, TenantState.HYDRATING,
+                                     TenantState.DEGRADED)
+                    prev.state = TenantState.DEGRADED
+                else:
+                    # failed BEFORE the swap landed: roll the old entry
+                    # back to where it was — it keeps answering on its
+                    # current epoch and a later reload can retry
+                    self._transition(tenant, TenantState.HYDRATING,
+                                     prev_state)
+                    prev.state = prev_state
             elif prev is None and cur is None:
-                # failed FRESH admission: no entry exists, terminate
-                # the lifecycle (HYDRATING -> RETIRED) so the event
-                # log matches state_of() reporting RETIRED
+                if degrade:
+                    # fresh admission exhausted its retries: try to
+                    # stand the tenant up on its backup Bloom structure
+                    # alone (conservative answers, zero-FN preserved)
+                    fallback = self._install_degraded(spec)
+                    if fallback is not None:
+                        self._transition(tenant, TenantState.HYDRATING,
+                                         TenantState.DEGRADED)
+                        fallback.state = TenantState.DEGRADED
+                        self._enforce_budget(keep=tenant)
+                        return fallback
+                # no backup path either: terminate the lifecycle
+                # (HYDRATING -> RETIRED) so the event log matches
+                # state_of() reporting RETIRED
                 self._transition(tenant, TenantState.HYDRATING,
                                  TenantState.RETIRED)
             elif cur is not None and cur is not prev:
@@ -317,6 +382,75 @@ class FilterRegistry:
         self._transition(tenant, TenantState.HYDRATING, TenantState.SERVING)
         entry.state = TenantState.SERVING
         self._enforce_budget(keep=tenant)
+        return entry
+
+    def _hydrate_with_retries(self, spec: TenantSpec,
+                              prev: Optional[FilterEntry]) -> FilterEntry:
+        """One admit/reload hydration under the retry policy: transient
+        failures (``TRANSIENT_HYDRATION_ERRORS``) are retried up to
+        ``reliability.retries`` times with the seeded capped-backoff
+        schedule. Retrying stops early when a failed attempt already
+        blew ``attempt_timeout_s`` (slow-not-transient) or when a
+        partial swap landed (retry would double-install)."""
+        tenant = spec.tenant
+        rel = self.reliability
+        delays = backoff_delays(rel, self.injector.config.seed, tenant)
+        attempt = 0
+        while True:
+            t0 = time.monotonic()
+            try:
+                return self._hydrate_once(spec, prev)
+            except TRANSIENT_HYDRATION_ERRORS as err:
+                if (isinstance(err, CheckpointCorruption)
+                        and self.stats is not None):
+                    self.stats.record_checksum_failure()
+                if attempt >= len(delays):
+                    raise
+                if (rel.attempt_timeout_s is not None
+                        and time.monotonic() - t0 > rel.attempt_timeout_s):
+                    raise       # slow failure: classified non-transient
+                if self._entries.get(tenant) is not prev:
+                    raise       # partial swap landed; do not re-install
+                if self.stats is not None:
+                    self.stats.record_hydration_retry()
+                time.sleep(delays[attempt])
+                attempt += 1
+
+    def _hydrate_once(self, spec: TenantSpec,
+                      prev: Optional[FilterEntry]) -> FilterEntry:
+        tenant = spec.tenant
+        index = spec.index
+        if index is None:
+            self.injector.check("checkpoint_read", tenant)
+            index = existence.load_index(
+                os.path.join(spec.checkpoint, tenant), step=spec.step)
+        self.injector.check("hydrate", tenant)
+        return self._install(tenant, index, prev, pinned=spec.pinned,
+                             groupable=spec.groupable)
+
+    def _install_degraded(self, spec: TenantSpec
+                          ) -> Optional[FilterEntry]:
+        """Best-effort backup-only entry for a fresh admission whose
+        hydration exhausted its retries: load just the fixup/backup
+        bitset (selective CRC-verified read) and serve conservatively.
+        Returns None when even the backup structure is unreachable."""
+        tenant = spec.tenant
+        try:
+            if spec.index is not None:
+                cfg = spec.index.cfg
+                fx = spec.index.fixup_filter
+            else:
+                cfg, fx = existence.load_fixup_only(
+                    os.path.join(spec.checkpoint, tenant), step=spec.step)
+        except BaseException:
+            return None
+        entry = FilterEntry(
+            tenant=tenant, index=None, plan=None, executor=None,
+            placed=None, model_mb=0.0, fixup_mb=fx.size_mb,
+            last_used=next(self._clock), state=TenantState.HYDRATING,
+            pinned=spec.pinned, groupable=spec.groupable,
+            backup_only=fx, n_cols_hint=cfg.plan.n_columns)
+        self._entries[tenant] = entry
         return entry
 
     # ------------------------------------------------- mutation plumbing
@@ -346,23 +480,41 @@ class FilterRegistry:
                 # the executor, so the device views land on-shard
                 arena = PlanGroupArena(
                     gk, executors_lib.acquire_grouped_executor(
-                        gk, self.placement.mesh))
+                        gk, self.placement.mesh),
+                    injector=self.injector)
                 self._groups[gk] = arena
-            if (prev is not None and prev.group is arena
-                    and tenant in arena):
-                # hot-reload within the same plan group: in-place slot
-                # swap — the tenant's slot id (and any tile-signature
-                # assumptions built on it) survive the reload
-                arena.swap(tenant, index)
-            else:
-                arena.add(tenant, index)
+            try:
+                if (prev is not None and prev.group is arena
+                        and tenant in arena):
+                    # hot-reload within the same plan group: in-place
+                    # slot swap — the tenant's slot id (and any
+                    # tile-signature assumptions built on it) survive
+                    # the reload
+                    arena.swap(tenant, index)
+                else:
+                    arena.add(tenant, index)
+            except BaseException:
+                # an arena freshly created for this admission must not
+                # outlive the failure holding its executor ref (retry
+                # exhaustion would otherwise leak empty arenas)
+                if len(arena) == 0 and self._groups.get(gk) is arena:
+                    del self._groups[gk]
+                    executors_lib.release_grouped_executor(
+                        gk, self.placement.mesh)
+                raise
             entry = FilterEntry(executor=arena.executor, placed=None,
                                 group=arena, **common)
         else:
             executor = executors_lib.acquire_executor(plan,
                                                       self.placement.mesh)
-            entry = FilterEntry(executor=executor,
-                                placed=executor.place(index), **common)
+            try:
+                self.injector.check("device_put", tenant)
+                placed = executor.place(index)
+            except BaseException:
+                executors_lib.release_executor(plan, self.placement.mesh)
+                raise
+            entry = FilterEntry(executor=executor, placed=placed,
+                                **common)
         self._entries[tenant] = entry
         if prev is not None:    # replaced: give back the old entry's ref
             self._release_entry(prev, replaced_by=entry)
@@ -394,8 +546,8 @@ class FilterRegistry:
         entry = self._entries.get(tenant)
         if entry is None:
             return
-        if entry.state is TenantState.SERVING:
-            self._transition(tenant, TenantState.SERVING,
+        if entry.state in (TenantState.SERVING, TenantState.DEGRADED):
+            self._transition(tenant, entry.state,
                              TenantState.DRAINING)
             entry.state = TenantState.DRAINING
         # validate against the entry's REAL state — anything but
@@ -413,6 +565,8 @@ class FilterRegistry:
         or its per-plan executor reference. The last tenant out of an
         arena/plan drops the cached executor and its compiled programs;
         surviving arenas compact when churn leaves too many holes."""
+        if entry.executor is None:
+            return          # backup-only entry: nothing device-side held
         if entry.group is not None:
             arena = entry.group
             if replaced_by is not None and replaced_by.group is arena:

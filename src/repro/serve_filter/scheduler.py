@@ -64,8 +64,32 @@ fails) — and, because serving is single-threaded, ``result()`` drives
 ``step()`` itself until that instant, dispatching whatever batches are
 ahead of it in ring order but leaving every other queued request
 queued (no drain-the-world side effect). Admission is
-lifecycle-gated: only SERVING tenants accept submissions — a DRAINING
-tenant's queued rows still complete, but new rows are rejected.
+lifecycle-gated: only SERVING (or DEGRADED — conservative answers, see
+``registry``) tenants accept submissions — a DRAINING tenant's queued
+rows still complete, but new rows are rejected.
+
+Reliability surface (all off by default, enabled per
+:class:`~repro.serve_filter.faults.ReliabilityConfig`):
+
+* **deadlines** — ``submit(..., deadline_ms=)`` attaches a per-request
+  budget; each ``step()`` first retires still-queued past-deadline
+  requests, whose futures raise
+  :class:`~repro.serve_filter.faults.DeadlineExceeded` instead of
+  hanging. Rows already dispatched retire with answers — the device
+  work is paid for either way;
+* **backpressure** — ``max_queued_rows`` bounds the total queued rows:
+  a ``submit``/``submit_many`` that would exceed it is rejected whole
+  with :class:`~repro.serve_filter.faults.Overloaded` (shed BEFORE
+  queuing — the caller keeps no half-admitted handles) and the shed
+  rows counted in ``stats_snapshot()['shed_rows']``;
+* **dispatch watchdog** — the device-block wait runs under
+  ``runtime.fault.StepTimer`` (relative stragglers) plus an absolute
+  ``dispatch_timeout_s`` bound; breaches land in ``stuck_batches`` /
+  ``stragglers``;
+* **injection** — a dispatch-site
+  :class:`~repro.serve_filter.faults.InjectedFault` requeues the
+  prepared spans (rows never lost) and the step counts as progress, so
+  a chaos storm degrades throughput instead of crashing the pump.
 """
 from __future__ import annotations
 
@@ -78,9 +102,16 @@ from typing import Deque, Dict, Iterable, List, Optional, Sequence, Set, \
 
 import numpy as np
 
+from repro.runtime.fault import StepTimer
 from repro.runtime.trace import NULL_TRACER, Tracer
 from repro.serve_filter import executors
 from repro.serve_filter.config import DEFAULT_BUCKETS, TenantState
+# FilterServeError moved to faults.py (typed errors need it as a base
+# without a circular import); re-exported here for back-compat
+from repro.serve_filter.faults import (NULL_INJECTOR, DeadlineExceeded,
+                                       FaultInjector, FilterServeError,
+                                       InjectedFault, Overloaded,
+                                       ReliabilityConfig)
 from repro.serve_filter.registry import FilterEntry, FilterRegistry
 from repro.serve_filter.stats import ServeStats
 
@@ -110,6 +141,8 @@ class QueryRequest:
     backup_yes: Optional[np.ndarray] = None
     t_done: Optional[float] = None
     error: Optional[str] = None           # set when failed (e.g. eviction)
+    error_cls: Optional[type] = None      # typed failure (DeadlineExceeded)
+    t_deadline: Optional[float] = None    # absolute budget (clock domain)
     future: Optional["QueryFuture"] = None  # resolved at retire time
 
     @property
@@ -124,20 +157,19 @@ class QueryRequest:
         assert self.t_done is not None
         return self.t_done - self.t_submit
 
-    def _complete(self, t_done: float, error: Optional[str] = None) -> None:
+    def _complete(self, t_done: float, error: Optional[str] = None,
+                  error_cls: Optional[type] = None) -> None:
         """Mark done (once) and resolve the attached future, if any."""
         if self.t_done is None:
             if error is not None:
                 self.error = error
+                self.error_cls = error_cls
             self.t_done = t_done
         if self.future is not None:
             self.future._resolve()
 
-
-class FilterServeError(RuntimeError):
-    """A submission failed inside the serving path (tenant evicted with
-    rows queued, dispatch fault, ...). ``QueryFuture.result`` raises
-    it; ``QueryFuture.exception`` returns it."""
+    def _raise_type(self) -> type:
+        return self.error_cls or FilterServeError
 
 
 class QueryFuture:
@@ -212,7 +244,22 @@ class QueryFuture:
                 raise TimeoutError(
                     f"request {self._request.rid} (tenant "
                     f"{self._request.tenant!r}) not retired in time")
-            if not self._scheduler.step():
+            try:
+                progressed = self._scheduler.step()
+            except InjectedFault:
+                # a chaos-injected dispatch fault escaped the pump
+                # (non-transient classification): with no timeout we
+                # re-raise — the waiter must not spin forever — but a
+                # bounded wait keeps driving; the spans were requeued
+                if deadline is None:
+                    raise
+                continue
+            if self._resolved:
+                # the step that resolved THIS future (e.g. by expiring
+                # its deadline) may also be the drained step — check
+                # resolution before judging progress
+                break
+            if not progressed:
                 # nothing queued, nothing in flight, yet unresolved:
                 # the rows were lost upstream — fail loudly
                 raise FilterServeError(
@@ -220,11 +267,14 @@ class QueryFuture:
 
     def result(self, timeout: Optional[float] = None) -> np.ndarray:
         """Block (driving the scheduler) until this request retires;
-        return its (n,) bool answers or raise its failure."""
+        return its (n,) bool answers or raise its failure (typed:
+        ``DeadlineExceeded`` for an expired request, ``FilterServeError``
+        otherwise). ``timeout`` bounds the drive loop itself — a wedged
+        scheduler surfaces as ``TimeoutError`` instead of a hang."""
         self._wait(None if timeout is None
                    else time.monotonic() + timeout)
         if self._request.error is not None:
-            raise FilterServeError(self._request.error)
+            raise self._request._raise_type()(self._request.error)
         return self._request.answers
 
     def exception(self, timeout: Optional[float] = None
@@ -233,7 +283,7 @@ class QueryFuture:
         self._wait(None if timeout is None
                    else time.monotonic() + timeout)
         if self._request.error is not None:
-            return FilterServeError(self._request.error)
+            return self._request._raise_type()(self._request.error)
         return None
 
 
@@ -282,7 +332,9 @@ class QueryScheduler:
                  clock=time.perf_counter, *,
                  async_dispatch: bool = False,
                  max_inflight: int = 2,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 injector: FaultInjector = NULL_INJECTOR,
+                 reliability: ReliabilityConfig = ReliabilityConfig()):
         self.registry = registry
         self.buckets = tuple(sorted(int(b) for b in buckets))
         self.stats = stats or ServeStats()
@@ -290,6 +342,15 @@ class QueryScheduler:
         self._clock = clock
         self._rid = itertools.count()
         self._seq = itertools.count()       # batch sequence, for traces
+        self.injector = injector
+        self.max_queued_rows = reliability.max_queued_rows
+        self.dispatch_timeout_s = reliability.dispatch_timeout_s
+        # dispatch watchdog: relative stragglers (trailing-median) plus
+        # the absolute dispatch_timeout_s bound counted in stuck_batches
+        self.watchdog = StepTimer()
+        self.stuck_batches = 0
+        self.dispatch_faults = 0            # injected dispatch faults seen
+        self._has_deadlines = False
         self.async_dispatch = bool(async_dispatch)
         # batches allowed past dispatch before the oldest must retire;
         # 1 = synchronous, 2 = classic double buffer
@@ -302,18 +363,31 @@ class QueryScheduler:
         self._inflight: Deque[_InFlight] = collections.deque()
 
     # ------------------------------------------------------------ intake
-    def submit(self, tenant: str, ids: np.ndarray) -> QueryRequest:
+    def submit(self, tenant: str, ids: np.ndarray,
+               deadline_ms: Optional[float] = None) -> QueryRequest:
         """Admit one request; rows may exceed the largest bucket (they
-        will be answered across several dispatches)."""
-        return self.submit_many(((tenant, ids),))[0]
+        will be answered across several dispatches). ``deadline_ms``
+        bounds how long the rows may wait QUEUED: a request still
+        undispatched when the budget expires retires with
+        :class:`DeadlineExceeded` instead of hanging."""
+        return self.submit_many(((tenant, ids),),
+                                deadline_ms=deadline_ms)[0]
 
-    def submit_many(self, items) -> List[QueryRequest]:
+    def submit_many(self, items,
+                    deadline_ms: Optional[float] = None
+                    ) -> List[QueryRequest]:
         """Bulk admission: ``[(tenant, ids), ...]`` -> requests, in
         order. One call per fleet tick instead of one per tenant — the
         megabatch regime serves thousands of small requests per second,
         so per-request Python overhead is the serving bottleneck once
         dispatches are grouped; this path keeps the hot loop tight
-        (locals bound once, validation per item preserved)."""
+        (locals bound once, validation per item preserved).
+
+        With ``max_queued_rows`` configured, a call whose rows would
+        push the queued total past the bound is rejected WHOLE with
+        :class:`Overloaded` before anything is queued — load shedding
+        happens at admission, where the caller can still retry/route,
+        not deep in the dispatch path."""
         registry = self.registry
         queues = self._queues
         order = self._order
@@ -324,11 +398,13 @@ class QueryScheduler:
         # call before any request is queued, or the caller loses the
         # handles of the items admitted ahead of the failure
         checked = []
+        new_rows = 0
         for tenant, ids in items:
             entry = registry.peek(tenant)
             if entry is None:
                 raise KeyError(f"unknown tenant {tenant!r}")
-            if entry.state is not TenantState.SERVING:
+            if entry.state not in (TenantState.SERVING,
+                                   TenantState.DEGRADED):
                 raise FilterServeError(
                     f"tenant {tenant!r} is {entry.state.value}, not "
                     "serving — submissions rejected")
@@ -340,6 +416,18 @@ class QueryScheduler:
                     f"tenant {tenant!r} expects {entry.n_cols} columns, "
                     f"got {ids.shape[-1]}")
             checked.append((tenant, entry, ids))
+            new_rows += ids.shape[0]
+        if (self.max_queued_rows is not None and new_rows
+                and self.pending_rows + new_rows > self.max_queued_rows):
+            self.stats.record_shed(new_rows)
+            raise Overloaded(
+                f"queue full: {self.pending_rows} rows queued, admitting "
+                f"{new_rows} would exceed max_queued_rows="
+                f"{self.max_queued_rows}")
+        t_deadline = (None if deadline_ms is None
+                      else clock() + float(deadline_ms) / 1e3)
+        if t_deadline is not None:
+            self._has_deadlines = True
         out: List[QueryRequest] = []
         for tenant, entry, ids in checked:
             # LRU touch: a tenant with freshly queued work must not be
@@ -347,7 +435,7 @@ class QueryScheduler:
             # requests), so submission counts as recency
             entry.last_used = registry.tick()
             req = QueryRequest(rid=next(rid), tenant=tenant, ids=ids,
-                               t_submit=clock())
+                               t_submit=clock(), t_deadline=t_deadline)
             if ids.shape[0] == 0:
                 req.answers = np.zeros(0, bool)
                 req.model_yes = np.zeros(0, bool)
@@ -370,6 +458,12 @@ class QueryScheduler:
     @property
     def inflight_batches(self) -> int:
         return len(self._inflight)
+
+    @property
+    def stragglers(self) -> List[dict]:
+        """Device-block waits flagged by the watchdog's trailing-median
+        straggler detector (see ``runtime.fault.StepTimer``)."""
+        return self.watchdog.stragglers
 
     def pending_rows_for(self, tenant: str) -> int:
         """Rows queued (not yet dispatched) for ONE tenant — the drain
@@ -397,9 +491,13 @@ class QueryScheduler:
         """Prepare + dispatch one batch, retiring per the in-flight cap.
 
         Returns False only when nothing is queued AND nothing is in
-        flight. With async dispatch the final in-flight batches drain
-        one per step once the queues empty.
+        flight (expiring a deadline counts as progress — the step
+        resolved a future). With async dispatch the final in-flight
+        batches drain one per step once the queues empty.
         """
+        expired = 0
+        if self._has_deadlines:
+            expired = self._expire_deadlines()
         with self.tracer.span("prepare") as sp:
             prep = self._prepare()
             if sp and prep is not None:
@@ -409,9 +507,17 @@ class QueryScheduler:
             if self._inflight:
                 self._retire(self._inflight.popleft())
                 return True
-            return False
+            return expired > 0
         try:
             self._dispatch(prep)
+        except InjectedFault:
+            # a chaos-injected transient dispatch fault: the spans go
+            # back to the queue heads and the step counts as progress —
+            # the next attempt re-rolls the injector, so a storm slows
+            # the pump down instead of crashing it (rows never lost)
+            self._requeue(prep)
+            self.dispatch_faults += 1
+            return True
         except Exception:
             # dispatch never launched: put the taken spans back at the
             # head of the queue so the rows stay answerable (a retry
@@ -421,6 +527,41 @@ class QueryScheduler:
         while len(self._inflight) >= self.max_inflight:
             self._retire(self._inflight.popleft())
         return True
+
+    def _expire_deadlines(self) -> int:
+        """Retire still-QUEUED requests whose deadline passed; their
+        futures raise :class:`DeadlineExceeded`. Requests with rows
+        already dispatched are exempt — the device work is in flight
+        and their answers land normally (a deadline bounds queue wait,
+        not compute). Returns how many requests expired."""
+        now = self._clock()
+        live_deadlines = False
+        n_expired = 0
+        for tenant in list(self._queues):
+            queue = self._queues[tenant]
+            kept: Deque[Tuple[QueryRequest, int]] = collections.deque()
+            for req, off in queue:
+                if (req.t_deadline is not None
+                        and req.t_first_dispatch is None
+                        and now >= req.t_deadline):
+                    req._complete(
+                        now, error=(
+                            f"deadline exceeded: request {req.rid} "
+                            f"(tenant {tenant!r}) waited "
+                            f"{(now - req.t_submit) * 1e3:.1f}ms queued"),
+                        error_cls=DeadlineExceeded)
+                    self.stats.record_deadline_expired()
+                    n_expired += 1
+                else:
+                    if req.t_deadline is not None:
+                        live_deadlines = True
+                    kept.append((req, off))
+            if kept:
+                self._queues[tenant] = kept
+            else:
+                del self._queues[tenant]
+        self._has_deadlines = live_deadlines
+        return n_expired
 
     def _prepare(self) -> Optional[_Prepared]:
         """Host half: coalesce the next tenant's rows — and, for a
@@ -572,6 +713,7 @@ class QueryScheduler:
         un-materialized device arrays) and park it in flight. Records
         each request's queue time (submit -> FIRST dispatch) the first
         time any of its rows goes out."""
+        self.injector.check("dispatch", prep.tenant)
         with self.tracer.span("dispatch", seq=prep.seq,
                               bucket=prep.bucket) as sp:
             compiles_before = executors.compile_count()
@@ -612,7 +754,8 @@ class QueryScheduler:
         prep = inf.prep
         tracer = self.tracer
         try:
-            with tracer.span("device_block", seq=prep.seq):
+            with tracer.span("device_block", seq=prep.seq), \
+                    self.watchdog:
                 full_ans = np.asarray(inf.outputs[0])
                 full_model = np.asarray(inf.outputs[1])
                 full_backup = np.asarray(inf.outputs[2])
@@ -624,6 +767,12 @@ class QueryScheduler:
             for req, _, _ in prep.take:
                 req._complete(t, error=f"dispatch failed: {e!r}")
             raise
+        # absolute watchdog bound on top of StepTimer's relative
+        # straggler detection: a wait past dispatch_timeout_s is a
+        # stuck batch regardless of the trailing median
+        if (self.dispatch_timeout_s is not None and self.watchdog.times
+                and self.watchdog.times[-1] > self.dispatch_timeout_s):
+            self.stuck_batches += 1
         t_block_end = self._clock()
         latency = t_block_end - inf.t_dispatch
         # the device's compute window as the host observed it: dispatch

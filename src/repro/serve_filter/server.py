@@ -21,6 +21,15 @@ RETIRED``):
 * ``handle.submit`` / ``handle.query`` — per-tenant shorthand for the
   futures surface below.
 
+Reliability (PR 8) is declared, not coded: ``ServeConfig.reliability``
+turns on hydration retry/backoff, degraded-mode fallback (a tenant
+whose hydration keeps failing serves conservatively from its backup
+Bloom filter alone — DEGRADED state, zero false negatives preserved),
+queue-wait deadlines (``submit(..., deadline_ms=...)``) and
+backpressure shedding (``Overloaded``); ``ServeConfig.faults`` arms a
+deterministic seeded fault injector for chaos testing. Both are
+inert no-ops by default.
+
 Queries are observed through futures: :meth:`FilterServer.submit`
 returns a :class:`~repro.serve_filter.scheduler.QueryFuture` whose
 ``result(timeout)`` drives the scheduler only until THAT request
@@ -42,6 +51,7 @@ from repro.runtime.metrics import MetricsLogger
 from repro.runtime.trace import Tracer
 from repro.serve_filter import executors as executors_lib
 from repro.serve_filter.config import ServeConfig, TenantSpec, TenantState
+from repro.serve_filter.faults import NULL_INJECTOR, FaultInjector
 from repro.serve_filter.registry import FilterEntry, FilterRegistry
 from repro.serve_filter.scheduler import QueryFuture, QueryScheduler
 from repro.serve_filter.stats import ServeStats
@@ -94,8 +104,10 @@ class TenantHandle:
         return self._last_epoch
 
     # ----------------------------------------------------------- queries
-    def submit(self, ids: np.ndarray) -> QueryFuture:
-        return self._server.submit(self.tenant, ids)
+    def submit(self, ids: np.ndarray, *,
+               deadline_ms: Optional[float] = None) -> QueryFuture:
+        return self._server.submit(self.tenant, ids,
+                                   deadline_ms=deadline_ms)
 
     def stats(self) -> Dict[str, float]:
         """This tenant's observability snapshot: cumulative / rolling /
@@ -193,16 +205,26 @@ class FilterServer:
         # call per stage
         self.tracer = Tracer(maxlen=config.metrics.trace_events,
                              enabled=config.metrics.trace_enabled)
+        # disabled faults share the process-wide no-op injector, same
+        # pattern as the tracer: one dead-cheap method call per site
+        self.faults = (FaultInjector(config.faults)
+                       if config.faults.enabled else NULL_INJECTOR)
+        if config.faults.enabled:
+            # compile happens inside the process-global executor caches,
+            # so the compile site installs process-globally too
+            executors_lib.set_fault_injector(self.faults)
         self.registry = FilterRegistry(
             config.budget_mb, probe=config.probe,
             placement=config.placement, grouping=config.grouping,
-            quant=config.quant,
-            on_transition=self._on_transition, tracer=self.tracer)
+            quant=config.quant, reliability=config.reliability,
+            on_transition=self._on_transition, tracer=self.tracer,
+            injector=self.faults, stats=self.stats)
         self.scheduler = QueryScheduler(
             self.registry, buckets=config.buckets.sizes, stats=self.stats,
             async_dispatch=config.dispatch.async_dispatch,
             max_inflight=config.dispatch.max_inflight,
-            tracer=self.tracer)
+            tracer=self.tracer, injector=self.faults,
+            reliability=config.reliability)
         self.metrics = (MetricsLogger(config.metrics.path,
                                       echo=config.metrics.echo)
                         if config.metrics.enabled else None)
@@ -265,18 +287,27 @@ class FilterServer:
         self.registry.evict(tenant)          # RETIRED hook reaps the handle
 
     # ------------------------------------------------------------ queries
-    def submit(self, tenant: str, ids: np.ndarray) -> QueryFuture:
+    def submit(self, tenant: str, ids: np.ndarray, *,
+               deadline_ms: Optional[float] = None) -> QueryFuture:
         """Admit one query block; returns its future (resolved by the
-        scheduler at retire time)."""
-        return QueryFuture(self.scheduler.submit(tenant, ids),
-                           self.scheduler)
+        scheduler at retire time). ``deadline_ms`` bounds QUEUE WAIT:
+        if the request has not been dispatched within that many
+        milliseconds its future resolves with ``DeadlineExceeded``
+        (rows already on device always finish)."""
+        return QueryFuture(
+            self.scheduler.submit(tenant, ids, deadline_ms=deadline_ms),
+            self.scheduler)
 
-    def submit_many(self, items) -> List[QueryFuture]:
+    def submit_many(self, items, *,
+                    deadline_ms: Optional[float] = None
+                    ) -> List[QueryFuture]:
         """Bulk admission for fleet clients: ``[(tenant, ids), ...]``
-        -> futures, in order."""
+        -> futures, in order. A shared ``deadline_ms`` applies to every
+        request in the batch."""
         sched = self.scheduler
         return [QueryFuture(req, sched)
-                for req in sched.submit_many(items)]
+                for req in sched.submit_many(items,
+                                             deadline_ms=deadline_ms)]
 
     def step(self) -> bool:
         return self.scheduler.step()
@@ -308,6 +339,9 @@ class FilterServer:
             else:
                 n_fp32 += len(a)
         self.stats.set_arena_membership(n_int8, n_fp32)
+        self.stats.set_degraded_tenants(sum(
+            1 for t in self.registry.tenants
+            if self.registry.state_of(t) is TenantState.DEGRADED))
         snap = self.stats.snapshot()
         snap["registered_filters"] = float(len(self.registry))
         snap["registry_mb"] = self.registry.total_mb
@@ -379,6 +413,10 @@ class FilterServer:
         if self._closed:
             return
         self._closed = True
+        if self.config.faults.enabled:
+            # uninstall the process-global compile hook so later servers
+            # (and bare executor users) don't inherit this chaos config
+            executors_lib.set_fault_injector(None)
         if self.config.metrics.trace_path and len(self.tracer):
             self.tracer.to_chrome_trace(self.config.metrics.trace_path)
         if self.metrics is not None:

@@ -101,6 +101,10 @@ class _Counters:
     overlapped: int = 0         # batches retired with another in flight
     grouped: int = 0            # batches whose rows spanned > 1 tenant
     reloads: int = 0            # zero-drain hot-swaps completed
+    shed_rows: int = 0          # rows refused by Overloaded backpressure
+    deadline_expired: int = 0   # requests retired past their deadline
+    hydration_retries: int = 0  # transient hydration failures retried
+    checksum_failures: int = 0  # checkpoint arrays failing CRC at load
 
 
 class TenantStats:
@@ -238,6 +242,8 @@ class ServeStats:
         # arenas right now — gauges, not cumulative counters)
         self.arena_tenants_int8 = 0
         self.arena_tenants_fp32 = 0
+        # live DEGRADED-tenant gauge (set by the server per snapshot)
+        self.degraded_tenants = 0
 
     # ---------------------------------------------------------- recording
     def tenant(self, name: str) -> TenantStats:
@@ -321,6 +327,26 @@ class ServeStats:
         self.arena_tenants_int8 = int(int8_tenants)
         self.arena_tenants_fp32 = int(fp32_tenants)
 
+    def record_shed(self, rows: int) -> None:
+        """Rows refused at submit by ``max_queued_rows`` backpressure."""
+        self.totals.shed_rows += int(rows)
+
+    def record_deadline_expired(self) -> None:
+        """One request retired with ``DeadlineExceeded``."""
+        self.totals.deadline_expired += 1
+
+    def record_hydration_retry(self) -> None:
+        """One transient hydration failure that will be retried."""
+        self.totals.hydration_retries += 1
+
+    def record_checksum_failure(self) -> None:
+        """One checkpoint load rejected by CRC verification."""
+        self.totals.checksum_failures += 1
+
+    def set_degraded_tenants(self, n: int) -> None:
+        """Gauge: live tenants currently in the DEGRADED state."""
+        self.degraded_tenants = int(n)
+
     def reset_tenant_baseline(self, tenant: str) -> None:
         """Restart a tenant's drift baseline (called on hot-reload)."""
         ts = self.tenants.get(tenant)
@@ -366,6 +392,12 @@ class ServeStats:
             "reloads": float(t.reloads),
             "arena_tenants_int8": float(self.arena_tenants_int8),
             "arena_tenants_fp32": float(self.arena_tenants_fp32),
+            # reliability counters + the live degraded gauge
+            "shed_rows": float(t.shed_rows),
+            "deadline_expired": float(t.deadline_expired),
+            "hydration_retries": float(t.hydration_retries),
+            "checksum_failures": float(t.checksum_failures),
+            "degraded_tenants": float(self.degraded_tenants),
             "max_drift_score": max(
                 (ts.drift_score for ts in self.tenants.values()),
                 default=0.0),

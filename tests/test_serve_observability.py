@@ -72,6 +72,10 @@ SNAPSHOT_KEYS = {
     # lifecycle
     "reloads", "lifecycle_admitted", "lifecycle_hydrating",
     "lifecycle_serving", "lifecycle_draining", "lifecycle_retired",
+    "lifecycle_degraded",
+    # reliability (PR 8): shedding, deadlines, hydration resilience
+    "shed_rows", "deadline_expired", "hydration_retries",
+    "checksum_failures", "degraded_tenants",
     # drift
     "max_drift_score",
     # registry / compile / cache / arena / trace telemetry
