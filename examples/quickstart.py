@@ -142,3 +142,38 @@ print(f"reliability: hydration_retries={snap_r['hydration_retries']:.0f} "
       f"shed_rows={snap_r['shed_rows']:.0f} "
       f"state={hr.state.value} (typed errors, zero-FN preserved)")
 srv_r.close()
+
+# 10. Fleet federation: the tier ABOVE one process. A FilterRouter
+#     owns tenant -> host placement over a consistent-hash ring of
+#     serving hosts, replicates tenants (replicas=2), fans queries out
+#     deterministically (per-tenant round-robin over the owner list),
+#     and speaks a versioned JSON wire form of TenantSpec/ServeConfig
+#     (spec.to_wire() / TenantSpec.from_wire() — only checkpoint-
+#     sourced specs cross, in-memory indexes are process-local). In
+#     production the hosts are subprocesses behind sockets
+#     (fleet.launch_host + SocketTransport — see
+#     benchmarks/fleet_router_bench.py for kill/failover/rebalance);
+#     in-process HostAgents expose the identical surface. Routing is
+#     observable through the pinned router_* snapshot schema.
+import tempfile
+
+from repro.serve_filter.fleet import (FilterRouter, HostAgent,
+                                      InProcessTransport)
+
+with tempfile.TemporaryDirectory() as tmp:
+    existence.save_index(f"{tmp}/quickstart", refit)
+    hosts = {name: InProcessTransport(
+                 HostAgent(FilterServer(ServeConfig()), name=name))
+             for name in ("h0", "h1")}
+    router = FilterRouter(hosts, replicas=2, load_slack=None)
+    spec = TenantSpec("quickstart", checkpoint=tmp)
+    payload = spec.to_wire()          # versioned, unknown-key-rejecting
+    owners = router.admit(spec)
+    routed = router.query("quickstart", ds.records[:512])
+    assert np.array_equal(routed, np.asarray(refit.query(ds.records[:512])))
+    rsnap = router.stats_snapshot()
+    print(f"fleet router: wire schema v{payload['schema']}, "
+          f"replicated on {list(owners)}, "
+          f"placements={rsnap['router_placements']:.0f}, "
+          f"routed answers == direct index ✓")
+    router.close()

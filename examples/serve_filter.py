@@ -33,7 +33,7 @@ body, a calibrated per-tenant threshold), the arena's device footprint
 shrinks severalfold, and every indexed record still answers yes — the
 learned filter compresses, the no-false-negative contract doesn't.
 
-The demo ends with a RELIABILITY phase: the same serving stack under a
+Next a RELIABILITY phase: the same serving stack under a
 seeded fault storm — hydration retries with capped backoff recover a
 flaky checkpoint read; a reload that keeps failing leaves the tenant
 DEGRADED (still answering, on its last-good epoch) until a later
@@ -41,6 +41,14 @@ reload restores SERVING; a tight ``deadline_ms`` expires a queued
 request with ``DeadlineExceeded``; and ``max_queued_rows`` sheds an
 oversized submission with ``Overloaded`` — every failure typed,
 deterministic, and visible in ``stats_snapshot()``.
+
+The demo ends with a FEDERATION phase: a ``FilterRouter`` over a ring
+of serving hosts — consistent-hash placement with replication, a
+versioned wire form of the tenant spec, deterministic replica
+fan-out, a live rebalance driven through the host lifecycle machines
+(admit-on-target -> verify SERVING -> drain source), then a killed
+host answered through replica failover, all bit-identical to the
+direct index and accounted in the pinned ``router_*`` snapshot.
 
 Usage: PYTHONPATH=src python examples/serve_filter.py
            [--shards N] [--sync] [--use-kernel] [--tenants N]
@@ -202,6 +210,8 @@ def main(args=_ARGS):
                    mesh=mesh, refit_a=refit)
 
     reliability_demo(idx_b, ds_b)
+
+    federation_demo(idx_b, ds_b)
 
 
 def fleet_demo(n_tenants, idx_a, idx_b, ds_a, ds_b, mesh=None,
@@ -381,6 +391,84 @@ def reliability_demo(idx, ds):
               f"{snap['degraded_tenants']:.0f}")
         assert h.state is TenantState.SERVING
         srv.close()
+
+
+def federation_demo(idx, ds):
+    """The fleet tier: one ``FilterRouter`` over three hosts, each a
+    full ``FilterServer`` behind the HostAgent op vocabulary. The demo
+    uses in-process agents (``InProcessTransport``) so it runs
+    anywhere; ``fleet.launch_host`` + ``SocketTransport`` put the very
+    same surface behind real process boundaries (that path is
+    exercised by ``benchmarks/fleet_router_bench.py`` and the slow
+    multiprocess tests)."""
+    from repro.serve_filter.fleet import (FilterRouter, HostAgent,
+                                          HostUnreachable,
+                                          InProcessTransport)
+
+    class KillableHost(InProcessTransport):
+        """An in-process host the demo can 'SIGKILL'."""
+
+        def __init__(self, name):
+            super().__init__(HostAgent(FilterServer(ServeConfig()),
+                                       name=name))
+            self.name = name
+            self.dead = False
+
+        def request(self, msg):
+            if self.dead:
+                raise HostUnreachable(self.name, "killed (demo)")
+            return super().request(msg)
+
+    print("\nfederation demo: router over three serving hosts")
+    with tempfile.TemporaryDirectory() as tmp:
+        existence.save_index(f"{tmp}/sensors", idx)
+        hosts = {n: KillableHost(n) for n in ("h0", "h1", "h2")}
+        router = FilterRouter(
+            hosts, replicas=2,
+            reliability=ReliabilityConfig(retries=1,
+                                          backoff_base_s=0.01),
+            seed=0, load_slack=None)
+
+        # only the WIRE form crosses to a host: versioned JSON with
+        # unknown-key rejection (in-memory indexes never travel)
+        spec = TenantSpec("sensors", checkpoint=tmp)
+        print(f"  wire: schema v{spec.to_wire()['schema']}, "
+              f"checkpoint-sourced (JSON round-trips bit-stable)")
+        owners = router.admit(spec)
+        print(f"  placed on {list(owners)} "
+              "(consistent-hash ring, replicas=2)")
+
+        # deterministic replica fan-out: block k -> owner k mod 2,
+        # every routed answer bit-identical to the direct index
+        probe = ds.records[:256]
+        want = np.asarray(idx.query(probe))
+        for _ in range(2):
+            assert np.array_equal(router.query("sensors", probe), want)
+
+        # live rebalance: migrate the replica on the second owner to
+        # the free host by driving the lifecycle machines (admit on
+        # target -> verify SERVING -> drain source); the tenant is
+        # never unowned mid-flight
+        free = next(h for h in ("h0", "h1", "h2") if h not in owners)
+        router.rebalance("sensors", free, from_host=owners[1])
+        print(f"  rebalanced {owners[1]} -> {free}: owners now "
+              f"{list(router.owners('sensors'))}")
+        assert np.array_equal(router.query("sensors", probe), want)
+
+        # kill the replica the NEXT block is planned for (3 blocks
+        # routed so far -> block 3 round-robins to owner 3 mod 2 = 1):
+        # the query fails over to the survivor, bit-identically
+        victim = router.owners("sensors")[1]
+        hosts[victim].dead = True
+        assert np.array_equal(router.query("sensors", probe), want)
+        snap = router.stats_snapshot()
+        assert snap["router_failovers"] >= 1
+        print(f"  killed {victim}: failover answered bit-identical "
+              f"(failovers={snap['router_failovers']:.0f}, "
+              f"rebalances={snap['router_rebalances']:.0f}, "
+              f"hosts_down={snap['router_hosts_down']:.0f}, "
+              f"unowned={snap['router_unowned_tenants']:.0f})")
+        router.close()
 
 
 if __name__ == "__main__":

@@ -115,6 +115,22 @@ Module map
     Perfetto, where async double-buffering shows up as prepare spans
     overlapping the previous batch's device-compute track.
 
+``fleet`` (subpackage)
+    The federation tier above single-process servers (PR 9):
+    :class:`~repro.serve_filter.fleet.FilterRouter` owns tenant ->
+    host placement (seeded consistent-hash ring + load-aware
+    overrides from live host snapshots), replicates hot tenants with
+    deterministic fan-out, maps unreachable/DEGRADED replicas to
+    failover (recovering total loss from the tenant's checkpoint
+    spec), and rebalances by driving the host lifecycle machines —
+    admit-on-target, verify SERVING, then DRAINING on the source, so
+    a tenant is never unowned. Hosts are plain ``FilterServer``\\ s
+    behind a ``HostAgent`` message loop (in-process, or spawned as
+    ``python -m repro.serve_filter.fleet.host`` and reached over
+    ``multiprocessing.connection`` sockets); configs/specs cross the
+    wire through the closed, versioned ``fleet.wire`` JSON schema.
+    Routing events land in a pinned ``router_*`` snapshot.
+
 Entry points
 ============
 
@@ -124,7 +140,10 @@ Entry points
   megabatch phase)
 * benchmark: ``PYTHONPATH=src python benchmarks/serve_filter_bench.py
   [--executor {local,sharded}] [--async-dispatch] [--tenants N
-  --grouped] [--reload-every N]``
+  --grouped] [--reload-every N]``; fleet tier:
+  ``PYTHONPATH=src python benchmarks/fleet_router_bench.py [--smoke]``
+  (N host processes + router, answers checked bit-identical to a
+  single-host oracle through a kill/failover and a live rebalance)
 * tests:     ``tests/test_serve_filter.py`` (served answers are
   property-tested bit-identical to direct ``ExistenceIndex.query``),
   ``tests/test_serve_grouped.py`` (grouped == local, incl. churn),
@@ -148,8 +167,9 @@ old                                   new
 ``serve_filter.fused`` (removed)      ``plan.plan_query`` + ``executors``
 ====================================  =================================
 
-Scale work still open (see ROADMAP): cross-host registry federation,
-sharded-executor batch sharding (split rows AND storage).
+Scale work still open (see ROADMAP): sharded-executor batch sharding
+(split rows AND storage), gossip/heartbeat host health (the router
+currently learns liveness from request failures and explicit pings).
 """
 from repro.serve_filter.arena import PlanGroupArena
 from repro.serve_filter.config import (GROUP_PLACEMENT_AUTO,
@@ -184,3 +204,10 @@ from repro.serve_filter.scheduler import (DEFAULT_BUCKETS,
                                           bucket_for, wait_all)
 from repro.serve_filter.server import FilterServer, TenantHandle
 from repro.serve_filter.stats import ServeStats, TenantStats
+# the fleet tier imports server/registry, so it must come last
+from repro.serve_filter.fleet import (ROUTER_SNAPSHOT_KEYS,
+                                      WIRE_SCHEMA_VERSION, FilterRouter,
+                                      HashRing, HostAgent,
+                                      HostUnreachable,
+                                      InProcessTransport,
+                                      SocketTransport, WireError)

@@ -252,6 +252,21 @@ class ServeConfig:
                                   trace=bool(trace),
                                   trace_path=trace_path))
 
+    # ------------------------------------------------------------- wire
+    def to_wire(self) -> dict:
+        """Versioned JSON-ready form (``fleet.wire``): what a router
+        ships to a remote host. Raises when the config holds a live
+        mesh — device layout never crosses the wire."""
+        from repro.serve_filter.fleet import wire
+        return wire.config_to_wire(self)
+
+    @classmethod
+    def from_wire(cls, payload: dict) -> "ServeConfig":
+        """Exact inverse of :meth:`to_wire` (closed schema: unknown
+        keys and version mismatches are loud ``WireError``\\ s)."""
+        from repro.serve_filter.fleet import wire
+        return wire.config_from_wire(payload)
+
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class TenantSpec:
@@ -280,3 +295,17 @@ class TenantSpec:
                 "in-memory index or a checkpoint directory")
         if self.step is not None and self.checkpoint is None:
             raise ValueError("step only applies to a checkpoint source")
+
+    # ------------------------------------------------------------- wire
+    def to_wire(self) -> dict:
+        """Versioned JSON-ready form (``fleet.wire``). Only
+        checkpoint-sourced specs serialize — an in-memory index is
+        process-local by definition."""
+        from repro.serve_filter.fleet import wire
+        return wire.spec_to_wire(self)
+
+    @classmethod
+    def from_wire(cls, payload: dict) -> "TenantSpec":
+        """Exact inverse of :meth:`to_wire`."""
+        from repro.serve_filter.fleet import wire
+        return wire.spec_from_wire(payload)

@@ -1,0 +1,10 @@
+"""``python -m repro.serve_filter.fleet`` — run one serving host.
+
+A thin alias for ``fleet.host.main`` that avoids runpy's re-import
+warning (the package's ``__init__`` already imports ``fleet.host``,
+so executing that module AS ``__main__`` would load it twice).
+"""
+from repro.serve_filter.fleet.host import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Consistent hashing: the router's default tenant -> host placement.
+
+A :class:`HashRing` hashes each host onto ``vnodes`` points of a
+64-bit circle (blake2b, seeded — no dependence on Python's randomized
+``hash``) and places a tenant on the first ``n`` *distinct* hosts
+clockwise from the tenant's own point. The classic properties the
+tests pin:
+
+* **deterministic** — same hosts, vnodes, and seed => same placement,
+  across processes and runs;
+* **minimal movement** — removing one host only re-places the tenants
+  it owned; every other tenant's owner list is unchanged (modulo the
+  removed host's replica slots), which is what makes host
+  decommission a bounded number of lifecycle migrations instead of a
+  fleet-wide reshuffle;
+* **replica-ready** — ``owners(tenant, n)`` yields ``n`` distinct
+  hosts in a stable preference order, so "primary" and "replica" are
+  positions in one list, not separate data structures.
+
+The ring is pure bookkeeping: it never talks to a host. Load-aware
+overrides (skipping a hot host for the next candidate) live in the
+router, which consults real ``stats_snapshot()`` numbers.
+"""
+from __future__ import annotations
+
+import bisect
+import hashlib
+import struct
+from typing import Iterable, List, Tuple
+
+__all__ = ["HashRing", "DEFAULT_VNODES"]
+
+DEFAULT_VNODES = 64
+
+
+def _point(seed: int, *parts) -> int:
+    """Deterministic 64-bit ring coordinate (mirrors the seeded
+    blake2b discipline of ``faults._unit_roll``)."""
+    h = hashlib.blake2b(digest_size=8)
+    h.update(struct.pack("<q", seed))
+    for p in parts:
+        h.update(str(p).encode())
+        h.update(b"\x00")
+    return int.from_bytes(h.digest(), "little")
+
+
+class HashRing:
+    """Seeded consistent-hash ring over named hosts."""
+
+    def __init__(self, hosts: Iterable[str] = (), *,
+                 vnodes: int = DEFAULT_VNODES, seed: int = 0):
+        if vnodes < 1:
+            raise ValueError("vnodes must be >= 1")
+        self.vnodes = int(vnodes)
+        self.seed = int(seed)
+        self._points: List[Tuple[int, str]] = []   # sorted (point, host)
+        self._keys: List[int] = []                 # parallel point keys
+        self._hosts: List[str] = []
+        for h in hosts:
+            self.add(h)
+
+    def __len__(self) -> int:
+        return len(self._hosts)
+
+    def __contains__(self, host: str) -> bool:
+        return host in self._hosts
+
+    @property
+    def hosts(self) -> Tuple[str, ...]:
+        """Hosts in insertion order (placement does not depend on
+        this order — only on the hash points)."""
+        return tuple(self._hosts)
+
+    def add(self, host: str) -> None:
+        if not host or not isinstance(host, str):
+            raise ValueError("host must be a non-empty string")
+        if host in self._hosts:
+            raise ValueError(f"host {host!r} already on the ring")
+        self._hosts.append(host)
+        for v in range(self.vnodes):
+            pt = (_point(self.seed, "host", host, v), host)
+            i = bisect.bisect(self._points, pt)
+            self._points.insert(i, pt)
+            self._keys.insert(i, pt[0])
+
+    def remove(self, host: str) -> None:
+        if host not in self._hosts:
+            raise KeyError(host)
+        self._hosts.remove(host)
+        self._points = [p for p in self._points if p[1] != host]
+        self._keys = [p[0] for p in self._points]
+
+    def owners(self, tenant: str, n: int = 1) -> Tuple[str, ...]:
+        """The first ``min(n, len(ring))`` distinct hosts clockwise
+        from the tenant's point, in preference order (index 0 is the
+        primary)."""
+        if n < 1:
+            raise ValueError("n must be >= 1")
+        if not self._points:
+            return ()
+        want = min(n, len(self._hosts))
+        start = bisect.bisect_right(self._keys,
+                                    _point(self.seed, "tenant", tenant))
+        out: List[str] = []
+        for i in range(len(self._points)):
+            host = self._points[(start + i) % len(self._points)][1]
+            if host not in out:
+                out.append(host)
+                if len(out) == want:
+                    break
+        return tuple(out)

@@ -1,0 +1,455 @@
+"""The fleet tier: tenant -> host placement, replication, failover.
+
+:class:`FilterRouter` is the first tier above a single process. It
+owns WHICH host serves WHICH tenant and keeps the per-host zero-FN
+membership contract intact across routing, replication, and
+rebalance:
+
+* **placement** — consistent hashing over a :class:`~.ring.HashRing`
+  of hosts picks each tenant's preference order; a *load-aware
+  override* consults live host ``stats_snapshot()`` tenant counts and
+  diverts a placement from a host that is ``load_slack`` tenants
+  heavier than the lightest candidate (counted, so rebalancing policy
+  is observable);
+* **replication** — ``admit(spec, replicas=n)`` places a tenant on
+  the first ``n`` ring owners; queries fan out deterministically
+  (per-tenant round-robin over the owner list — the same query
+  sequence always lands on the same replica sequence);
+* **failover** — an unreachable or DEGRADED replica diverts the query
+  to the next owner; with every owner gone, a checkpoint-sourced
+  tenant is *recovered*: re-admitted on the surviving ring hosts from
+  its retained wire spec. Router-side retry reuses the serving tier's
+  ``ReliabilityConfig.backoff_delays`` schedule;
+* **rebalance** — migration drives the host-side lifecycle machine:
+  admit-on-target from checkpoint, verify SERVING, *then* add the
+  target to the owner list BEFORE the source begins DRAINING, then
+  drain/retire the source and drop it. An interruption anywhere
+  leaves the tenant owned (at worst doubly-owned — re-running the
+  rebalance is idempotent).
+
+Every routing event lands in a pinned ``router_*`` snapshot (schema
+guarded by the observability tests, like ``ServeStats``).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve_filter.config import TenantSpec, TenantState
+from repro.serve_filter.faults import (FilterServeError,
+                                       ReliabilityConfig,
+                                       backoff_delays)
+from repro.serve_filter.fleet import wire
+from repro.serve_filter.fleet.ring import DEFAULT_VNODES, HashRing
+from repro.serve_filter.fleet.transport import (HostTransport,
+                                                HostUnreachable)
+
+__all__ = ["FilterRouter", "RouterStats", "ROUTER_SNAPSHOT_KEYS"]
+
+# the pinned router observability schema (mirrors stats.SNAPSHOT_KEYS:
+# additions are deliberate schema changes, removals break the test)
+ROUTER_SNAPSHOT_KEYS = frozenset({
+    "router_hosts", "router_hosts_down", "router_tenants",
+    "router_placements", "router_replica_placements",
+    "router_rebalances", "router_failovers", "router_admit_retries",
+    "router_load_overrides", "router_queries",
+    "router_fanout_queries", "router_degraded_replies",
+    "router_recoveries", "router_unowned_tenants",
+})
+
+
+class RouterStats:
+    """Cumulative routing counters behind the pinned snapshot."""
+
+    def __init__(self):
+        self.placements = 0          # (tenant, host) admits performed
+        self.replica_placements = 0  # placements beyond each primary
+        self.rebalances = 0          # completed migrations
+        self.failovers = 0           # answers NOT from the planned pick
+        self.admit_retries = 0       # backoff retries during admits
+        self.load_overrides = 0      # ring picks diverted by load
+        self.queries = 0             # routed query blocks
+        self.fanout_queries = 0      # blocks whose planned pick was a
+                                     # non-primary replica
+        self.degraded_replies = 0    # answers served by a DEGRADED
+                                     # replica (all others worse)
+        self.recoveries = 0          # re-placements after total loss
+
+
+class FilterRouter:
+    """Routes tenants and queries over a fleet of serving hosts."""
+
+    def __init__(self, hosts: Dict[str, HostTransport], *,
+                 replicas: int = 1,
+                 reliability: ReliabilityConfig = ReliabilityConfig(),
+                 seed: int = 0, vnodes: int = DEFAULT_VNODES,
+                 load_slack: Optional[int] = 4,
+                 sleep=time.sleep):
+        if not hosts:
+            raise ValueError("a router needs at least one host")
+        if replicas < 1:
+            raise ValueError("replicas must be >= 1")
+        self.reliability = reliability
+        self.replicas = int(replicas)
+        self.seed = int(seed)
+        self.load_slack = load_slack
+        self.stats = RouterStats()
+        self._sleep = sleep
+        self._hosts: Dict[str, HostTransport] = dict(hosts)
+        self._down: Dict[str, bool] = {h: False for h in self._hosts}
+        self._ring = HashRing(self._hosts, vnodes=vnodes, seed=seed)
+        self._owners: Dict[str, Tuple[str, ...]] = {}
+        self._specs: Dict[str, Dict[str, Any]] = {}   # wire specs
+        self._qcount: Dict[str, int] = {}
+
+    # ------------------------------------------------------------ hosts
+    @property
+    def hosts(self) -> Tuple[str, ...]:
+        return tuple(self._hosts)
+
+    @property
+    def tenants(self) -> Tuple[str, ...]:
+        return tuple(self._owners)
+
+    def owners(self, tenant: str) -> Tuple[str, ...]:
+        """The tenant's current owner list (primary first)."""
+        return self._owners[tenant]
+
+    def mark_down(self, host: str) -> None:
+        self._down[host] = True
+
+    def mark_up(self, host: str) -> None:
+        self._down[host] = False
+
+    def ping(self, host: str) -> bool:
+        """Probe one host; updates its health mark."""
+        try:
+            ok = self._hosts[host].request({"op": "ping"}).get("ok",
+                                                               False)
+        except HostUnreachable:
+            ok = False
+        self._down[host] = not ok
+        return bool(ok)
+
+    def _alive(self) -> List[str]:
+        return [h for h in self._hosts if not self._down[h]]
+
+    def _request(self, host: str, msg: Dict[str, Any]) -> Dict[str, Any]:
+        """One exchange; an unreachable host is marked down, and any
+        completed exchange marks it back up (a transient blip must not
+        permanently shadow a host that answered the retry)."""
+        try:
+            reply = self._hosts[host].request(msg)
+        except HostUnreachable:
+            self._down[host] = True
+            raise
+        self._down[host] = False
+        return reply
+
+    def host_stats(self, host: str) -> Dict[str, float]:
+        reply = self._request(host, {"op": "stats"})
+        if not reply.get("ok"):
+            raise FilterServeError(
+                f"stats on {host!r} failed: {reply.get('error')}")
+        return reply["stats"]
+
+    def _host_load(self, host: str) -> Optional[float]:
+        """Live tenant count from the host's own snapshot (None when
+        the host cannot answer — it is then never *preferred*, but a
+        ring pick falling on it is not diverted either)."""
+        try:
+            return float(self.host_stats(host)["registered_filters"])
+        except (HostUnreachable, FilterServeError, KeyError):
+            return None
+
+    # -------------------------------------------------------- placement
+    def _placement_order(self, tenant: str) -> List[str]:
+        """Ring preference order filtered to live hosts, with the
+        load-aware override applied to each pick."""
+        order = [h for h in self._ring.owners(tenant, n=len(self._ring))
+                 if not self._down[h]]
+        if self.load_slack is None or len(order) < 2:
+            return order
+        loads = {h: self._host_load(h) for h in order}
+        known = {h: l for h, l in loads.items() if l is not None}
+        if not known:
+            return order
+        out: List[str] = []
+        for h in order:
+            if h in out:
+                continue
+            load = loads.get(h)
+            lightest = min((c for c in order
+                            if c not in out and known.get(c) is not None),
+                           key=lambda c: known[c], default=None)
+            if (load is not None and lightest is not None
+                    and lightest != h
+                    and load - known[lightest] >= self.load_slack):
+                self.stats.load_overrides += 1
+                out.append(lightest)
+            else:
+                out.append(h)
+        for h in order:            # overridden hosts re-enter later
+            if h not in out:
+                out.append(h)
+        return out
+
+    def _admit_on(self, host: str, tenant: str,
+                  spec_wire: Dict[str, Any]) -> bool:
+        """Admit ``tenant`` on ``host`` with the reliability backoff
+        schedule; True iff the host reports the tenant SERVING."""
+        delays = backoff_delays(self.reliability, self.seed,
+                                f"admit:{tenant}@{host}")
+        for attempt, delay in enumerate((None,) + tuple(delays)):
+            if delay is not None:
+                self.stats.admit_retries += 1
+                self._sleep(delay)
+            try:
+                reply = self._request(host, {"op": "admit",
+                                             "spec": spec_wire})
+            except HostUnreachable:
+                continue
+            if reply.get("ok") and reply.get("state") == \
+                    TenantState.SERVING.value:
+                return True
+        return False
+
+    def admit(self, spec: TenantSpec, *,
+              replicas: Optional[int] = None) -> Tuple[str, ...]:
+        """Place a tenant on its ring owners (checkpoint-sourced specs
+        only — the wire form is what crosses to the hosts). Walks the
+        load-adjusted preference order until ``replicas`` hosts report
+        the tenant SERVING; a host that stays unreachable or never
+        reaches SERVING through the backoff schedule is skipped for
+        the next candidate (counted as a failover). Returns the owner
+        list; raises when not even one replica could be placed."""
+        want = self.replicas if replicas is None else int(replicas)
+        if want < 1:
+            raise ValueError("replicas must be >= 1")
+        spec_wire = wire.spec_to_wire(spec)
+        placed: List[str] = []
+        for host in self._placement_order(spec.tenant):
+            if len(placed) == want:
+                break
+            if self._admit_on(host, spec.tenant, spec_wire):
+                placed.append(host)
+                self.stats.placements += 1
+                if len(placed) > 1:
+                    self.stats.replica_placements += 1
+            else:
+                self.stats.failovers += 1
+        if not placed:
+            raise FilterServeError(
+                f"tenant {spec.tenant!r}: no host could reach SERVING "
+                f"(fleet of {len(self._hosts)}, "
+                f"{len(self._alive())} alive)")
+        self._owners[spec.tenant] = tuple(placed)
+        self._specs[spec.tenant] = spec_wire
+        self._qcount.setdefault(spec.tenant, 0)
+        return self._owners[spec.tenant]
+
+    # ---------------------------------------------------------- queries
+    def query(self, tenant: str, ids: np.ndarray) -> np.ndarray:
+        """Route one query block to the tenant's replica set.
+
+        The planned pick is deterministic round-robin over the owner
+        list (query ``k`` -> owner ``k mod n_owners``); any answer
+        that does NOT come from the planned pick counts one failover.
+        DEGRADED replicas are passed over while a healthy one exists —
+        their conservative backup-Bloom answers are a last resort.
+        With every owner unreachable the tenant is recovered onto the
+        surviving ring (checkpoint re-admit) and the query retried
+        there."""
+        owners = self._owners.get(tenant)
+        if owners is None:
+            raise KeyError(f"tenant {tenant!r} is not placed")
+        k = self._qcount[tenant]
+        self._qcount[tenant] = k + 1
+        self.stats.queries += 1
+        planned = k % len(owners)
+        if planned != 0:
+            self.stats.fanout_queries += 1
+        degraded_reply = None
+        for i in range(len(owners)):
+            host = owners[(planned + i) % len(owners)]
+            if self._down[host]:
+                continue
+            try:
+                reply = self._request(host, {"op": "query",
+                                             "tenant": tenant,
+                                             "ids": np.asarray(ids)})
+            except HostUnreachable:
+                continue
+            if not reply.get("ok"):
+                continue
+            if reply.get("degraded"):
+                if degraded_reply is None:
+                    degraded_reply = reply
+                continue
+            if i != 0:
+                self.stats.failovers += 1
+            return np.asarray(reply["answers"])
+        if degraded_reply is not None:
+            self.stats.failovers += 1
+            self.stats.degraded_replies += 1
+            return np.asarray(degraded_reply["answers"])
+        return self._recover_and_query(tenant, ids)
+
+    def _recover_and_query(self, tenant: str,
+                           ids: np.ndarray) -> np.ndarray:
+        """Total-loss path: every owner failed. Re-place from the
+        retained wire spec on whatever the ring still has, then answer
+        from the new primary."""
+        spec_wire = self._specs.get(tenant)
+        if spec_wire is None or not self._alive():
+            raise FilterServeError(
+                f"tenant {tenant!r}: all {len(self._owners[tenant])} "
+                "replicas failed and no recovery source is available")
+        old = self._owners[tenant]
+        placed: List[str] = []
+        want = min(len(old), len(self._alive()))
+        for host in self._placement_order(tenant):
+            if len(placed) == want:
+                break
+            if host in old and self._down[host]:
+                continue
+            if self._admit_on(host, tenant, spec_wire):
+                placed.append(host)
+                self.stats.placements += 1
+                if len(placed) > 1:
+                    self.stats.replica_placements += 1
+        if not placed:
+            raise FilterServeError(
+                f"tenant {tenant!r}: recovery failed — no live host "
+                "could reach SERVING")
+        self._owners[tenant] = tuple(placed)
+        self.stats.recoveries += 1
+        self.stats.failovers += 1
+        reply = self._request(placed[0], {"op": "query",
+                                          "tenant": tenant,
+                                          "ids": np.asarray(ids)})
+        if not reply.get("ok"):
+            raise FilterServeError(
+                f"tenant {tenant!r}: post-recovery query failed: "
+                f"{reply.get('error')}")
+        return np.asarray(reply["answers"])
+
+    # -------------------------------------------------------- rebalance
+    def rebalance(self, tenant: str, to_host: str, *,
+                  from_host: Optional[str] = None) -> Tuple[str, ...]:
+        """Migrate one replica of ``tenant`` onto ``to_host`` by
+        driving the host lifecycle machines: admit-on-target from
+        checkpoint -> verify SERVING -> (tenant now doubly owned) ->
+        DRAINING on the source -> retire -> source dropped from the
+        owner list. ``from_host`` defaults to the current primary.
+
+        The owner list gains the target BEFORE the source starts
+        draining, so an interruption at any point leaves the tenant
+        owned; re-running the same call is idempotent (admitting an
+        already-SERVING tenant is the hosts' hot-reload path)."""
+        owners = self._owners.get(tenant)
+        if owners is None:
+            raise KeyError(f"tenant {tenant!r} is not placed")
+        if to_host not in self._hosts:
+            raise KeyError(f"unknown host {to_host!r}")
+        if from_host is None:
+            # default to the primary — unless the target already holds
+            # a slot (a resumed half-done migration): then the source
+            # is the first owner that ISN'T the target
+            source = next((h for h in owners if h != to_host), None)
+            if source is None:
+                return owners        # solely owned by the target already
+        else:
+            source = from_host
+        if source not in owners:
+            raise ValueError(f"host {source!r} does not own "
+                             f"{tenant!r}")
+        if to_host == source:
+            return owners
+        spec_wire = self._specs[tenant]
+        if to_host not in owners:
+            if not self._admit_on(to_host, tenant, spec_wire):
+                raise FilterServeError(
+                    f"rebalance of {tenant!r}: target {to_host!r} "
+                    "never reached SERVING; source untouched")
+            self.stats.placements += 1
+            # the target takes the source's slot so replica fan-out
+            # positions survive the migration; the source stays listed
+            # until its drain completes (never-unowned invariant)
+            self._owners[tenant] = tuple(
+                [to_host if h == source else h for h in owners]
+                + [source])
+        reply = self._request(source, {"op": "drain", "tenant": tenant})
+        if not reply.get("ok"):
+            raise FilterServeError(
+                f"rebalance of {tenant!r}: drain on {source!r} "
+                f"failed: {reply.get('error')} (tenant remains "
+                "doubly owned; re-run to retry)")
+        self._owners[tenant] = tuple(
+            h for h in self._owners[tenant] if h != source)
+        self.stats.rebalances += 1
+        return self._owners[tenant]
+
+    def drain_host(self, host: str) -> int:
+        """Decommission: migrate every replica ``host`` owns to the
+        rest of the ring (one :meth:`rebalance` each), then remove the
+        host from the ring. Returns the number of migrations."""
+        if host not in self._hosts:
+            raise KeyError(f"unknown host {host!r}")
+        if len(self._ring) > 1:
+            self._ring.remove(host)
+        moved = 0
+        for tenant, owners in list(self._owners.items()):
+            if host not in owners:
+                continue
+            target = next(
+                (h for h in self._placement_order(tenant)
+                 if h != host and h not in owners), None)
+            if target is None:     # all other hosts already own it
+                reply = self._request(host, {"op": "drain",
+                                             "tenant": tenant})
+                if reply.get("ok"):
+                    self._owners[tenant] = tuple(
+                        h for h in owners if h != host) or owners
+                continue
+            self.rebalance(tenant, target, from_host=host)
+            moved += 1
+        return moved
+
+    # ------------------------------------------------------ observability
+    def stats_snapshot(self) -> Dict[str, float]:
+        """The pinned ``router_*`` schema — every key in
+        :data:`ROUTER_SNAPSHOT_KEYS`, always."""
+        s = self.stats
+        snap = {
+            "router_hosts": float(len(self._hosts)),
+            "router_hosts_down": float(sum(self._down.values())),
+            "router_tenants": float(len(self._owners)),
+            "router_placements": float(s.placements),
+            "router_replica_placements": float(s.replica_placements),
+            "router_rebalances": float(s.rebalances),
+            "router_failovers": float(s.failovers),
+            "router_admit_retries": float(s.admit_retries),
+            "router_load_overrides": float(s.load_overrides),
+            "router_queries": float(s.queries),
+            "router_fanout_queries": float(s.fanout_queries),
+            "router_degraded_replies": float(s.degraded_replies),
+            "router_recoveries": float(s.recoveries),
+            "router_unowned_tenants": float(sum(
+                1 for o in self._owners.values() if not o)),
+        }
+        assert set(snap) == ROUTER_SNAPSHOT_KEYS
+        return snap
+
+    # ----------------------------------------------------------- shutdown
+    def close(self, *, shutdown_hosts: bool = False) -> None:
+        """Drop transports (optionally asking each live host to exit)."""
+        for host, transport in self._hosts.items():
+            if shutdown_hosts and not self._down[host]:
+                try:
+                    transport.request({"op": "shutdown"})
+                except HostUnreachable:
+                    pass
+            transport.close()

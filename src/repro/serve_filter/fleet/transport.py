@@ -1,0 +1,112 @@
+"""How the router reaches a host: one ``request(msg) -> reply`` call.
+
+Transports carry dict messages (the ops :class:`fleet.host.HostAgent`
+understands) and return dict replies. Two implementations:
+
+* :class:`InProcessTransport` — wraps a live ``HostAgent`` in the same
+  process. Zero serialization; what the fast tests and the examples
+  use, and exactly the surface the multi-process transport must match.
+* :class:`SocketTransport` — a persistent
+  ``multiprocessing.connection`` client to a host process spawned via
+  ``python -m repro.serve_filter.fleet.host`` (pickle framing over a
+  localhost TCP socket, authkey-authenticated). Connects lazily, and
+  collapses EVERY connection-level failure — refused, reset, EOF on a
+  killed host — into :class:`HostUnreachable` so the router has one
+  failure vocabulary to map onto retry/failover.
+
+``HostUnreachable`` is deliberately a :class:`FilterServeError`: to
+the routing tier a dead host is one more serving fault, handled with
+the same ``ReliabilityConfig.backoff_delays`` retry discipline as a
+failed hydration.
+"""
+from __future__ import annotations
+
+from multiprocessing import connection
+from typing import Any, Dict, Optional, Tuple
+
+from repro.serve_filter.faults import FilterServeError
+
+__all__ = ["HostUnreachable", "HostTransport", "InProcessTransport",
+           "SocketTransport", "DEFAULT_AUTHKEY"]
+
+# shared-secret for multiprocessing.connection handshakes; the fleet
+# runs router + hosts on one box (the bench/CI shape), so a fixed key
+# only has to keep strangers' sockets from confusing the framing
+DEFAULT_AUTHKEY = b"repro-fleet"
+
+
+class HostUnreachable(FilterServeError):
+    """The transport could not complete a request: connection refused,
+    reset, or EOF (host killed mid-request)."""
+
+    def __init__(self, host: str, detail: str):
+        super().__init__(f"host {host!r} unreachable: {detail}")
+        self.host = host
+
+
+class HostTransport:
+    """One request/reply exchange with a host. Implementations raise
+    :class:`HostUnreachable` for connection-level failures; host-side
+    errors come back IN the reply (``{"ok": False, ...}``)."""
+
+    def request(self, msg: Dict[str, Any]) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        """Release any connection state (idempotent)."""
+
+
+class InProcessTransport(HostTransport):
+    """Directly invoke a same-process ``HostAgent`` (tests/examples)."""
+
+    def __init__(self, agent):
+        self.agent = agent
+
+    def request(self, msg: Dict[str, Any]) -> Dict[str, Any]:
+        return self.agent.handle(msg)
+
+
+class SocketTransport(HostTransport):
+    """Persistent pickle-framed connection to one host process."""
+
+    def __init__(self, address: Tuple[str, int], *,
+                 host: Optional[str] = None,
+                 authkey: bytes = DEFAULT_AUTHKEY):
+        self.address = (address[0], int(address[1]))
+        self.host = host or f"{address[0]}:{address[1]}"
+        self.authkey = authkey
+        self._conn: Optional[connection.Connection] = None
+
+    def _connect(self) -> connection.Connection:
+        if self._conn is None:
+            try:
+                self._conn = connection.Client(self.address,
+                                               authkey=self.authkey)
+            except (OSError, EOFError,
+                    connection.AuthenticationError) as e:
+                raise HostUnreachable(self.host, repr(e)) from e
+        return self._conn
+
+    def request(self, msg: Dict[str, Any]) -> Dict[str, Any]:
+        conn = self._connect()
+        try:
+            conn.send(msg)
+            reply = conn.recv()
+        except (OSError, EOFError, BrokenPipeError) as e:
+            # drop the dead connection so a later request (e.g. after
+            # a host restart on the same port) reconnects cleanly
+            self.close()
+            raise HostUnreachable(self.host, repr(e)) from e
+        if not isinstance(reply, dict):
+            self.close()
+            raise HostUnreachable(
+                self.host, f"malformed reply {type(reply).__name__}")
+        return reply
+
+    def close(self) -> None:
+        conn, self._conn = self._conn, None
+        if conn is not None:
+            try:
+                conn.close()
+            except OSError:   # pragma: no cover - best-effort cleanup
+                pass

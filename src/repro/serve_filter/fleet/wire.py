@@ -1,0 +1,229 @@
+"""Versioned wire form of the frozen serving configs.
+
+The fleet tier ships tenant placement decisions across process
+boundaries: a :class:`~repro.serve_filter.fleet.router.FilterRouter`
+admits a tenant on a host it does not share an address space with, so
+the already-frozen :class:`~repro.serve_filter.config.ServeConfig` and
+:class:`~repro.serve_filter.config.TenantSpec` need a serializable
+twin. This module is that twin — a plain-JSON codec with three hard
+properties the golden-file test pins:
+
+* **bit-stable round trip** — ``config_from_wire(config_to_wire(cfg))
+  == cfg`` exactly (the sub-configs are frozen dataclasses with value
+  equality, and every ``__post_init__`` normalizes sequences back to
+  the canonical tuples);
+* **versioned** — every payload carries ``schema`` =
+  :data:`WIRE_SCHEMA_VERSION` and a ``kind`` tag; a version or kind
+  mismatch is a loud :class:`WireError`, never a silent partial
+  decode;
+* **closed** — unknown keys are rejected at every nesting level, so a
+  field rename on either side of the wire breaks decoding instead of
+  silently dropping the renamed field's value.
+
+Two things deliberately do NOT cross the wire:
+
+* ``TenantSpec.index`` — an in-memory fitted ``ExistenceIndex`` is
+  process-local; the wire form of a tenant is its **checkpoint**
+  source (the router-side caller saves first, the host hydrates from
+  the shared checkpoint directory);
+* ``PlacementConfig.mesh`` — a live ``jax.sharding.Mesh`` is host
+  hardware. The wire carries the ``shard_axis`` name only; each host
+  builds (or declines) its own mesh locally.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Type, TypeVar
+
+from repro.serve_filter.config import (BucketConfig, DispatchConfig,
+                                       GroupingConfig, MetricsConfig,
+                                       PlacementConfig, ServeConfig,
+                                       TenantSpec)
+from repro.serve_filter.faults import (FaultConfig, FilterServeError,
+                                       ReliabilityConfig)
+from repro.serve_filter.plan import ProbeConfig, QuantConfig
+
+__all__ = [
+    "WIRE_SCHEMA_VERSION", "WireError",
+    "config_to_wire", "config_from_wire",
+    "spec_to_wire", "spec_from_wire",
+    "dumps", "loads",
+]
+
+WIRE_SCHEMA_VERSION = 1
+
+KIND_CONFIG = "serve_config"
+KIND_SPEC = "tenant_spec"
+
+
+class WireError(FilterServeError):
+    """A payload that cannot (or must not) cross the wire: schema
+    version mismatch, unknown kind, unknown keys, or a field that is
+    inherently process-local (in-memory index, live mesh)."""
+
+
+_T = TypeVar("_T")
+
+
+def _enc_value(v):
+    """JSON-ify one field value; tuples become lists (recursively)."""
+    if isinstance(v, tuple):
+        return [_enc_value(x) for x in v]
+    return v
+
+
+def _enc_fields(obj) -> Dict[str, Any]:
+    """Encode a frozen config dataclass field-by-field."""
+    return {f.name: _enc_value(getattr(obj, f.name))
+            for f in dataclasses.fields(obj)}
+
+
+def _dec_fields(cls: Type[_T], payload, *, where: str) -> _T:
+    """Decode ``payload`` into dataclass ``cls``, rejecting unknown
+    keys. Sequence normalization (list -> canonical tuple) is the
+    dataclass' own ``__post_init__`` contract, which is what makes the
+    round trip bit-stable."""
+    if not isinstance(payload, dict):
+        raise WireError(f"{where}: expected an object, got "
+                        f"{type(payload).__name__}")
+    names = {f.name for f in dataclasses.fields(cls)}
+    unknown = sorted(set(payload) - names)
+    if unknown:
+        raise WireError(f"{where}: unknown key(s) {unknown} for "
+                        f"{cls.__name__} (wire schema is closed; bump "
+                        f"WIRE_SCHEMA_VERSION for field changes)")
+    try:
+        return cls(**payload)
+    except (TypeError, ValueError) as e:
+        raise WireError(f"{where}: invalid {cls.__name__}: {e}") from e
+
+
+def _check_envelope(payload, kind: str) -> Dict[str, Any]:
+    if not isinstance(payload, dict):
+        raise WireError(f"expected a wire object, got "
+                        f"{type(payload).__name__}")
+    version = payload.get("schema")
+    if version != WIRE_SCHEMA_VERSION:
+        raise WireError(f"wire schema version mismatch: payload has "
+                        f"{version!r}, this build speaks "
+                        f"{WIRE_SCHEMA_VERSION}")
+    if payload.get("kind") != kind:
+        raise WireError(f"expected kind {kind!r}, got "
+                        f"{payload.get('kind')!r}")
+    return payload
+
+
+# the sub-config table drives both directions, so encode and decode
+# cannot drift apart field-wise
+_CONFIG_SECTIONS = (
+    ("buckets", BucketConfig),
+    ("placement", PlacementConfig),
+    ("dispatch", DispatchConfig),
+    ("grouping", GroupingConfig),
+    ("probe", ProbeConfig),
+    ("quant", QuantConfig),
+    ("metrics", MetricsConfig),
+    ("faults", FaultConfig),
+    ("reliability", ReliabilityConfig),
+)
+
+
+# ------------------------------------------------------------- ServeConfig
+def config_to_wire(cfg: ServeConfig) -> Dict[str, Any]:
+    """``ServeConfig`` -> JSON-ready dict. Raises :class:`WireError`
+    when the config holds a live mesh — device layout is host-local
+    and never serialized."""
+    if cfg.placement.mesh is not None:
+        raise WireError(
+            "a live Mesh is host-local hardware and cannot cross the "
+            "wire; send shard_axis only and let each host build its "
+            "own PlacementConfig(mesh=...)")
+    out: Dict[str, Any] = {"schema": WIRE_SCHEMA_VERSION,
+                           "kind": KIND_CONFIG,
+                           "budget_mb": cfg.budget_mb}
+    for name, _cls in _CONFIG_SECTIONS:
+        section = _enc_fields(getattr(cfg, name))
+        if name == "placement":
+            # mesh (checked None above) stays off the wire entirely
+            section.pop("mesh")
+        if name == "faults":
+            # rates ride as [[site, rate], ...]; FaultConfig's
+            # __post_init__ restores the sorted tuple-of-pairs
+            section["rates"] = [list(pair) for pair in cfg.faults.rates]
+        out[name] = section
+    return out
+
+
+def config_from_wire(payload: Dict[str, Any]) -> ServeConfig:
+    """JSON dict -> ``ServeConfig`` (exact inverse of
+    :func:`config_to_wire`)."""
+    payload = _check_envelope(payload, KIND_CONFIG)
+    known = {"schema", "kind", "budget_mb"} | {n for n, _ in
+                                               _CONFIG_SECTIONS}
+    unknown = sorted(set(payload) - known)
+    if unknown:
+        raise WireError(f"serve_config: unknown key(s) {unknown} "
+                        "(wire schema is closed)")
+    kwargs: Dict[str, Any] = {"budget_mb": payload.get("budget_mb")}
+    for name, cls in _CONFIG_SECTIONS:
+        section = dict(payload.get(name, {}))
+        if name == "faults" and "rates" in section:
+            section["rates"] = tuple(tuple(p) for p in section["rates"])
+        kwargs[name] = _dec_fields(cls, section, where=name)
+    return ServeConfig(**kwargs)
+
+
+# -------------------------------------------------------------- TenantSpec
+_SPEC_FIELDS = ("tenant", "checkpoint", "step", "pinned", "groupable")
+
+
+def spec_to_wire(spec: TenantSpec) -> Dict[str, Any]:
+    """``TenantSpec`` -> JSON-ready dict. The spec must carry a
+    checkpoint source: an in-memory index cannot cross a process
+    boundary (save it, then ship the checkpoint directory)."""
+    if spec.index is not None:
+        raise WireError(
+            f"tenant {spec.tenant!r}: an in-memory index is not "
+            "serializable — save_index() it and admit the tenant from "
+            "the checkpoint directory")
+    out: Dict[str, Any] = {"schema": WIRE_SCHEMA_VERSION,
+                           "kind": KIND_SPEC}
+    for name in _SPEC_FIELDS:
+        out[name] = getattr(spec, name)
+    return out
+
+
+def spec_from_wire(payload: Dict[str, Any]) -> TenantSpec:
+    """JSON dict -> ``TenantSpec`` (checkpoint-sourced)."""
+    payload = _check_envelope(payload, KIND_SPEC)
+    unknown = sorted(set(payload) - {"schema", "kind", *_SPEC_FIELDS})
+    if unknown:
+        raise WireError(f"tenant_spec: unknown key(s) {unknown} "
+                        "(wire schema is closed)")
+    body = {k: payload[k] for k in _SPEC_FIELDS if k in payload}
+    if body.get("checkpoint") is None:
+        raise WireError("tenant_spec: wire specs must name a "
+                        "checkpoint source")
+    try:
+        return TenantSpec(**body)
+    except (TypeError, ValueError) as e:
+        raise WireError(f"tenant_spec: {e}") from e
+
+
+# ------------------------------------------------------------ canonical io
+def dumps(payload: Dict[str, Any]) -> str:
+    """Canonical JSON text: sorted keys, no whitespace drift — two
+    encoders of the same value produce byte-identical text (what the
+    golden-file test pins)."""
+    return json.dumps(payload, sort_keys=True, separators=(",", ":"))
+
+
+def loads(text: str) -> Dict[str, Any]:
+    try:
+        payload = json.loads(text)
+    except json.JSONDecodeError as e:
+        raise WireError(f"malformed wire JSON: {e}") from e
+    if not isinstance(payload, dict):
+        raise WireError("wire payload must be a JSON object")
+    return payload

@@ -281,6 +281,12 @@ class FilterRegistry:
         entry = self._entries.get(tenant)
         return entry.state if entry is not None else TenantState.RETIRED
 
+    def states(self) -> Dict[str, TenantState]:
+        """Every live tenant's lifecycle state — the whole-host view a
+        fleet router reads through the ``states`` host op to verify
+        placement (SERVING on target before DRAINING on source)."""
+        return {t: e.state for t, e in self._entries.items()}
+
     # --------------------------------------------------------- lifecycle
     def _transition(self, tenant: str, frm: Optional[TenantState],
                     to: TenantState) -> None:

@@ -268,6 +268,38 @@ class FilterServer:
             handle._spec = spec
         return handle
 
+    def admit_wire(self, payload: Dict) -> TenantHandle:
+        """Admit a tenant from its versioned wire form (what a
+        :class:`~repro.serve_filter.fleet.router.FilterRouter` ships
+        across the process boundary): decode ``payload`` through the
+        closed ``fleet.wire`` schema, then :meth:`admit` as usual —
+        same lifecycle, same reload-on-readmit semantics."""
+        from repro.serve_filter.fleet import wire
+        return self.admit(wire.spec_from_wire(payload))
+
+    def drain(self, tenant: str, *, max_steps: int = 100_000) -> None:
+        """Name-addressed graceful retirement — the host-side entry
+        point a router's rebalance drives (``DRAINING`` -> queued and
+        in-flight rows finish -> ``RETIRED``). Idempotent: draining a
+        tenant this server never had (or already retired) is a no-op,
+        so a re-run migration cannot fail on its own success."""
+        if self.registry.peek(tenant) is None:
+            return
+        handle = self._handles.get(tenant)
+        if handle is not None:
+            handle.retire(drain=True, max_steps=max_steps)
+            return
+        # registry-level tenants (admitted around the handle surface)
+        self.registry.begin_drain(tenant)
+        steps = 0
+        sched = self.scheduler
+        while (sched.pending_rows_for(tenant)
+               or sched.has_inflight(tenant)):
+            if steps >= max_steps or not sched.step():
+                break
+            steps += 1
+        self.registry.evict(tenant)
+
     def handle(self, tenant: str) -> TenantHandle:
         """The lifecycle handle for an admitted tenant."""
         return self._handles[tenant]

@@ -1,0 +1,116 @@
+"""Fleet federation across REAL process boundaries (marked slow).
+
+Two serving host processes (``python -m repro.serve_filter.fleet.host``)
+behind ``multiprocessing.connection`` sockets, one router in the test
+process: admit with replication, route traffic bit-identical to direct
+index queries, migrate a tenant live between hosts, then SIGKILL a
+host mid-run and keep answering through replica failover / checkpoint
+recovery. This is the wire-and-sockets version of the in-process
+contracts in ``test_fleet_router.py``.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import existence
+from repro.data import tuples
+from repro.serve_filter import ReliabilityConfig, TenantSpec
+from repro.serve_filter.fleet import (FilterRouter, SocketTransport,
+                                      launch_host)
+
+pytestmark = pytest.mark.slow
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    st = existence.TrainSettings(steps=15, n_pos=800, n_neg=800)
+    out = {}
+    for name, (cards, theta, seed) in {
+            "alpha": ([300, 200, 80], 100, 3),
+            "beta": ([500, 150], 120, 4)}.items():
+        ds = tuples.synthesize(cards, n_records=900, seed=seed)
+        out[name] = (ds, existence.fit(ds, theta=theta, settings=st))
+    return out
+
+
+@pytest.fixture(scope="module")
+def checkpoints(fleet, tmp_path_factory):
+    root = tmp_path_factory.mktemp("fleet-mp-ckpt")
+    for name, (_, idx) in fleet.items():
+        existence.save_index(os.path.join(str(root), name), idx, step=0)
+    return str(root)
+
+
+def _probes(ds, n, seed):
+    rng = np.random.default_rng(seed)
+    pos = ds.records[rng.integers(0, len(ds.records), n // 2)]
+    neg = np.stack([rng.integers(1, v, n - n // 2) for v in ds.cards],
+                   axis=-1).astype(np.int32)
+    return np.concatenate([pos, neg])
+
+
+def test_router_over_subprocess_hosts(fleet, checkpoints):
+    procs = {}
+    router = None
+    try:
+        transports = {}
+        for name in ("h0", "h1"):
+            proc, address = launch_host(name=name)
+            procs[name] = proc
+            transports[name] = SocketTransport(address, host=name)
+        router = FilterRouter(
+            transports, replicas=2,
+            reliability=ReliabilityConfig(retries=1,
+                                          backoff_base_s=0.05),
+            seed=0)
+        assert all(router.ping(h) for h in ("h0", "h1"))
+
+        for name in fleet:
+            owners = router.admit(TenantSpec(name,
+                                             checkpoint=checkpoints))
+            assert set(owners) == {"h0", "h1"}
+
+        # routed answers == direct index answers, across the fan-out
+        for r in range(4):
+            for name, (ds, idx) in fleet.items():
+                p = _probes(ds, 64, seed=10 + r)
+                assert np.array_equal(router.query(name, p),
+                                      np.asarray(idx.query(p)))
+
+        # live rebalance over the wire: shrink alpha to h0 only, then
+        # migrate that single replica onto h1 (admit -> verify SERVING
+        # -> drain source); traffic stays bit-identical after the move
+        router.rebalance("alpha", "h0", from_host="h1")
+        assert router.owners("alpha") == ("h0",)
+        router.rebalance("alpha", "h1")
+        assert router.owners("alpha") == ("h1",)
+        ds, idx = fleet["alpha"]
+        p = _probes(ds, 64, seed=50)
+        assert np.array_equal(router.query("alpha", p),
+                              np.asarray(idx.query(p)))
+        assert router.stats_snapshot()["router_rebalances"] == 2
+
+        # SIGKILL h1 mid-run: beta fails over to its h0 replica;
+        # alpha (now solely on h1) recovers from its checkpoint spec
+        procs["h1"].kill()
+        procs["h1"].wait(timeout=30)
+        failovers0 = router.stats_snapshot()["router_failovers"]
+        for r in range(3):
+            for name, (ds, idx) in fleet.items():
+                p = _probes(ds, 64, seed=80 + r)
+                assert np.array_equal(router.query(name, p),
+                                      np.asarray(idx.query(p)))
+        snap = router.stats_snapshot()
+        assert snap["router_failovers"] > failovers0
+        assert snap["router_recoveries"] >= 1      # alpha re-placed
+        assert snap["router_hosts_down"] == 1.0
+        assert snap["router_unowned_tenants"] == 0
+        assert router.owners("alpha") == ("h0",)
+    finally:
+        if router is not None:
+            router.close(shutdown_hosts=True)
+        for proc in procs.values():
+            if proc.poll() is None:
+                proc.kill()
+            proc.wait(timeout=30)

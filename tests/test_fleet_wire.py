@@ -1,0 +1,172 @@
+"""The fleet wire schema is FROZEN: bit-stable round trip, closed keys,
+versioned envelope — pinned by a golden file.
+
+The golden file (``tests/golden/wire_schema_v1.json``) is the canonical
+JSON of one fully-non-default ``ServeConfig`` + ``TenantSpec`` pair.
+Renaming a config field, changing a default's type, or forgetting to
+bump ``WIRE_SCHEMA_VERSION`` on a field change shows up here as a text
+diff — loudly, before a router and a host disagree about a payload in
+production.
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.serve_filter import (BucketConfig, DispatchConfig, FaultConfig,
+                                GroupingConfig, MetricsConfig,
+                                PlacementConfig, ProbeConfig, QuantConfig,
+                                ReliabilityConfig, ServeConfig, TenantSpec)
+from repro.serve_filter.fleet import (WIRE_SCHEMA_VERSION, WireError, wire)
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "wire_schema_v1.json")
+
+
+def _golden_config() -> ServeConfig:
+    """Every sub-config carries at least one non-default value, so the
+    golden file witnesses every section actually serializing."""
+    return ServeConfig(
+        budget_mb=64.0,
+        buckets=BucketConfig((32, 128, 512)),
+        placement=PlacementConfig(shard_axis="fleet"),
+        dispatch=DispatchConfig(async_dispatch=True, max_inflight=3),
+        grouping=GroupingConfig(enabled=True, tile_rows=8,
+                                placement="local"),
+        probe=ProbeConfig(use_kernel=True, interpret=True, block_n=512),
+        quant=QuantConfig(enabled=True, row_group=16, calib_samples=64,
+                          margin_safety=1.5, margin_floor=0.01),
+        metrics=MetricsConfig(path="metrics.jsonl", echo=True,
+                              trace=True, trace_path="trace.json",
+                              trace_events=1024),
+        faults=FaultConfig(enabled=True, seed=7,
+                           rates={"dispatch": 0.25,
+                                  "checkpoint_read": 0.5},
+                           max_faults=3),
+        reliability=ReliabilityConfig(retries=2, backoff_base_s=0.01,
+                                      backoff_mult=3.0, backoff_cap_s=0.5,
+                                      jitter=0.2, attempt_timeout_s=1.0,
+                                      degraded=True, max_queued_rows=512,
+                                      dispatch_timeout_s=2.0))
+
+
+def _golden_spec() -> TenantSpec:
+    return TenantSpec("tenant-7", checkpoint="ckpts/fleet", step=3,
+                      pinned=True, groupable=False)
+
+
+# ---------------------------------------------------------- golden pin
+def test_wire_schema_golden_file():
+    payload = {"serve_config": wire.config_to_wire(_golden_config()),
+               "tenant_spec": wire.spec_to_wire(_golden_spec())}
+    text = json.dumps(payload, sort_keys=True, indent=2) + "\n"
+    with open(GOLDEN) as f:
+        assert f.read() == text, (
+            "wire schema drifted from tests/golden/wire_schema_v1.json "
+            "— a config field rename/retype is a WIRE BREAK: bump "
+            "WIRE_SCHEMA_VERSION and regenerate the golden file "
+            "deliberately")
+
+
+def test_golden_version_is_current():
+    with open(GOLDEN) as f:
+        payload = json.load(f)
+    assert payload["serve_config"]["schema"] == WIRE_SCHEMA_VERSION
+    assert payload["tenant_spec"]["schema"] == WIRE_SCHEMA_VERSION
+
+
+# ---------------------------------------------------------- round trip
+def test_config_round_trip_bit_stable():
+    cfg = _golden_config()
+    text = wire.dumps(wire.config_to_wire(cfg))
+    back = ServeConfig.from_wire(wire.loads(text))
+    assert back == cfg                       # value equality, exactly
+    assert wire.dumps(back.to_wire()) == text  # byte-identical re-encode
+
+
+def test_default_config_round_trips():
+    cfg = ServeConfig()
+    assert ServeConfig.from_wire(cfg.to_wire()) == cfg
+
+
+def test_spec_round_trip():
+    spec = _golden_spec()
+    back = TenantSpec.from_wire(wire.loads(wire.dumps(spec.to_wire())))
+    assert dataclasses.asdict(back) == dataclasses.asdict(spec)
+
+
+def test_tuple_fields_survive_json():
+    """Buckets and fault rates cross JSON as lists and come back as
+    the canonical tuples (the dataclasses' own normalization)."""
+    cfg = ServeConfig(buckets=BucketConfig((16, 64)),
+                      faults=FaultConfig(rates={"hydrate": 0.5}))
+    back = ServeConfig.from_wire(json.loads(json.dumps(cfg.to_wire())))
+    assert back.buckets.sizes == (16, 64)
+    assert back.faults.rates == (("hydrate", 0.5),)
+    assert back == cfg
+
+
+# ------------------------------------------------------- closed schema
+def test_unknown_top_level_key_rejected():
+    payload = wire.config_to_wire(ServeConfig())
+    payload["surprise"] = 1
+    with pytest.raises(WireError, match="unknown key"):
+        wire.config_from_wire(payload)
+
+
+def test_unknown_nested_key_rejected():
+    payload = wire.config_to_wire(ServeConfig())
+    payload["dispatch"]["turbo"] = True
+    with pytest.raises(WireError, match="turbo"):
+        wire.config_from_wire(payload)
+
+
+def test_unknown_spec_key_rejected():
+    payload = wire.spec_to_wire(_golden_spec())
+    payload["shard_hint"] = 2
+    with pytest.raises(WireError, match="shard_hint"):
+        wire.spec_from_wire(payload)
+
+
+def test_version_mismatch_rejected():
+    payload = wire.config_to_wire(ServeConfig())
+    payload["schema"] = WIRE_SCHEMA_VERSION + 1
+    with pytest.raises(WireError, match="version mismatch"):
+        wire.config_from_wire(payload)
+
+
+def test_kind_mismatch_rejected():
+    with pytest.raises(WireError, match="kind"):
+        wire.spec_from_wire(wire.config_to_wire(ServeConfig()))
+
+
+def test_malformed_json_rejected():
+    with pytest.raises(WireError, match="malformed"):
+        wire.loads("{not json")
+    with pytest.raises(WireError):
+        wire.loads("[1, 2]")     # a list is not a wire envelope
+
+
+# ------------------------------------------------ process-local fields
+def test_live_mesh_never_crosses_the_wire():
+    import jax
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    cfg = ServeConfig(placement=PlacementConfig(mesh=mesh))
+    with pytest.raises(WireError, match="host-local"):
+        cfg.to_wire()
+
+
+def test_in_memory_index_never_crosses_the_wire():
+    spec = TenantSpec("t", index=object())
+    with pytest.raises(WireError, match="checkpoint"):
+        spec.to_wire()
+
+
+def test_wire_spec_requires_checkpoint_source():
+    payload = wire.spec_to_wire(_golden_spec())
+    payload["checkpoint"] = None
+    with pytest.raises(WireError, match="checkpoint"):
+        wire.spec_from_wire(payload)

@@ -113,6 +113,39 @@ def test_stats_snapshot_schema_pinned(fleet):
     assert snap["trace_events"] == 0.0
 
 
+def test_router_snapshot_schema_pinned(fleet, tmp_path):
+    """The fleet tier's ``router_*`` snapshot is pinned the same way:
+    every key always present, every value a float, schema frozen in
+    ``fleet.router.ROUTER_SNAPSHOT_KEYS`` (PR 9). The keys live in one
+    place so this test, the router bench's counter accounting, and
+    dashboards cannot drift apart."""
+    from repro.core import existence
+    from repro.serve_filter.fleet import (ROUTER_SNAPSHOT_KEYS,
+                                          FilterRouter, HostAgent,
+                                          InProcessTransport)
+    hosts = {h: InProcessTransport(
+                 HostAgent(FilterServer(ServeConfig()), name=h))
+             for h in ("h0", "h1")}
+    router = FilterRouter(hosts, replicas=2, load_slack=None)
+    for prefix in ("router_hosts", "router_tenants",
+                   "router_placements", "router_rebalances",
+                   "router_failovers", "router_queries"):
+        assert any(k.startswith(prefix) for k in ROUTER_SNAPSHOT_KEYS)
+    snap = router.stats_snapshot()
+    assert set(snap) == ROUTER_SNAPSHOT_KEYS
+    assert all(isinstance(v, float) for v in snap.values())
+    # the schema holds with live placements and traffic too
+    name, (ds, idx) = next(iter(fleet.items()))
+    existence.save_index(str(tmp_path / name), idx, step=0)
+    router.admit(TenantSpec(name, checkpoint=str(tmp_path)))
+    router.query(name, _probes(ds, 64, seed=1))
+    snap = router.stats_snapshot()
+    assert set(snap) == ROUTER_SNAPSHOT_KEYS
+    assert snap["router_tenants"] == 1.0
+    assert snap["router_queries"] == 1.0
+    assert snap["router_placements"] == 2.0
+
+
 def test_tenant_snapshot_schema_pinned(fleet):
     srv = _served(fleet)
     for name in fleet:
