@@ -97,9 +97,15 @@ def make_parser() -> argparse.ArgumentParser:
                          "plan-group megabatching and report the speedup")
     ap.add_argument("--quant", action="store_true",
                     help="also serve the many-tenant scenario through "
-                         "int8 compressed arenas (quantized tenant "
-                         "state) and record arena_mb / tenants_per_gb / "
-                         "q/s side by side with fp32 on the same fleet")
+                         "compressed arenas (quantized tenant state) "
+                         "and record arena_mb / tenants_per_gb / q/s "
+                         "side by side with fp32 on the same fleet")
+    ap.add_argument("--bits", type=int, choices=(8, 4), default=8,
+                    help="quantized storage width for --quant: 8 (int8) "
+                         "or 4 (packed nibbles)")
+    ap.add_argument("--grid", choices=("linear", "nf4"), default="linear",
+                    help="quantization grid for --quant (nf4 requires "
+                         "--bits 4)")
     ap.add_argument("--reload-every", type=int, default=0,
                     help="many-tenant churn: hot-reload one tenant via "
                          "TenantHandle.reload every N fleet ticks "
@@ -136,14 +142,15 @@ if _ARGS.executor == "sharded":
 
 import numpy as np                                    # noqa: E402
 
-from repro.core import existence                      # noqa: E402
+from repro.core import existence, lmbf                # noqa: E402
 from repro.data import tuples                         # noqa: E402
 from repro.serve_filter import (FaultConfig,          # noqa: E402
                                 FilterServeError, FilterServer,
                                 Overloaded, ReliabilityConfig,
                                 ServeConfig, TenantSpec, TenantState)
 from repro.serve_filter.config import (               # noqa: E402
-    GroupingConfig, LIFECYCLE_TRANSITIONS, PlacementConfig)
+    GroupingConfig, LIFECYCLE_TRANSITIONS, PlacementConfig, QuantConfig)
+from repro.serve_filter.plan import quant_meta        # noqa: E402
 
 BUCKETS = (64, 256, 1024)
 N_QUERIES = 4096            # per tenant per bucket measurement
@@ -263,12 +270,22 @@ class _ReloadChurn:
     traffic. The schedule depends only on tick/reload counts, so the
     grouped and ungrouped modes end every window with IDENTICAL
     tenant->index mappings and the post-churn verification tick can
-    require bit-equality across modes."""
+    require bit-equality across modes.
 
-    def __init__(self, srv: FilterServer, names, bases, every: int):
+    With ``ckpts`` (one checkpoint dir per base, saved in the server's
+    own storage format — ``existence_index_v3`` for quantized modes,
+    v2 for fp32) each reload hydrates a FRESH index from disk first, so
+    the measured swap exercises the real reload path: a v3 index
+    arrives with its packed payload and calibrated tau pinned and the
+    swap skips quantization + calibration entirely, which is what
+    keeps quant reload p99 in fp32's neighborhood."""
+
+    def __init__(self, srv: FilterServer, names, bases, every: int,
+                 ckpts=None):
         self.srv = srv
         self.names = list(names)
         self.bases = bases
+        self.ckpts = ckpts
         self.every = every
         self.ticks = 0
         self.reloads = 0
@@ -279,7 +296,11 @@ class _ReloadChurn:
 
     def fire(self) -> None:
         name = self.names[self.reloads % len(self.names)]
-        _, idx = self.bases[self.reloads % len(self.bases)]
+        j = self.reloads % len(self.bases)
+        if self.ckpts is not None:
+            idx = existence.load_index(self.ckpts[j])
+        else:
+            _, idx = self.bases[j]
         self.srv.handle(name).reload(idx)
         self.reloads += 1
 
@@ -310,7 +331,8 @@ def _measure_window(srv: FilterServer, pools: Dict[str, np.ndarray],
 
 def run_many_tenant_scenario(*, tenants: int, rows_per_request: int,
                              grouped: bool, steps: int,
-                             quant: bool = False,
+                             quant: bool = False, quant_bits: int = 8,
+                             quant_grid: str = "linear",
                              async_dispatch: bool = False,
                              reload_every: int = 0,
                              target_queries: int = 16384,
@@ -333,8 +355,9 @@ def run_many_tenant_scenario(*, tenants: int, rows_per_request: int,
     instead of silently skewing the ratios.
 
     ``quant`` adds the compressed-arena variants: every mode reruns
-    with int8 quantized tenant state (a ``quantized`` ServeConfig) on
-    the SAME fleet. Quantized answers get their own cross-checks —
+    with quantized tenant state (a ``quantized`` ServeConfig at
+    ``quant_bits``/``quant_grid`` — int8, packed int4, or packed NF4)
+    on the SAME fleet. Quantized answers get their own cross-checks —
     quant-grouped bit-equal to quant-ungrouped, and the verification
     tick's indexed rows must all answer yes (the calibrated threshold +
     bit-exact fixup stage keep the no-false-negative invariant) — and
@@ -349,6 +372,9 @@ def run_many_tenant_scenario(*, tenants: int, rows_per_request: int,
     ``async_dispatch`` still governs the ungrouped baseline modes, so
     the before/after ratio can be read at either pipelining setting;
     each row records the flag it actually ran with."""
+    import shutil
+    import tempfile
+
     fleet, bases = fit_fleet(tenants, steps=steps)
     k = rows_per_request
     # one mode per (grouped, quantized) combination requested; fp32
@@ -356,6 +382,25 @@ def run_many_tenant_scenario(*, tenants: int, rows_per_request: int,
     modes = [(False, False)] + ([(True, False)] if grouped else [])
     if quant:
         modes += [(False, True)] + ([(True, True)] if grouped else [])
+    # churn reloads hydrate from per-base checkpoints saved in each
+    # mode's own storage format: existence_index_v3 (packed payload +
+    # calibrated tau, reload skips calibration) for the quantized
+    # modes, plain v2 for fp32 — so reload_p99_ms compares the REAL
+    # quant reload fast path against the fp32 baseline
+    ckroot = None
+    ckpts: Dict[bool, Optional[list]] = {False: None, True: None}
+    if reload_every:
+        ckroot = tempfile.mkdtemp(prefix="bench_reload_ckpt_")
+        qc = QuantConfig(enabled=True, bits=quant_bits, grid=quant_grid)
+        for j, (_, idx) in enumerate(bases):
+            path = os.path.join(ckroot, f"base{j}_fp32")
+            existence.save_index(path, idx, step=0)
+            ckpts[False] = (ckpts[False] or []) + [path]
+            if quant:
+                path = os.path.join(ckroot, f"base{j}_q")
+                existence.save_index(path, idx, step=0,
+                                     quant=quant_meta(qc))
+                ckpts[True] = (ckpts[True] or []) + [path]
     ctx: Dict[tuple, tuple] = {}
     answers: Dict[tuple, dict] = {}
     for mode in modes:
@@ -365,6 +410,7 @@ def run_many_tenant_scenario(*, tenants: int, rows_per_request: int,
         traced = bool(trace_path) and mode == modes[-1]
         srv = FilterServer(ServeConfig.from_kwargs(
             buckets=BUCKETS, grouped=g, quantized=q,
+            quant_bits=quant_bits, quant_grid=quant_grid,
             async_dispatch=async_dispatch or g, mesh=mesh, trace=traced,
             trace_path=trace_path if traced else None))
         for name, (_, idx) in fleet.items():
@@ -377,18 +423,22 @@ def run_many_tenant_scenario(*, tenants: int, rows_per_request: int,
         srv.run_until_drained()
         answers[mode] = {name: r.answers.copy()
                          for name, r in reqs.items()}
-        churn = (_ReloadChurn(srv, sorted(fleet), bases, reload_every)
+        churn = (_ReloadChurn(srv, sorted(fleet), bases, reload_every,
+                              ckpts=ckpts[q])
                  if reload_every else None)
         ctx[mode] = (srv, pools, churn)
     _check_answers(modes, answers, grouped)
 
     rounds = max(2, target_queries // (len(fleet) * k))
     qps: Dict[tuple, List[float]] = {m: [] for m in modes}
+    calib_s: Dict[tuple, float] = {m: 0.0 for m in modes}
     for _ in range(repeats):
         for mode in modes:
             srv, pools, churn = ctx[mode]
+            c0 = lmbf.calibration_stats()["seconds"]
             qps[mode].append(_measure_window(srv, pools, k, rounds,
                                              churn))
+            calib_s[mode] += lmbf.calibration_stats()["seconds"] - c0
     med = {m: sorted(qps[m])[len(qps[m]) // 2] for m in modes}
 
     if grouped and reload_every:
@@ -418,6 +468,8 @@ def run_many_tenant_scenario(*, tenants: int, rows_per_request: int,
             "rows_per_request": k,
             "grouped": g,
             "quantized": q,
+            "bits": quant_bits if q else 32,
+            "grid": quant_grid if q else "fp32",
             "async_dispatch": async_dispatch or g,
             "queries": repeats * rounds * len(fleet) * k,
             "qps": med[mode],
@@ -441,6 +493,14 @@ def run_many_tenant_scenario(*, tenants: int, rows_per_request: int,
             row["reload_every"] = reload_every
             row["reloads"] = int(snap["reloads"])
             row["reload_p99_ms"] = round(snap["reload_p99_ms"], 3)
+            # calibration wall time spent INSIDE this mode's measured
+            # windows: ~0 when churn hydrates v3 checkpoints (the tau
+            # rides the payload), nonzero when reloads re-calibrate
+            row["reload_calibration_ms"] = round(calib_s[mode] * 1e3, 3)
+            if q and snaps[(g, False)]["reload_p99_ms"]:
+                row["reload_p99_vs_fp32"] = round(
+                    snap["reload_p99_ms"]
+                    / snaps[(g, False)]["reload_p99_ms"], 2)
         if g:
             row["speedup_vs_ungrouped"] = round(
                 med[mode] / med[(False, q)], 1)
@@ -451,6 +511,8 @@ def run_many_tenant_scenario(*, tenants: int, rows_per_request: int,
                 row["arena_shrink_vs_fp32"] = round(
                     fp32_mb / snap["arena_mb"], 2)
         rows.append(row)
+    if ckroot is not None:
+        shutil.rmtree(ckroot, ignore_errors=True)
     return rows
 
 
@@ -721,10 +783,13 @@ def _print_many_tenant(rows: List[dict]) -> None:
           f"{'speedup':>8}"
     print(hdr)
     for r in rows:
-        mode = ("grouped" if r["grouped"] else "ungrouped") \
-            + ("/q8" if r.get("quantized") else "")
+        mode = ("grouped" if r["grouped"] else "ungrouped")
+        if r.get("quantized"):
+            mode += QuantConfig(enabled=True, bits=r.get("bits", 8),
+                                grid=r.get("grid", "linear")).label()
         churn = (f"  reloads={r['reloads']} "
-                 f"(p99 {r['reload_p99_ms']}ms)"
+                 f"(p99 {r['reload_p99_ms']}ms, "
+                 f"calib {r.get('reload_calibration_ms', 0.0)}ms)"
                  if "reloads" in r else "")
         qinfo = ""
         if r.get("quantized"):
@@ -741,27 +806,40 @@ def _print_many_tenant(rows: List[dict]) -> None:
 
 def _check_quant_rows(rows: List[dict], *, smoke: bool) -> None:
     """Assert the compressed-arena headline numbers when --quant ran
-    grouped: the int8 arena's per-shard device footprint must be >= 3x
-    smaller than fp32's for the same fleet (>= 2x in smoke, whose tiny
-    fleet amortizes scale vectors and tile padding worse), and grouped
-    quantized throughput must stay within 10% of fp32 (full runs only
-    — smoke windows are too short to compare)."""
+    grouped: the quantized arena's per-shard device footprint must be
+    >= 3x (int8) / >= 6x (packed int4) smaller than fp32's for the
+    same fleet (>= 2x / >= 4x in smoke, whose tiny fleet amortizes
+    scale vectors and tile padding worse); grouped quantized
+    throughput must stay within 10% (int8) / 15% (int4, which pays an
+    in-tile nibble unpack) of fp32 (full runs only — smoke windows are
+    too short to compare); and on the churn leg a v3-checkpoint quant
+    reload p99 must land within 2x of the fp32 reload p99 (the pinned
+    payload + tau skip quantize/calibrate on the swap)."""
     qrows = [r for r in rows
              if r.get("quantized") and r.get("grouped")]
     for r in qrows:
-        floor = 2.0 if smoke else 3.0
+        packed = r.get("bits", 8) == 4
+        floor = (4.0 if packed else 2.0) if smoke else \
+            (6.0 if packed else 3.0)
         shrink = r.get("arena_shrink_vs_fp32", 0.0)
         assert shrink >= floor, \
             f"quantized arena only {shrink}x smaller than fp32 " \
             f"(need >= {floor}x)"
         if not smoke:
-            assert r["qps_vs_fp32"] >= 0.9, \
+            qps_floor = 0.85 if packed else 0.9
+            assert r["qps_vs_fp32"] >= qps_floor, \
                 f"grouped quantized q/s {r['qps_vs_fp32']}x of fp32 " \
-                "(need within 10%)"
+                f"(need >= {qps_floor})"
+            if "reload_p99_vs_fp32" in r:
+                assert r["reload_p99_vs_fp32"] <= 2.0, \
+                    f"quant reload p99 {r['reload_p99_vs_fp32']}x of " \
+                    "fp32 (v3 fast path should keep it within 2x)"
 
 
 def main():
     rows: List[dict] = []
+    if _ARGS.grid == "nf4" and _ARGS.bits != 4:
+        raise SystemExit("--grid nf4 requires --bits 4")
     mesh = _serve_mesh(_ARGS.executor, _ARGS.shards)
     if _ARGS.chaos:
         chaos = run_chaos_scenario(
@@ -791,7 +869,8 @@ def main():
         many = run_many_tenant_scenario(
             tenants=_ARGS.tenants or 8,
             rows_per_request=_ARGS.rows_per_request,
-            grouped=True, quant=_ARGS.quant,
+            grouped=True, quant=_ARGS.quant, quant_bits=_ARGS.bits,
+            quant_grid=_ARGS.grid,
             steps=min(_ARGS.steps, 10),
             async_dispatch=_ARGS.async_dispatch,
             reload_every=_ARGS.reload_every,
@@ -834,6 +913,7 @@ def main():
                 tenants=_ARGS.tenants,
                 rows_per_request=_ARGS.rows_per_request,
                 grouped=_ARGS.grouped, quant=_ARGS.quant,
+                quant_bits=_ARGS.bits, quant_grid=_ARGS.grid,
                 steps=_ARGS.steps,
                 async_dispatch=_ARGS.async_dispatch,
                 reload_every=_ARGS.reload_every, mesh=mesh,

@@ -265,6 +265,14 @@ def fleet_demo(n_tenants, idx_a, idx_b, ds_a, ds_b, mesh=None,
         buckets=BucketConfig((64, 256, 1024)),
         grouping=GroupingConfig(enabled=True),
         quant=QuantConfig(enabled=True))))
+    # ...and the PACKED variant: bits=4 stores two nibble codes per
+    # byte (here decoded through the NF4 normal-float grid), kernels
+    # unpack in-tile, small id columns ride as bit-packed one-hot
+    # masks — roughly half the int8 footprint again, same contract
+    modes.append(("grouped/q4nf4", ServeConfig(
+        buckets=BucketConfig((64, 256, 1024)),
+        grouping=GroupingConfig(enabled=True),
+        quant=QuantConfig(enabled=True, bits=4, grid="nf4"))))
 
     results = {}
     arena_mb = {}
@@ -294,7 +302,7 @@ def fleet_demo(n_tenants, idx_a, idx_b, ds_a, ds_b, mesh=None,
         srv.run_until_drained()
         snap = srv.stats_snapshot()
         arena_mb[mode] = snap["arena_mb"]
-        if mode.endswith("/q8"):
+        if "/q" in mode:
             # the quantized fleet still answers yes on every indexed
             # record — the calibrated threshold + bit-exact fixup
             # stage keep the paper's no-FN invariant through int8
@@ -319,9 +327,38 @@ def fleet_demo(n_tenants, idx_a, idx_b, ds_a, ds_b, mesh=None,
                 f"{mode} answers must be bit-identical to ungrouped"
     print("  all fp32 modes bit-identical post-reload: OK")
     shrink = arena_mb["grouped"] / arena_mb["grouped/q8"]
+    shrink4 = arena_mb["grouped"] / arena_mb["grouped/q4nf4"]
     print(f"  compressed arenas: {arena_mb['grouped']:.2f} MB fp32 -> "
-          f"{arena_mb['grouped/q8']:.2f} MB int8 "
-          f"({shrink:.1f}x smaller, no false negatives)")
+          f"{arena_mb['grouped/q8']:.2f} MB int8 ({shrink:.1f}x) -> "
+          f"{arena_mb['grouped/q4nf4']:.2f} MB packed int4/NF4 "
+          f"({shrink4:.1f}x smaller, no false negatives)")
+
+    # quantized checkpoints (existence_index_v3): saving from a
+    # quantized server persists the packed payload + scales + the
+    # calibrated threshold, so hydrating it back skips quantization
+    # AND calibration — compare the reload against re-quantizing the
+    # in-memory fp32 index (the before/after of the v3 fast path)
+    srv = FilterServer(ServeConfig(
+        buckets=BucketConfig((64, 256, 1024)),
+        grouping=GroupingConfig(enabled=True),
+        quant=QuantConfig(enabled=True, bits=4, grid="nf4")))
+    for name, (_, idx) in fleet.items():
+        srv.admit(TenantSpec(name, index=idx))
+    with tempfile.TemporaryDirectory() as ckdir:
+        srv.save("tenant000", ckdir)
+        t0 = time.perf_counter()
+        srv.handle("tenant000").reload(checkpoint=ckdir)
+        t_v3 = time.perf_counter() - t0
+        _, idx0 = fleet["tenant000"]
+        fresh = existence.load_index(os.path.join(ckdir, "tenant000"))
+        assert fresh.quant_cache is not None    # v3: quant state rides
+    idx0.quant_cache = None     # drop the admit-time cache: time a REAL
+    t0 = time.perf_counter()    # re-quantize + calibrate from fp32
+    srv.handle("tenant000").reload(idx0)
+    t_requant = time.perf_counter() - t0
+    print(f"  v3 checkpoint reload: {t_v3 * 1e3:.1f}ms "
+          f"(calibration skipped) vs {t_requant * 1e3:.1f}ms "
+          "re-quantize from fp32")
 
 
 def reliability_demo(idx, ds):

@@ -76,6 +76,14 @@ def query_stages(params, cfg: lmbf.LMBFConfig, tau, fixup_bits,
     return model_yes | backup_yes, model_yes, backup_yes
 
 
+class QuantConfigMismatch(ValueError):
+    """A quantized (``existence_index_v3``) checkpoint payload was asked
+    to serve under a DIFFERENT quantization mode than it was packed for.
+    The packed codes are meaningless on another grid/width, so serving
+    them would produce garbage answers; hydration must fail loudly (and
+    non-transiently — no retry can fix a config mismatch) instead."""
+
+
 @dataclasses.dataclass
 class ExistenceIndex:
     cfg: lmbf.LMBFConfig
@@ -83,6 +91,11 @@ class ExistenceIndex:
     fixup_filter: fixup.FixupFilter
     tau: float
     train_log: dict
+    # lazily-populated quantized serving state (see ensure_quant_state):
+    # {"meta": quant-mode dict, "qparams": packed tree, "tau": calibrated
+    #  threshold, "pinned": bool — True iff loaded from a v3 checkpoint}
+    quant_cache: Optional[dict] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def scores(self, raw_ids) -> jax.Array:
         enc = comp.encode(jnp.asarray(raw_ids, jnp.int32), self.cfg.plan)
@@ -166,6 +179,48 @@ def fit(ds: tuples_lib.TupleDataset, theta: int, ns: int = 2,
                    "steps": st.steps})
 
 
+# ------------------------------------------------- quantized serving state
+
+def ensure_quant_state(idx: ExistenceIndex, qmeta: Dict):
+    """``(qparams, calibrated_tau)`` for serving ``idx`` under the
+    quantization mode ``qmeta`` (the dict form of a serve-side
+    QuantConfig: bits/grid/row_group/calib_samples/margin_safety/
+    margin_floor), computed at most once per mode per index.
+
+    The result is cached on ``idx.quant_cache``. A cache hydrated from
+    an ``existence_index_v3`` checkpoint is ``pinned``: requesting a
+    different mode raises :class:`QuantConfigMismatch` — the packed
+    payload only decodes on its own grid, and the caller chose a v3
+    checkpoint precisely to skip requantize+calibrate. An in-memory
+    (unpinned) cache for another mode is silently recomputed.
+    """
+    qmeta = {"bits": int(qmeta["bits"]), "grid": str(qmeta["grid"]),
+             "row_group": int(qmeta["row_group"]),
+             "calib_samples": int(qmeta["calib_samples"]),
+             "margin_safety": float(qmeta["margin_safety"]),
+             "margin_floor": float(qmeta["margin_floor"])}
+    cached = getattr(idx, "quant_cache", None)
+    if cached is not None:
+        if cached["meta"] == qmeta:
+            return cached["qparams"], cached["tau"]
+        if cached.get("pinned"):
+            raise QuantConfigMismatch(
+                f"checkpoint quantized as {cached['meta']} cannot serve "
+                f"under {qmeta}; re-save the index for the new mode or "
+                f"hydrate from an fp32 (v2) checkpoint")
+    qp = lmbf.quantize_params(idx.params, idx.cfg,
+                              row_group=qmeta["row_group"],
+                              bits=qmeta["bits"], grid=qmeta["grid"])
+    tau_q = lmbf.calibrated_tau(
+        idx.params, qp, idx.cfg, idx.tau, row_group=qmeta["row_group"],
+        n_samples=qmeta["calib_samples"], safety=qmeta["margin_safety"],
+        floor=qmeta["margin_floor"], bits=qmeta["bits"],
+        grid=qmeta["grid"])
+    idx.quant_cache = {"meta": qmeta, "qparams": qp, "tau": tau_q,
+                       "pinned": False}
+    return qp, tau_q
+
+
 # ------------------------------------------------------- (de)serialization
 
 def _plan_to_json(plan: comp.CompressionPlan) -> Dict:
@@ -194,14 +249,17 @@ def _plan_from_json(d: Dict) -> comp.CompressionPlan:
 # bit-for-bit), whose float accumulation differs in the last ulps — a
 # v1 index's borderline rows near tau can flip, and flipped members are
 # NOT covered by its fixup filter. Loading v1 therefore warns: refit to
-# restore the no-false-negative guarantee.
-_INDEX_KINDS = ("existence_index_v2", "existence_index_v1")
+# restore the no-false-negative guarantee. v3 = v2 plus the quantized
+# serving payload (packed codes + scales + calibrated tau), so hydrating
+# a quantized plan skips requantize+calibrate entirely.
+_INDEX_KINDS = ("existence_index_v3", "existence_index_v2",
+                "existence_index_v1")
 
 
-def index_meta(idx: ExistenceIndex) -> Dict:
+def index_meta(idx: ExistenceIndex, kind: str = "existence_index_v2") -> Dict:
     """JSON-safe description of everything but the arrays."""
     return {
-        "kind": "existence_index_v2",
+        "kind": kind,
         "plan": _plan_to_json(idx.cfg.plan),
         "hidden": list(idx.cfg.hidden),
         "onehot_max": idx.cfg.onehot_max,
@@ -222,14 +280,56 @@ def config_from_meta(meta: Dict) -> lmbf.LMBFConfig:
         dtype=jnp.dtype(meta["dtype"]))
 
 
+def _abstract_qparams(cfg: lmbf.LMBFConfig, qmeta: Dict) -> Dict:
+    """ShapeDtypeStruct tree of a v3 checkpoint's quantized payload —
+    derivable from config + quant meta alone, so restore never trusts
+    payload shapes."""
+    bits, rg = int(qmeta["bits"]), int(qmeta["row_group"])
+    qdt = jnp.uint8 if bits == 4 else jnp.int8
+    tree = {"embed": {}, "embed_scale": {}, "dense": {}, "dense_scale": {}}
+    for i, (rows, e) in enumerate(cfg.column_encodings):
+        if e is None:
+            continue
+        w = lmbf.packed_dim(e) if bits == 4 else e
+        tree["embed"][f"col{i}"] = jax.ShapeDtypeStruct((rows, w), qdt)
+        tree["embed_scale"][f"col{i}"] = jax.ShapeDtypeStruct(
+            (-(-rows // rg),), jnp.float32)
+    dims = lmbf.dense_in_dims(cfg)
+    for name, spec in lmbf.params_spec(cfg)["dense"].items():
+        if name.startswith("b"):
+            tree["dense"][name] = jax.ShapeDtypeStruct(
+                spec.shape, jnp.float32)
+            continue
+        d_in = lmbf.packed_dim(dims[name]) if bits == 4 else dims[name]
+        tree["dense"][name] = jax.ShapeDtypeStruct(
+            (d_in,) + tuple(spec.shape[1:]), qdt)
+        tree["dense_scale"][name] = jax.ShapeDtypeStruct(
+            tuple(spec.shape[1:]), jnp.float32)
+    return tree
+
+
 def save_index(directory: str, idx: ExistenceIndex, *, step: int = 0,
-               keep: int = 3) -> None:
+               keep: int = 3, quant: Optional[Dict] = None) -> None:
     """Persist a fitted index through the checkpoint manager (atomic,
     keep-N). Arrays (model params + fixup bitset) land in the npz
-    payload; the plan/config/tau ride in the JSON meta."""
+    payload; the plan/config/tau ride in the JSON meta.
+
+    With ``quant`` (a quant-mode dict, see :func:`ensure_quant_state`)
+    the checkpoint is written as ``existence_index_v3``: the packed
+    codes + scales land in the payload alongside the fp32 params (kept
+    so direct queries and fp32 plans still hydrate the same file) and
+    the calibrated tau rides in the meta — a quantized plan reloading
+    this file skips quantization AND calibration entirely."""
     tree = {"params": idx.params,
             "fixup_bits": np.asarray(idx.fixup_filter.bits)}
-    ckpt.save(directory, step, tree, extra=index_meta(idx), keep=keep)
+    if quant is None:
+        ckpt.save(directory, step, tree, extra=index_meta(idx), keep=keep)
+        return
+    qp, tau_q = ensure_quant_state(idx, quant)
+    tree["quant"] = qp
+    meta = index_meta(idx, kind="existence_index_v3")
+    meta["quant"] = dict(idx.quant_cache["meta"], tau_q=float(tau_q))
+    ckpt.save(directory, step, tree, extra=meta, keep=keep)
 
 
 def load_index(directory: str, step: Optional[int] = None) -> ExistenceIndex:
@@ -257,12 +357,29 @@ def load_index(directory: str, step: Optional[int] = None) -> ExistenceIndex:
         "params": abstract_params(lmbf.params_spec(cfg)),
         "fixup_bits": jax.ShapeDtypeStruct((bp.n_words,), jnp.uint32),
     }
+    if meta["kind"] == "existence_index_v3":
+        abstract["quant"] = _abstract_qparams(cfg, meta["quant"])
     tree = ckpt.restore(directory, step, abstract)
     fx = fixup.FixupFilter(
         params=bp, bits=np.asarray(tree["fixup_bits"]),
         n_false_negatives=int(meta["fixup"]["n_false_negatives"]))
-    return ExistenceIndex(cfg=cfg, params=tree["params"], fixup_filter=fx,
-                          tau=float(meta["tau"]), train_log=meta["train_log"])
+    idx = ExistenceIndex(cfg=cfg, params=tree["params"], fixup_filter=fx,
+                         tau=float(meta["tau"]),
+                         train_log=meta["train_log"])
+    if meta["kind"] == "existence_index_v3":
+        qmeta = {k: v for k, v in meta["quant"].items() if k != "tau_q"}
+        idx.quant_cache = {
+            "meta": {"bits": int(qmeta["bits"]),
+                     "grid": str(qmeta["grid"]),
+                     "row_group": int(qmeta["row_group"]),
+                     "calib_samples": int(qmeta["calib_samples"]),
+                     "margin_safety": float(qmeta["margin_safety"]),
+                     "margin_floor": float(qmeta["margin_floor"])},
+            "qparams": jax.tree_util.tree_map(np.asarray, tree["quant"]),
+            "tau": float(meta["quant"]["tau_q"]),
+            "pinned": True,
+        }
+    return idx
 
 
 def load_fixup_only(directory: str, step: Optional[int] = None

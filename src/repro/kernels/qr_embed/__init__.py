@@ -1,2 +1,4 @@
-from repro.kernels.qr_embed.ops import q8_embed_lookup, qr_embed
-from repro.kernels.qr_embed.ref import q8_gather_ref, qr_embed_ref
+from repro.kernels.qr_embed.ops import (q4_dense_dequant, q4_embed_lookup,
+                                        q8_embed_lookup, qr_embed)
+from repro.kernels.qr_embed.ref import (q4_dense_ref, q4_gather_ref,
+                                        q8_gather_ref, qr_embed_ref)

@@ -6,7 +6,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import lmbf
+from repro.kernels.qr_embed.q4_gather import q4_gather_call
 from repro.kernels.qr_embed.q8_gather import q8_gather_call
+from repro.kernels.qr_embed.q_dense import q4_dense_call
 from repro.kernels.qr_embed.qr_embed import qr_embed_call
 
 
@@ -45,3 +48,35 @@ def q8_embed_lookup(idx, sidx, table, scales, *, block_n: int = 1024,
     out = q8_gather_call(idx.reshape(-1), sidx.reshape(-1), table, scales,
                          block_n=block_n, interpret=interpret)
     return out.reshape(*shape, table.shape[1])
+
+
+def q4_embed_lookup(idx, sidx, table, scales, *, grid: str = "linear",
+                    block_n: int = 1024,
+                    interpret: Optional[bool] = None):
+    """idx, sidx: (...,) int32 -> (..., 2*pk) fused packed-int4 gather +
+    in-tile nibble unpack + LUT dequant.
+
+    Equivalent to ``nibble_values(unpack(table[idx]), grid) *
+    scales[sidx][..., None]`` with the packed table VMEM-pinned (see
+    q4_gather.py).  Indices must be pre-clipped in-bounds — the caller
+    owns wrap/NaN out-of-bounds semantics and trims any odd-width pad
+    column.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    shape = idx.shape
+    lut = jnp.asarray(lmbf.nibble_lut(grid, scales.dtype))
+    out = q4_gather_call(idx.reshape(-1), sidx.reshape(-1), table, scales,
+                         lut, block_n=block_n, interpret=interpret)
+    return out.reshape(*shape, 2 * table.shape[1])
+
+
+def q4_dense_dequant(qw, scales, *, prev: int, grid: str = "linear",
+                     interpret: Optional[bool] = None):
+    """qw: (g, pk, width) packed uint8 dense tiles -> (g, prev, width)
+    fp32, nibbles split + LUT-decoded + channel-scaled in-tile (see
+    q_dense.py)."""
+    if interpret is None:
+        interpret = default_interpret()
+    lut = jnp.asarray(lmbf.nibble_lut(grid, scales.dtype))
+    return q4_dense_call(qw, scales, lut, prev=prev, interpret=interpret)

@@ -1,0 +1,73 @@
+"""Fused packed-int4 gather + in-tile unpack + dequant for arenas.
+
+The 4-bit compressed arenas hold the combined embedding matrix as
+nibble-PACKED uint8 — two codes per byte along the feature axis — with
+one fp32 scale per row group.  The hot path must never widen that table
+in HBM: this kernel reads packed bytes, splits nibbles, decodes them
+through a 16-entry code->value LUT, and applies the scales, all in-tile,
+so neither the unpacked code tensor nor an fp32 table ever exists
+outside the (bn, 2*pk) output block that feeds the MLP —
+
+    codes[i] = interleave(table[idx[i]] & 0xF, table[idx[i]] >> 4)
+    out[i]   = lut[codes[i]] * scales[sidx[i]]
+
+``lut`` carries the grid: ``arange(16) - 8`` for the linear grid (so the
+LUT lookup equals the reference ``code - 8`` arithmetic bit-for-bit —
+integers up to 8 are exact in f32) or the NF4 normal-float table.  The
+nibble interleave matches ``lmbf.unpack_nibbles`` (low nibble first), so
+kernel and pure-JAX paths produce bit-identical floats.  ``idx``/``sidx``
+are precomputed (clipped in-bounds) by the caller, which owns the
+wrap/NaN out-of-bounds semantics.
+
+Grid: one program per block of ``bn`` ids; the packed table, scale
+vector, and LUT map fully into VMEM for every program (index_map -> 0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(idx_ref, sidx_ref, tab_ref, scale_ref, lut_ref, out_ref):
+    packed = jnp.take(tab_ref[...], idx_ref[...], axis=0)   # (bn, pk) u8
+    lo = packed & jnp.uint8(0xF)
+    hi = packed >> jnp.uint8(4)
+    codes = jnp.stack([lo, hi], axis=2) \
+        .reshape(packed.shape[0], 2 * packed.shape[1])
+    vals = jnp.take(lut_ref[...], codes.astype(jnp.int32))
+    s = jnp.take(scale_ref[...], sidx_ref[...]).astype(out_ref.dtype)
+    out_ref[...] = vals.astype(out_ref.dtype) * s[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def q4_gather_call(idx, sidx, table, scales, lut, *, block_n: int = 1024,
+                   interpret: bool = True):
+    """idx, sidx: (N,) int32; table: (rows, pk) packed uint8; scales:
+    (ng,) f32; lut: (16,) f32 -> (N, 2*pk) f32:
+    ``lut[unpack(table[idx])] * scales[sidx][:, None]``."""
+    n = idx.shape[0]
+    d = 2 * table.shape[1]
+    bn = min(block_n, n)
+    pad = (-n) % bn
+    if pad:
+        idx = jnp.pad(idx, (0, pad))
+        sidx = jnp.pad(sidx, (0, pad))
+    grid = (idx.shape[0] // bn,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec(table.shape, lambda i: (0, 0)),
+            pl.BlockSpec(scales.shape, lambda i: (0,)),
+            pl.BlockSpec(lut.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((idx.shape[0], d), scales.dtype),
+        interpret=interpret,
+    )(idx, sidx, table, scales, lut)
+    return out[:n] if pad else out

@@ -1,0 +1,58 @@
+"""Packed dense-stack dequant: the 4-bit variant of the dense path.
+
+Grouped serving gathers each megabatch tile's dense MLP weights from
+the arena's stacked (per-slot) arrays before the batched GEMMs.  At
+bits=4 those stacks are nibble-packed along the INPUT axis — uint8
+``(g, pk, width)`` where ``prev <= 2 * pk`` — and the GEMM wants
+``(g, prev, width)`` floats.  This kernel fuses the gather's tail:
+per-tile nibble split, code->value LUT decode, input-axis trim, and
+the per-output-channel scale multiply, so the unpacked code tensor
+never round-trips through HBM —
+
+    out[t] = lut[interleave(qw[t] & 0xF, qw[t] >> 4)][:prev] * s[t]
+
+The interleave matches ``lmbf.unpack_nibbles(axis=0)`` per tile and the
+LUT (linear ``arange(16) - 8`` or NF4) matches ``lmbf.nibble_values``,
+so the result is bit-identical to the pure-JAX dequant — grouped
+answers stay equal to ungrouped regardless of which path ran.
+
+Grid: one program per tile; each block is one tile's packed weight
+plus its scale row, with the LUT mapped fully (index_map -> 0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(prev, qw_ref, s_ref, lut_ref, out_ref):
+    p = qw_ref[...]                                  # (1, pk, width) u8
+    lo = p & jnp.uint8(0xF)
+    hi = p >> jnp.uint8(4)
+    codes = jnp.stack([lo, hi], axis=2) \
+        .reshape(p.shape[0], 2 * p.shape[1], p.shape[2])[:, :prev]
+    vals = jnp.take(lut_ref[...], codes.astype(jnp.int32))
+    out_ref[...] = vals.astype(out_ref.dtype) * s_ref[...][:, None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("prev", "interpret"))
+def q4_dense_call(qw, scales, lut, *, prev: int, interpret: bool = True):
+    """qw: (g, pk, width) packed uint8; scales: (g, width) f32; lut:
+    (16,) f32 -> (g, prev, width) f32 dequantized weight tiles."""
+    g, pk, width = qw.shape
+    out = pl.pallas_call(
+        functools.partial(_kernel, prev),
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, pk, width), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, width), lambda i: (i, 0)),
+            pl.BlockSpec(lut.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, prev, width), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, prev, width), scales.dtype),
+        interpret=interpret,
+    )(qw, scales, lut)
+    return out

@@ -19,3 +19,26 @@ def q8_gather_ref(idx, sidx, table, scales):
     ``table[idx].astype(f32) * scales[sidx][:, None]``."""
     return (jnp.take(table, idx, axis=0).astype(scales.dtype)
             * jnp.take(scales, sidx)[:, None])
+
+
+def q4_gather_ref(idx, sidx, table, scales, lut):
+    """idx, sidx: (N,) int32; table: (rows, pk) packed uint8 ->
+    (N, 2*pk): gather, nibble split (low first), LUT decode, scale."""
+    packed = jnp.take(table, idx, axis=0)
+    lo = packed & jnp.uint8(0xF)
+    hi = packed >> jnp.uint8(4)
+    codes = jnp.stack([lo, hi], axis=2) \
+        .reshape(packed.shape[0], 2 * packed.shape[1])
+    return (jnp.take(lut, codes.astype(jnp.int32)).astype(scales.dtype)
+            * jnp.take(scales, sidx)[:, None])
+
+
+def q4_dense_ref(qw, scales, lut, *, prev: int):
+    """qw: (g, pk, width) packed uint8 -> (g, prev, width): per-tile
+    input-axis nibble split, LUT decode, per-channel scale."""
+    lo = qw & jnp.uint8(0xF)
+    hi = qw >> jnp.uint8(4)
+    codes = jnp.stack([lo, hi], axis=2) \
+        .reshape(qw.shape[0], 2 * qw.shape[1], qw.shape[2])[:, :prev]
+    return (jnp.take(lut, codes.astype(jnp.int32)).astype(scales.dtype)
+            * scales[:, None, :])

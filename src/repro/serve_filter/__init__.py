@@ -26,9 +26,10 @@ Module map
     runs: plan shape (``LMBFConfig`` + ``BloomParams``), probe flavor
     (:class:`ProbeConfig`: pure-JAX vs Pallas kernel),
     :class:`Placement` (local vs mesh-sharded), and
-    :class:`QuantConfig` (fp32 vs int8 compressed storage — part of
-    plan AND group-key identity, so quantized and fp32 tenants never
-    share a program or an arena). :func:`plan_query` is the planner:
+    :class:`QuantConfig` (fp32 vs compressed storage — int8 or packed
+    int4/NF4 via ``bits``/``grid``, part of plan AND group-key
+    identity, so tenants with different storage modes never share a
+    program or an arena). :func:`plan_query` is the planner:
     config + fixup params + an optional target ``Mesh`` in, plan out.
 
 ``executors``
@@ -55,10 +56,12 @@ Module map
     views are ``device_put`` with ``NamedSharding`` per slice (matrix
     row-sharded, bitsets word-sharded, padded to divide the shard
     count) — no full replica ever materializes on one device. Under a
-    quantized group key the arena stores int8 tables + per-slot scale
-    vectors and each member's calibrated threshold — tenants quantize
-    ONCE at admit/reload, and the executors fuse dequant into the
-    query body (no fp32 table ever materializes).
+    quantized group key the arena stores int8 (or nibble-packed int4)
+    tables + per-slot scale vectors and each member's calibrated
+    threshold — tenants quantize ONCE at admit/reload (or arrive
+    pre-quantized from an ``existence_index_v3`` checkpoint and skip
+    even calibration), and the executors fuse dequant into the query
+    body (no fp32 table ever materializes).
 
 ``faults``
     The reliability vocabulary (PR 8): :class:`FaultConfig` — a
@@ -194,6 +197,7 @@ from repro.serve_filter.faults import (NULL_INJECTOR, DeadlineExceeded,
                                        FaultConfig, FaultInjector,
                                        InjectedFault, Overloaded,
                                        ReliabilityConfig, backoff_delays)
+from repro.core.existence import QuantConfigMismatch
 from repro.serve_filter.plan import (GroupKey, Placement, ProbeConfig,
                                      QuantConfig, QueryPlan, group_key,
                                      plan_query)

@@ -56,7 +56,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import existence, lmbf
 from repro.serve_filter.faults import NULL_INJECTOR, FaultInjector
-from repro.serve_filter.plan import GroupKey
+from repro.serve_filter.plan import GroupKey, quantize_index
 
 MIN_CAPACITY = 4
 _BITS_GROWTH = 1.5
@@ -103,21 +103,33 @@ class PlanGroupArena:
         self._emb_rows = sum(rows for _, rows, _ in self._emb_cols)
         self._e_max = max((e for _, _, e in self._emb_cols), default=1)
         # compressed storage: a quantized group key stores the combined
-        # matrix int8 with a flat per-row-group scale vector laid out
+        # matrix int8 — or, at bits=4, nibble-PACKED uint8 (two codes per
+        # byte along the feature axis, so the stored width is
+        # ceil(e_max / 2) and row indexing/sharding is untouched) — with
+        # a flat per-row-group scale vector laid out
         # [column block][slot][group] (a scale group never straddles a
-        # tenant boundary), and the dense stacks int8 with per-slot
-        # per-channel scale stacks — the device views carry the
-        # compressed dtype, so device_nbytes drops for real
+        # tenant boundary), and the dense stacks int8 / packed uint8
+        # (packed along the input axis) with per-slot per-channel scale
+        # stacks — the device views carry the compressed dtype, so
+        # device_nbytes drops for real
         self._quant = key.quant.enabled
+        self._bits4 = self._quant and key.quant.bits == 4
         self._rg = key.quant.row_group
         self._sg_cols = [-(-rows // self._rg)
                          for _, rows, _ in self._emb_cols]
         self._sg_rows = sum(self._sg_cols)
         self._embed_scale = np.zeros(0, np.float32)
+        # stored column width of the combined matrix (packed at bits=4)
+        self._e_store = lmbf.packed_dim(self._e_max) if self._bits4 \
+            else self._e_max
         # host mirrors (authoritative); shapes carry a leading slot axis
-        self._embed_flat = np.zeros(
-            (0, self._e_max),
-            np.int8 if self._quant else jnp.dtype(key.cfg.dtype))
+        if self._bits4:
+            emb_dtype = np.dtype(np.uint8)
+        elif self._quant:
+            emb_dtype = np.dtype(np.int8)
+        else:
+            emb_dtype = jnp.dtype(key.cfg.dtype)
+        self._embed_flat = np.zeros((0, self._e_store), emb_dtype)
         self._params: Dict[str, Dict[str, np.ndarray]] = {}
         self._tau = np.zeros(0, np.float32)
         self._m_bits = np.zeros(0, np.uint32)
@@ -184,8 +196,10 @@ class PlanGroupArena:
         charging the full arena to every device overstates pressure by
         ~the shard count exactly where sharding is the point."""
         n = self.n_shards
+        # STORED width (packed at bits=4), not the logical e_max — the
+        # device views hold packed bytes, so capacity math must too
         per_shard = -(-self._embed_flat.shape[0] // n) * \
-            self._e_max * self._embed_flat.itemsize
+            self._embed_flat.shape[1] * self._embed_flat.itemsize
         per_shard += -(-self._bits.size // n) * self._bits.itemsize
         per_shard += self._embed_scale.nbytes      # replicated (tiny)
         per_shard += self._tau.nbytes + self._m_bits.nbytes + \
@@ -265,13 +279,10 @@ class PlanGroupArena:
         invariant and reload stays zero-drain (the mirrors mutate, but
         in-flight batches hold the previous device snapshots)."""
         if self._quant:
-            qc = self.key.quant
-            qp = lmbf.quantize_params(index.params, self.key.cfg,
-                                      self._rg)
-            tau = lmbf.calibrated_tau(
-                index.params, qp, self.key.cfg, index.tau,
-                row_group=self._rg, n_samples=qc.calib_samples,
-                safety=qc.margin_safety, floor=qc.margin_floor)
+            # the shared quantize entry point: cached on the index, so a
+            # v3-checkpoint hydration (or a second placement of the same
+            # index) never requantizes or recalibrates here
+            qp, tau = quantize_index(index, self.key.quant)
             for name, arr in qp["dense"].items():
                 self._params["dense"][name][slot] = arr
             for name, arr in qp["dense_scale"].items():
@@ -279,8 +290,9 @@ class PlanGroupArena:
             for (i, rows, e), start, sstart, ng in zip(
                     self._emb_cols, self._emb_starts(self.capacity),
                     self._sg_starts(self.capacity), self._sg_cols):
+                e_w = lmbf.packed_dim(e) if self._bits4 else e
                 self._embed_flat[start + slot * rows:
-                                 start + (slot + 1) * rows, :e] = \
+                                 start + (slot + 1) * rows, :e_w] = \
                     qp["embed"][f"col{i}"]
                 self._embed_scale[sstart + slot * ng:
                                   sstart + (slot + 1) * ng] = \
@@ -524,18 +536,24 @@ class PlanGroupArena:
             fresh["dense_scale"] = {}
         for name, s in spec["dense"].items():
             dtype = jnp.dtype(s.dtype)
+            shape = tuple(s.shape)
             if self._quant and name.startswith("w"):
-                dtype = np.dtype(np.int8)
+                if self._bits4:
+                    # packed along the input axis: two codes per byte
+                    dtype = np.dtype(np.uint8)
+                    shape = (lmbf.packed_dim(shape[0]),) + shape[1:]
+                else:
+                    dtype = np.dtype(np.int8)
                 sc = np.zeros((new_cap, s.shape[-1]), np.float32)
                 if old:
                     sc[:keep] = self._params["dense_scale"][name][:keep]
                 fresh["dense_scale"][name] = sc
-            arr = np.zeros((new_cap,) + tuple(s.shape), dtype)
+            arr = np.zeros((new_cap,) + shape, dtype)
             if old:
                 arr[:keep] = self._params["dense"][name][:keep]
             fresh["dense"][name] = arr
         self._params = fresh
-        flat = np.zeros((new_cap * self._emb_rows, self._e_max),
+        flat = np.zeros((new_cap * self._emb_rows, self._e_store),
                         self._embed_flat.dtype)
         if old:
             for (_, rows, _), new_start, old_start in zip(
@@ -605,7 +623,7 @@ class PlanGroupArena:
             new_cap *= 2
         self.capacity = 0
         self._params = {}
-        self._embed_flat = np.zeros((0, self._e_max), old_flat.dtype)
+        self._embed_flat = np.zeros((0, self._e_store), old_flat.dtype)
         self._resize_slots(new_cap)
 
         total_words = int(sum(old_len[s] for _, s in live))

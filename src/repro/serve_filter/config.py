@@ -228,6 +228,8 @@ class ServeConfig:
                     grouped: bool = False,
                     tile_rows: int = DEFAULT_TILE_ROWS,
                     quantized: bool = False,
+                    quant_bits: int = 8,
+                    quant_grid: str = "linear",
                     quant_row_group: int = 32,
                     metrics_path: Optional[str] = None,
                     metrics_echo: bool = False,
@@ -246,6 +248,8 @@ class ServeConfig:
             probe=ProbeConfig(use_kernel=bool(use_kernel),
                               interpret=interpret, block_n=int(block_n)),
             quant=QuantConfig(enabled=bool(quantized),
+                              bits=int(quant_bits),
+                              grid=str(quant_grid),
                               row_group=int(quant_row_group)),
             metrics=MetricsConfig(path=metrics_path,
                                   echo=bool(metrics_echo),

@@ -81,7 +81,8 @@ from repro.core import bloom, existence, lmbf
 from repro.kernels.bloom_query import ops as bloom_ops
 from repro.kernels.qr_embed import ops as qr_ops
 from repro.nn.spec import is_spec
-from repro.serve_filter.plan import GroupKey, PROBE_KERNEL, QueryPlan
+from repro.serve_filter.plan import (GroupKey, PROBE_KERNEL, QueryPlan,
+                                     quantize_index)
 from repro.sharding import rules
 from repro.sharding.pipeline import shard_map
 
@@ -277,13 +278,18 @@ def _sharded_tenant_predict(cfg, axis: str):
     return predict_fn
 
 
-def _sharded_quant_predict(cfg, axis: str, row_group: int):
-    """The quantized flavor of :func:`_sharded_tenant_predict`: int8
-    tables row-sharded, fp32 scale vectors replicated (they are tiny).
-    The owning shard dequantizes its row in place — ``q.astype(f32) *
-    scale``, the reference ``lmbf.q8_gather`` math — and the psum adds
-    exact zeros from everyone else, so quantized-sharded scores are
-    bit-identical to quantized-local.  Out-of-vocab ids wrap/NaN-fill
+def _sharded_quant_predict(cfg, axis: str, row_group: int,
+                           bits: int = 8, grid: str = "linear"):
+    """The quantized flavor of :func:`_sharded_tenant_predict`: int8 (or
+    packed-int4 uint8) tables row-sharded, fp32 scale vectors replicated
+    (they are tiny).  The owning shard dequantizes its row in place —
+    unpack + ``value * scale``, the reference ``lmbf.q_gather`` math —
+    and the psum adds exact zeros from everyone else, so
+    quantized-sharded scores are bit-identical to quantized-local.
+    Feature-axis packing means row ownership (and therefore the
+    sharding) is unchanged at 4 bits.  One-hot columns run through the
+    bit-packed mask form (``lmbf.onehot_feature``), identical {0, 1}
+    floats to ``jax.nn.one_hot``.  Out-of-vocab ids wrap/NaN-fill
     exactly like the local gather, applied post-psum."""
 
     def predict_fn(params, cfg_, enc):
@@ -292,12 +298,12 @@ def _sharded_quant_predict(cfg, axis: str, row_group: int):
         for i, (rows, e) in enumerate(cfg_.column_encodings):
             ids = enc[..., i]
             if e is None:
-                oh = jax.nn.one_hot(ids, rows, dtype=cfg_.dtype)
+                oh = lmbf.onehot_feature(ids, rows, cfg_.dtype)
                 pieces.append(jnp.where(shard == 0, oh,
                                         jnp.zeros_like(oh)))
                 masks.append(None)
             else:
-                q = params["embed"][f"col{i}"]          # (rows_local, e) i8
+                q = params["embed"][f"col{i}"]     # (rows_local, e|pk)
                 s = params["embed_scale"][f"col{i}"]    # (ng,) f32, repl
                 rl = q.shape[0]
                 wrapped = jnp.where(ids < 0, ids + rows, ids)
@@ -305,10 +311,15 @@ def _sharded_quant_predict(cfg, axis: str, row_group: int):
                 safe = jnp.clip(wrapped, 0, rows - 1)
                 lid = safe - shard * rl
                 ok = (lid >= 0) & (lid < rl)
-                g = (jnp.take(q, jnp.clip(lid, 0, rl - 1), axis=0)
-                     .astype(cfg_.dtype)
-                     * jnp.take(s, safe // row_group)[..., None]
-                     .astype(cfg_.dtype))
+                g = jnp.take(q, jnp.clip(lid, 0, rl - 1), axis=0)
+                if bits == 4:
+                    g = lmbf.nibble_values(
+                        lmbf.unpack_nibbles(g, axis=-1), grid,
+                        cfg_.dtype)[..., :e]
+                else:
+                    g = g.astype(cfg_.dtype)
+                g = g * jnp.take(s, safe // row_group)[..., None] \
+                    .astype(cfg_.dtype)
                 pieces.append(jnp.where(ok[..., None], g,
                                         jnp.zeros_like(g)))
                 masks.append(valid)
@@ -323,24 +334,20 @@ def _sharded_quant_predict(cfg, axis: str, row_group: int):
             segs.append(seg)
             off += w
         x = jnp.concatenate(segs, axis=-1)
-        dense = lmbf.dequantize_dense(params, cfg_.dtype)
+        dense = lmbf.dequantize_dense(params, cfg_.dtype, cfg_,
+                                      bits=bits, grid=grid)
         return jax.nn.sigmoid(lmbf.mlp_head({"dense": dense}, cfg_, x))
 
     return predict_fn
 
 
 def _quantize_index(plan: QueryPlan, index: existence.ExistenceIndex):
-    """Admit/reload-time quantization of one tenant: int8 qparams tree +
-    calibrated serving threshold.  Deterministic in (params, QuantConfig),
-    so grouped / ungrouped / sharded placements of the same index agree
-    exactly."""
-    qc = plan.quant
-    qp = lmbf.quantize_params(index.params, plan.cfg, qc.row_group)
-    tau_q = lmbf.calibrated_tau(
-        index.params, qp, plan.cfg, index.tau,
-        row_group=qc.row_group, n_samples=qc.calib_samples,
-        safety=qc.margin_safety, floor=qc.margin_floor)
-    return qp, tau_q
+    """Admit/reload-time quantization of one tenant: qparams tree +
+    calibrated serving threshold, via the ONE shared (index-cached)
+    entry point — deterministic in (params, QuantConfig), so grouped /
+    ungrouped / sharded placements of the same index agree exactly and
+    a v3-checkpoint hydration skips the work entirely."""
+    return quantize_index(index, plan.quant)
 
 
 # ------------------------------------------- single-tenant (grouping off)
@@ -351,6 +358,7 @@ def _tenant_program(plan: QueryPlan, mesh: Optional[Mesh]):
     cfg, fp = plan.cfg, plan.fixup_params
     quant = plan.quant.enabled
     rg = plan.quant.row_group
+    qbits, qgrid = plan.quant.bits, plan.quant.grid
 
     if not plan.placement.sharded:
         if plan.probe == PROBE_KERNEL:
@@ -362,10 +370,13 @@ def _tenant_program(plan: QueryPlan, mesh: Optional[Mesh]):
             probe = None
 
         if quant:
-            # fused dequant: the program binds the int8 qparams tree and
-            # applies q.astype(f32) * scale inside the gather/GEMM body
+            # fused dequant: the program binds the quantized qparams
+            # tree and applies unpack + value * scale inside the
+            # gather/GEMM body (predict_q also routes one-hot columns
+            # through the bit-packed mask form)
             def local_predict(p, cfg_, enc):
-                return lmbf.predict_q(p, cfg_, enc, row_group=rg)
+                return lmbf.predict_q(p, cfg_, enc, row_group=rg,
+                                      bits=qbits, grid=qgrid)
         else:
             local_predict = None
 
@@ -379,8 +390,8 @@ def _tenant_program(plan: QueryPlan, mesh: Optional[Mesh]):
 
     axis = plan.placement.axis
     wl = plan.words_per_shard()
-    predict_fn = (_sharded_quant_predict(cfg, axis, rg) if quant
-                  else _sharded_tenant_predict(cfg, axis))
+    predict_fn = (_sharded_quant_predict(cfg, axis, rg, qbits, qgrid)
+                  if quant else _sharded_tenant_predict(cfg, axis))
 
     if plan.probe == PROBE_KERNEL:
         def local_miss(bits_local, ids):
@@ -502,6 +513,10 @@ def _grouped_program(key: GroupKey, mesh: Optional[Mesh]):
     axis = key.placement.axis
     quant = key.quant.enabled
     rg = key.quant.row_group
+    bits4 = quant and key.quant.bits == 4
+    qgrid = key.quant.grid
+    # input-axis widths the packed dense stacks unpack back to
+    dense_dims = lmbf.dense_in_dims(cfg) if bits4 else None
     # combined-embedding layout (must mirror PlanGroupArena's):
     # embedded columns' tables live back to back in one row-padded
     # matrix so ONE gather serves every subcolumn
@@ -520,10 +535,26 @@ def _grouped_program(key: GroupKey, mesh: Optional[Mesh]):
         scheduler-controlled live slots, so the bounds check is
         safely skipped. Dense stacks are replicated on every
         placement (tables + bitsets carry the bytes), so the tiles
-        are too.  Quantized arenas dequantize HERE — int8 stacks stay
-        int8 in device memory; only the (tiny, memoized) gathered
-        tiles widen to fp32, via the same per-channel q * scale as
-        the ungrouped path."""
+        are too.  Quantized arenas dequantize HERE — int8 / packed
+        uint8 stacks stay compressed in device memory; only the (tiny,
+        memoized) gathered tiles widen to fp32, via the same
+        per-channel unpack + value * scale as the ungrouped path.  At
+        bits=4 with the kernel probe flavor the nibble split + LUT
+        decode runs in-tile (kernels/qr_embed q_dense) so the unpacked
+        code tensor never round-trips through HBM; the pure-jnp form
+        is the same math elementwise, so both are bit-identical."""
+
+        def deq4(w, s, prev):
+            # (g, pk, width) packed + (g, width) scales -> (g, prev,
+            # width) floats, matching lmbf.dequantize_dense per tile
+            if key.probe == PROBE_KERNEL and not sharded:
+                return qr_ops.q4_dense_dequant(
+                    w, s, prev=prev, grid=qgrid,
+                    interpret=key.interpret)
+            codes = lmbf.unpack_nibbles(w, axis=1)[:, :prev]
+            return (lmbf.nibble_values(codes, qgrid, cfg.dtype)
+                    * s[:, None, :])
+
         tiles = {}
         for li in range(n_hidden):
             w = params["dense"][f"w{li}"] \
@@ -531,16 +562,22 @@ def _grouped_program(key: GroupKey, mesh: Optional[Mesh]):
             if quant:
                 s = params["dense_scale"][f"w{li}"] \
                     .at[tile_idx].get(mode="promise_in_bounds")
-                w = w.astype(cfg.dtype) * s[:, None, :]
+                w = deq4(w, s, dense_dims[f"w{li}"]) if bits4 \
+                    else w.astype(cfg.dtype) * s[:, None, :]
             tiles[f"w{li}"] = w
             tiles[f"b{li}"] = params["dense"][f"b{li}"] \
                 .at[tile_idx].get(mode="promise_in_bounds")
         w_out = params["dense"]["w_out"] \
-            .at[tile_idx].get(mode="promise_in_bounds")[..., 0]
+            .at[tile_idx].get(mode="promise_in_bounds")
         if quant:
             s = params["dense_scale"]["w_out"] \
                 .at[tile_idx].get(mode="promise_in_bounds")  # (g, 1)
-            w_out = w_out.astype(cfg.dtype) * s
+            if bits4:
+                w_out = deq4(w_out, s, dense_dims["w_out"])[..., 0]
+            else:
+                w_out = w_out[..., 0].astype(cfg.dtype) * s
+        else:
+            w_out = w_out[..., 0]
         tiles["w_out"] = w_out
         tiles["b_out"] = params["dense"]["b_out"] \
             .at[tile_idx].get(mode="promise_in_bounds")[..., 0]
@@ -607,12 +644,20 @@ def _grouped_program(key: GroupKey, mesh: Optional[Mesh]):
                 def dequant(g, shape):
                     # fused dequant: the replicated flat scale vector
                     # is slot-blocked, so sidx never reads a neighbor
-                    # tenant's scales; q.astype(f32) * scale is the
-                    # reference lmbf.q8_gather math, bit-identical on
-                    # every placement
+                    # tenant's scales; unpack + value * scale is the
+                    # reference lmbf.q_gather math, bit-identical on
+                    # every placement (at bits=4 the gathered packed
+                    # bytes double to 2*pk code columns here — the
+                    # per-column e-slice below trims the pad)
                     sc = p["embed_scale"].at[sidx.reshape(-1)] \
                         .get(mode="promise_in_bounds").reshape(shape)
-                    return g.astype(cfg_.dtype) * sc[..., None]
+                    if bits4:
+                        g = lmbf.nibble_values(
+                            lmbf.unpack_nibbles(g, axis=-1), qgrid,
+                            cfg_.dtype)
+                    else:
+                        g = g.astype(cfg_.dtype)
+                    return g * sc[..., None]
 
                 if sharded:
                     # row-sharded combined matrix: every global row is
@@ -630,11 +675,19 @@ def _grouped_program(key: GroupKey, mesh: Optional[Mesh]):
                         jnp.where(owned[..., None], g,
                                   jnp.zeros_like(g)), axis)
                 elif quant and key.probe == PROBE_KERNEL:
-                    # Pallas q8 gather: int8 rows never widen in HBM,
-                    # scales applied in-tile (same elementwise math)
-                    gathered = qr_ops.q8_embed_lookup(
-                        idx, sidx, flat, p["embed_scale"],
-                        block_n=key.block_n, interpret=key.interpret)
+                    # Pallas gather: compressed rows never widen in
+                    # HBM, scales (and at bits=4 the nibble split +
+                    # LUT decode) applied in-tile — same elementwise
+                    # math as the jnp path
+                    if bits4:
+                        gathered = qr_ops.q4_embed_lookup(
+                            idx, sidx, flat, p["embed_scale"],
+                            grid=qgrid, block_n=key.block_n,
+                            interpret=key.interpret)
+                    else:
+                        gathered = qr_ops.q8_embed_lookup(
+                            idx, sidx, flat, p["embed_scale"],
+                            block_n=key.block_n, interpret=key.interpret)
                 else:
                     gathered = flat.at[idx.reshape(-1)] \
                         .get(mode="promise_in_bounds") \
@@ -647,9 +700,16 @@ def _grouped_program(key: GroupKey, mesh: Optional[Mesh]):
                 if e is None:
                     # no table: the one-hot depends only on the
                     # (replicated) encoded ids, so every shard computes
-                    # it identically — no psum term needed
-                    feats.append(jax.nn.one_hot(enc[..., i], rows,
-                                                dtype=cfg_.dtype))
+                    # it identically — no psum term needed. Quantized
+                    # groups stream it through the bit-packed uint32
+                    # mask form (identical {0, 1} floats), so the fp32
+                    # one-hot never materializes as a stored activation
+                    if quant:
+                        feats.append(lmbf.onehot_feature(
+                            enc[..., i], rows, cfg_.dtype))
+                    else:
+                        feats.append(jax.nn.one_hot(enc[..., i], rows,
+                                                    dtype=cfg_.dtype))
                 else:               # exact table rows, e_max-padded
                     feats.append(jnp.where(
                         valids[gi][..., None], gathered[:, gi, :e],

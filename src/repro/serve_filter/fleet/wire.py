@@ -51,7 +51,10 @@ __all__ = [
     "dumps", "loads",
 ]
 
-WIRE_SCHEMA_VERSION = 1
+# v2: QuantConfig grew ``bits`` and ``grid`` (int4/NF4 packed arenas) —
+# the closed schema means v1 peers must reject v2 payloads, not drop
+# the new fields
+WIRE_SCHEMA_VERSION = 2
 
 KIND_CONFIG = "serve_config"
 KIND_SPEC = "tenant_spec"

@@ -42,7 +42,7 @@ from typing import Optional
 
 from jax.sharding import Mesh
 
-from repro.core import bloom, lmbf
+from repro.core import bloom, existence, lmbf
 
 LOCAL = "local"
 SHARDED = "sharded"
@@ -72,33 +72,53 @@ class QuantConfig:
     """Compressed-arena storage mode for tenant state.
 
     ``enabled=False`` (the default) keeps today's fp32 arenas.  When
-    enabled, embedding tables are stored int8 with one fp32 scale per
-    ``row_group`` rows and dense MLP weights int8 with one fp32 scale
+    enabled, embedding tables are stored quantized with one fp32 scale
+    per ``row_group`` rows and dense MLP weights with one fp32 scale
     per output channel (biases stay fp32, the fixup bitset is already
-    bit-packed).  Dequantization is fused into the query program —
-    ``q.astype(f32) * scale`` feeds the existing gather→GEMM body — so
-    the fp32 table never materializes in device memory.
+    bit-packed).  ``bits`` selects the storage width: 8 stores plain
+    int8; 4 stores two nibble codes per uint8 byte — embedding tables
+    packed along the feature axis (row sharding unchanged), dense
+    weights along the input axis — decoded on ``grid``: ``"linear"``
+    (value = (code−8)·scale) or ``"nf4"`` (QLoRA's 16 normal-float
+    levels, value = NF4_TABLE[code]·scale; requires ``bits=4``).
+    Dequantization is fused into the query program — unpack +
+    ``value * scale`` feeds the existing gather→GEMM body — so neither
+    the fp32 table nor the unpacked code tensor ever persists in device
+    memory.
 
-    Because int8 scores can flip at ``tau``, each tenant's serving
+    Because quantized scores can flip at ``tau``, each tenant's serving
     threshold is lowered by an empirical logit margin calibrated at
-    admit/reload time: ``margin_safety`` × the max |fp32 − int8| logit
-    gap over ``calib_samples`` deterministic draws from the tenant's own
-    encoded-id domain, plus ``margin_floor``.  Keys the fp32 model
-    accepted therefore stay model-positive under int8, and keys it
-    rejected remain covered by the bit-exact fixup probe — the
-    no-false-negative invariant survives quantization unconditionally.
+    admit/reload time ON THE SERVING GRID: ``margin_safety`` × the max
+    |fp32 − quantized| logit gap over ``calib_samples`` deterministic
+    draws from the tenant's own encoded-id domain, plus
+    ``margin_floor``.  Keys the fp32 model accepted therefore stay
+    model-positive under quantization, and keys it rejected remain
+    covered by the bit-exact fixup probe — the no-false-negative
+    invariant survives compression unconditionally, at 4 bits the
+    margin is simply proportionally wider.
 
     Frozen and hashable: it rides in :class:`QueryPlan` and
-    :class:`GroupKey`, so quantized and fp32 tenants never share a
-    compiled program or an arena.
+    :class:`GroupKey`, so tenants with different storage modes (fp32 vs
+    int8 vs int4, linear vs nf4) never share a compiled program or an
+    arena.
     """
     enabled: bool = False
+    bits: int = 8              # storage width: 8 (int8) or 4 (packed nibbles)
+    grid: str = "linear"       # 4-bit code book: "linear" or "nf4"
     row_group: int = 32        # embedding rows sharing one scale
     calib_samples: int = 512   # tau-margin calibration sample size
     margin_safety: float = 2.0  # multiplier on the observed max logit gap
     margin_floor: float = 1e-3  # additive logit floor on the margin
 
     def __post_init__(self):
+        if self.bits not in lmbf.QUANT_BITS:
+            raise ValueError(
+                f"bits must be one of {lmbf.QUANT_BITS}, got {self.bits}")
+        if self.grid not in lmbf.QUANT_GRIDS:
+            raise ValueError(
+                f"grid must be one of {lmbf.QUANT_GRIDS}, got {self.grid!r}")
+        if self.grid == "nf4" and self.bits != 4:
+            raise ValueError("grid='nf4' requires bits=4")
         if self.row_group < 1:
             raise ValueError("row_group must be >= 1")
         if self.calib_samples < 1:
@@ -107,6 +127,14 @@ class QuantConfig:
             raise ValueError("margin_safety must be >= 1.0")
         if self.margin_floor < 0.0:
             raise ValueError("margin_floor must be >= 0.0")
+
+    def label(self) -> str:
+        """Telemetry suffix: "" (fp32), "/q8", "/q4", or "/q4nf4"."""
+        if not self.enabled:
+            return ""
+        if self.bits == 8:
+            return "/q8"
+        return "/q4nf4" if self.grid == "nf4" else "/q4"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,10 +185,9 @@ class QueryPlan:
         probe flavor, plan width, fixup geometry, placement."""
         where = (f"sharded[{self.placement.axis}x{self.placement.n_shards}]"
                  if self.placement.sharded else "local")
-        q8 = "/q8" if self.quant.enabled else ""
         return (f"{self.probe}/{self.n_cols}c/"
                 f"m{self.fixup_params.m_bits}k{self.fixup_params.n_hashes}/"
-                f"{where}{q8}")
+                f"{where}{self.quant.label()}")
 
     # ---- sharded-layout geometry (padding so slices divide evenly) ----
     def words_per_shard(self) -> int:
@@ -218,9 +245,9 @@ class GroupKey:
         """Short human label for telemetry (compile events, traces)."""
         where = (f"sharded[{self.placement.axis}x{self.placement.n_shards}]"
                  if self.placement.sharded else "local")
-        q8 = "/q8" if self.quant.enabled else ""
         return (f"group:{self.probe}/{self.cfg.plan.n_columns}c/"
-                f"k{self.n_hashes}/t{self.tile_rows}/{where}{q8}")
+                f"k{self.n_hashes}/t{self.tile_rows}/{where}"
+                f"{self.quant.label()}")
 
 
 def group_key(plan: QueryPlan,
@@ -266,3 +293,33 @@ def plan_query(cfg: lmbf.LMBFConfig, fixup_params: bloom.BloomParams, *,
                      interpret=probe.interpret, block_n=int(probe.block_n),
                      placement=placement,
                      quant=quant if quant is not None else QuantConfig())
+
+
+def quant_meta(quant: QuantConfig) -> dict:
+    """The JSON-safe identity of a quantization mode — everything that
+    changes the packed payload or the calibrated threshold. This dict is
+    what ``existence_index_v3`` checkpoints persist and what cached
+    quant state is validated against on hydration."""
+    return {"bits": int(quant.bits), "grid": str(quant.grid),
+            "row_group": int(quant.row_group),
+            "calib_samples": int(quant.calib_samples),
+            "margin_safety": float(quant.margin_safety),
+            "margin_floor": float(quant.margin_floor)}
+
+
+def quantize_index(index: "existence.ExistenceIndex",
+                   quant: QuantConfig):
+    """``(qparams, calibrated_tau)`` for serving ``index`` under
+    ``quant`` — the ONE quantization entry point every placement uses
+    (per-tenant local/sharded programs, grouped arena slot writes, v3
+    checkpoint save), so a tenant quantizes at most once per mode per
+    (re)load no matter how many consumers ask.
+
+    Results are cached on the index (``index.quant_cache``). A cache
+    loaded from an ``existence_index_v3`` checkpoint is authoritative:
+    asking for a DIFFERENT mode than the payload was packed for raises
+    :class:`repro.core.existence.QuantConfigMismatch` instead of
+    silently re-quantizing (the checkpoint was chosen to skip exactly
+    that work); an in-memory cache for another mode just recomputes.
+    """
+    return existence.ensure_quant_state(index, quant_meta(quant))

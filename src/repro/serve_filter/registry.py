@@ -83,7 +83,8 @@ from repro.serve_filter.faults import (NULL_INJECTOR, CheckpointCorruption,
                                        FaultInjector, InjectedFault,
                                        ReliabilityConfig, backoff_delays)
 from repro.serve_filter.plan import (GroupKey, ProbeConfig, QuantConfig,
-                                     QueryPlan, group_key, plan_query)
+                                     QueryPlan, group_key, plan_query,
+                                     quant_meta)
 
 # hydration failure kinds the retry loop treats as TRANSIENT: injected
 # faults (chaos), and corrupt/unreadable checkpoint reads (a writer may
@@ -609,9 +610,17 @@ class FilterRegistry:
 
     # ------------------------------------------------------- persistence
     def save(self, tenant: str, directory: str, *, step: int = 0) -> str:
-        """Write a tenant's filter under ``directory/<tenant>``."""
+        """Write a tenant's filter under ``directory/<tenant>``.
+
+        A quantized registry writes ``existence_index_v3``: the packed
+        payload, scales, and calibrated tau ride along (reusing the
+        tenant's cached quant state, so no extra quantize/calibrate
+        runs), and a later hydration into the same QuantConfig skips
+        calibration entirely — the quant reload fast path."""
         path = os.path.join(directory, tenant)
-        existence.save_index(path, self._entries[tenant].index, step=step)
+        quant = quant_meta(self.quant) if self.quant.enabled else None
+        existence.save_index(path, self._entries[tenant].index, step=step,
+                             quant=quant)
         return path
 
     def load(self, tenant: str, directory: str,

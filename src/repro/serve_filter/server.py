@@ -364,13 +364,15 @@ class FilterServer:
     def stats_snapshot(self) -> Dict[str, float]:
         # refresh the per-dtype arena membership gauges BEFORE the
         # snapshot so they ride along in the same flat dict
-        n_int8 = n_fp32 = 0
+        n_int8 = n_fp32 = n_int4 = 0
         for a in self.registry.groups.values():
-            if a.key.quant.enabled:
-                n_int8 += len(a)
-            else:
+            if not a.key.quant.enabled:
                 n_fp32 += len(a)
-        self.stats.set_arena_membership(n_int8, n_fp32)
+            elif a.key.quant.bits == 4:
+                n_int4 += len(a)
+            else:
+                n_int8 += len(a)
+        self.stats.set_arena_membership(n_int8, n_fp32, n_int4)
         self.stats.set_degraded_tenants(sum(
             1 for t in self.registry.tenants
             if self.registry.state_of(t) is TenantState.DEGRADED))

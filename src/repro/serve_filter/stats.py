@@ -242,6 +242,7 @@ class ServeStats:
         # arenas right now — gauges, not cumulative counters)
         self.arena_tenants_int8 = 0
         self.arena_tenants_fp32 = 0
+        self.arena_tenants_int4 = 0
         # live DEGRADED-tenant gauge (set by the server per snapshot)
         self.degraded_tenants = 0
 
@@ -319,13 +320,15 @@ class ServeStats:
         self.totals.reloads += 1
         self.reload_latency.record(latency_s)
 
-    def set_arena_membership(self, int8_tenants: int,
-                             fp32_tenants: int) -> None:
-        """Record how many live grouped tenants sit in quantized (int8)
-        vs full-precision (fp32) arenas — per-dtype occupancy gauges
-        refreshed by the server before each snapshot."""
+    def set_arena_membership(self, int8_tenants: int, fp32_tenants: int,
+                             int4_tenants: int = 0) -> None:
+        """Record how many live grouped tenants sit in quantized (int8
+        vs packed int4/NF4) vs full-precision (fp32) arenas — per-dtype
+        occupancy gauges refreshed by the server before each
+        snapshot."""
         self.arena_tenants_int8 = int(int8_tenants)
         self.arena_tenants_fp32 = int(fp32_tenants)
+        self.arena_tenants_int4 = int(int4_tenants)
 
     def record_shed(self, rows: int) -> None:
         """Rows refused at submit by ``max_queued_rows`` backpressure."""
@@ -392,6 +395,7 @@ class ServeStats:
             "reloads": float(t.reloads),
             "arena_tenants_int8": float(self.arena_tenants_int8),
             "arena_tenants_fp32": float(self.arena_tenants_fp32),
+            "arena_tenants_int4": float(self.arena_tenants_int4),
             # reliability counters + the live degraded gauge
             "shed_rows": float(t.shed_rows),
             "deadline_expired": float(t.deadline_expired),

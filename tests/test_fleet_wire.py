@@ -1,7 +1,7 @@
 """The fleet wire schema is FROZEN: bit-stable round trip, closed keys,
 versioned envelope — pinned by a golden file.
 
-The golden file (``tests/golden/wire_schema_v1.json``) is the canonical
+The golden file (``tests/golden/wire_schema_v2.json``) is the canonical
 JSON of one fully-non-default ``ServeConfig`` + ``TenantSpec`` pair.
 Renaming a config field, changing a default's type, or forgetting to
 bump ``WIRE_SCHEMA_VERSION`` on a field change shows up here as a text
@@ -22,7 +22,7 @@ from repro.serve_filter import (BucketConfig, DispatchConfig, FaultConfig,
 from repro.serve_filter.fleet import (WIRE_SCHEMA_VERSION, WireError, wire)
 
 GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
-                      "wire_schema_v1.json")
+                      "wire_schema_v2.json")
 
 
 def _golden_config() -> ServeConfig:
@@ -36,8 +36,9 @@ def _golden_config() -> ServeConfig:
         grouping=GroupingConfig(enabled=True, tile_rows=8,
                                 placement="local"),
         probe=ProbeConfig(use_kernel=True, interpret=True, block_n=512),
-        quant=QuantConfig(enabled=True, row_group=16, calib_samples=64,
-                          margin_safety=1.5, margin_floor=0.01),
+        quant=QuantConfig(enabled=True, bits=4, grid="nf4", row_group=16,
+                          calib_samples=64, margin_safety=1.5,
+                          margin_floor=0.01),
         metrics=MetricsConfig(path="metrics.jsonl", echo=True,
                               trace=True, trace_path="trace.json",
                               trace_events=1024),
@@ -64,7 +65,7 @@ def test_wire_schema_golden_file():
     text = json.dumps(payload, sort_keys=True, indent=2) + "\n"
     with open(GOLDEN) as f:
         assert f.read() == text, (
-            "wire schema drifted from tests/golden/wire_schema_v1.json "
+            "wire schema drifted from tests/golden/wire_schema_v2.json "
             "— a config field rename/retype is a WIRE BREAK: bump "
             "WIRE_SCHEMA_VERSION and regenerate the golden file "
             "deliberately")

@@ -6,7 +6,9 @@ import pytest
 from repro.core import bloom
 from repro.kernels.bloom_query import bloom_query, bloom_query_ref
 from repro.kernels.flash_attention import attention_ref, flash_attention
-from repro.kernels.qr_embed import (q8_embed_lookup, q8_gather_ref,
+from repro.kernels.qr_embed import (q4_dense_dequant, q4_dense_ref,
+                                    q4_embed_lookup, q4_gather_ref,
+                                    q8_embed_lookup, q8_gather_ref,
                                     qr_embed, qr_embed_ref)
 
 
@@ -86,6 +88,61 @@ def test_q8_gather_nd_ids_and_lmbf_parity(rng):
                           interpret=True)
     assert out.shape == (5, 7, d)
     want = lmbf.q8_gather(table, scales, ids, rows, rg, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+# ------------------------------------------------------------ q4_gather
+
+@pytest.mark.parametrize("grid", ["linear", "nf4"])
+@pytest.mark.parametrize("rows,d,n,rg", [
+    (4096, 8, 1000, 32),
+    (900, 5, 777, 64),           # odd feature width: packed pad nibble
+    (50, 2, 64, 32),             # rows < 2 * row_group
+])
+def test_q4_gather_bit_exact(rng, grid, rows, d, n, rg):
+    """The Pallas packed-int4 gather == the jnp oracle == the lmbf
+    per-tenant dequant, BIT-exact on both grids: all three apply the
+    identical nibble split -> LUT decode -> * scale elementwise math."""
+    from repro.core import lmbf
+    pk = lmbf.packed_dim(d)
+    table = jnp.asarray(rng.integers(0, 256, size=(rows, pk)), jnp.uint8)
+    ng = -(-rows // rg)
+    scales = jnp.asarray(rng.uniform(1e-3, 0.1, size=(ng,)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, rows, size=(n,)), jnp.int32)
+    sidx = idx // rg
+    lut = jnp.asarray(lmbf.nibble_lut(grid, jnp.float32))
+    out = q4_embed_lookup(idx, sidx, table, scales, grid=grid,
+                          block_n=256, interpret=True)
+    ref = q4_gather_ref(idx, sidx, table, scales, lut)
+    assert out.dtype == jnp.float32 and out.shape == (n, 2 * pk)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    want = lmbf.q_gather(table, scales, idx, rows, rg, jnp.float32,
+                         bits=4, grid=grid, out_dim=d)
+    np.testing.assert_array_equal(np.asarray(out)[:, :d],
+                                  np.asarray(want))
+
+
+@pytest.mark.parametrize("grid", ["linear", "nf4"])
+@pytest.mark.parametrize("g,prev,width", [
+    (4, 48, 64), (3, 47, 16), (1, 5, 8),   # odd prev: pad nibble trimmed
+])
+def test_q4_dense_dequant_bit_exact(rng, grid, g, prev, width):
+    """The Pallas packed dense dequant == the jnp oracle == the plain
+    unpack_nibbles + nibble_values math, bit-exact on both grids."""
+    from repro.core import lmbf
+    pk = lmbf.packed_dim(prev)
+    qw = jnp.asarray(rng.integers(0, 256, size=(g, pk, width)), jnp.uint8)
+    scales = jnp.asarray(rng.uniform(1e-3, 0.1, size=(g, width)),
+                         jnp.float32)
+    lut = jnp.asarray(lmbf.nibble_lut(grid, jnp.float32))
+    out = q4_dense_dequant(qw, scales, prev=prev, grid=grid,
+                           interpret=True)
+    ref = q4_dense_ref(qw, scales, lut, prev=prev)
+    assert out.shape == (g, prev, width)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    codes = lmbf.unpack_nibbles(qw, axis=1)[:, :prev]
+    want = lmbf.nibble_values(codes, grid, jnp.float32) \
+        * scales[:, None, :]
     np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
 
 

@@ -87,7 +87,7 @@ SNAPSHOT_KEYS = {
     "trace_events",
     # compressed arenas (quantized tenant state)
     "arena_quant_mb", "tenants_per_gb",
-    "arena_tenants_int8", "arena_tenants_fp32",
+    "arena_tenants_int8", "arena_tenants_fp32", "arena_tenants_int4",
 }
 
 TENANT_KEYS = {

@@ -1,0 +1,394 @@
+"""Packed int4/NF4 arenas: nibble-packed weights, bit-packed one-hots,
+and the quantized checkpoint format (existence_index_v3).
+
+The contracts pinned here, in data-flow order:
+
+* PACKING — ``pack_nibbles``/``unpack_nibbles`` round-trip on both
+  axes and odd widths; the NF4 table is the canonical 16-entry
+  normal-float grid; ``nibble_lut`` for the linear grid equals the
+  ``code - 8`` arithmetic bit-for-bit;
+* ACTIVATIONS — the bit-packed one-hot mask expansion is bit-identical
+  to ``jax.nn.one_hot`` including negative / out-of-range ids;
+* PLANNING — ``bits`` and ``grid`` are part of QueryPlan AND GroupKey
+  identity (an int4 tenant never shares a program or arena with an
+  int8 one), with distinct describe() labels;
+* SERVING — int4 grouped answers are BIT-EQUAL to int4 ungrouped
+  answers on both grids and both probe flavors, and every indexed
+  record still answers yes;
+* CALIBRATION (property) — the tau margin recomputed on the int4 grid
+  absorbs the whole quantization gap: no fp32-yes indexed record flips
+  to no at the serving threshold (the zero-false-negative contract);
+  calibration sample draws are memoized per (plan, seed) across
+  repeated calibrations;
+* FOOTPRINT — the int4 arena's device bytes sit well below the int8
+  arena's for the same fleet (``device_nbytes`` must account for the
+  PACKED storage width, not the logical embedding width);
+* CHECKPOINT — ``existence_index_v3`` persists packed payload +
+  scales + calibrated tau: reload skips calibration entirely and
+  round-trips the quantized state bit-exactly; a v3 payload whose
+  QuantConfig disagrees with the serving plan is rejected with a
+  typed error; a v2 fp32 checkpoint hydrates into an int4 plan via
+  the re-quantize path, answer-exact.
+"""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings as hsettings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import compression as comp
+from repro.core import existence, lmbf
+from repro.data import tuples
+from repro.serve_filter import FilterServer, ServeConfig, TenantSpec
+from repro.serve_filter.config import QuantConfig
+from repro.serve_filter.plan import group_key, plan_query, quant_meta
+
+ST = existence.TrainSettings(steps=60, n_pos=1500, n_neg=1500)
+
+MODES = [(4, "linear"), (4, "nf4")]
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    out = {}
+    for name, (cards, theta, seed) in {
+            "wide": ([3000, 800], 4000, 1),
+            "tri": ([400, 250, 90], 150, 3)}.items():
+        ds = tuples.synthesize(cards, n_records=900, seed=seed)
+        out[name] = (ds, existence.fit(ds, theta=theta, settings=ST))
+    return out
+
+
+def _probes(ds, n, seed):
+    rng = np.random.default_rng(seed)
+    pos = ds.records[rng.integers(0, len(ds.records), n // 2)]
+    neg = np.stack([rng.integers(1, v, n - n // 2) for v in ds.cards],
+                   axis=-1).astype(np.int32)
+    return np.concatenate([pos, neg])
+
+
+# --------------------------------------------------------------- packing
+
+@pytest.mark.parametrize("axis", [0, -1])
+@pytest.mark.parametrize("width", [1, 2, 3, 7, 8])
+def test_pack_unpack_nibbles_round_trip(axis, width):
+    rng = np.random.default_rng(0)
+    u = rng.integers(0, 16, size=(5, width)).astype(np.uint8)
+    packed = lmbf.pack_nibbles(u, axis=axis)
+    n = u.shape[axis]
+    assert packed.shape[axis] == lmbf.packed_dim(n)
+    back = np.asarray(lmbf.unpack_nibbles(jnp.asarray(packed),
+                                          axis=axis if axis >= 0
+                                          else u.ndim - 1))
+    back = back[:n] if axis == 0 else back[:, :n]
+    np.testing.assert_array_equal(back, u)
+
+
+def test_nf4_table_canonical():
+    """16 strictly-increasing values spanning [-1, 1] with an exact
+    zero — the normal-float grid the packed codes index into."""
+    t = lmbf.NF4_TABLE
+    assert t.shape == (16,) and t.dtype == np.float32
+    assert (np.diff(t) > 0).all()
+    assert t[0] == -1.0 and t[-1] == 1.0 and t[7] == 0.0
+
+
+def test_linear_lut_equals_arithmetic():
+    """LUT lookup and ``code - 8`` arithmetic are bit-identical f32s
+    (integers <= 8 are exact), so one kernel serves both grids."""
+    codes = jnp.arange(16, dtype=jnp.uint8)
+    lut = jnp.asarray(lmbf.nibble_lut("linear", jnp.float32))
+    np.testing.assert_array_equal(
+        np.asarray(jnp.take(lut, codes.astype(jnp.int32))),
+        np.asarray(codes.astype(jnp.float32) - 8.0))
+
+
+# ----------------------------------------------- bit-packed activations
+
+@pytest.mark.parametrize("rows", [3, 32, 33, 64, 100])
+def test_onehot_mask_bit_identical(rows):
+    """pack_onehot_ids -> expand_onehot_mask == jax.nn.one_hot exactly,
+    including negative and out-of-range ids (zero rows)."""
+    ids = jnp.asarray([0, 5, rows - 1, rows, -1, 10 ** 6, -10 ** 6],
+                      jnp.int32)
+    words = lmbf.pack_onehot_ids(ids, rows)
+    assert words.dtype == jnp.uint32
+    assert words.shape == ids.shape + (-(-rows // 32),)
+    got = np.asarray(lmbf.expand_onehot_mask(words, rows, jnp.float32))
+    want = np.asarray(jax.nn.one_hot(ids, rows, dtype=jnp.float32))
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(
+        np.asarray(lmbf.onehot_feature(ids, rows, jnp.float32)), want)
+
+
+# -------------------------------------------------------------- planning
+
+def test_bits_and_grid_in_plan_identity(fleet):
+    _, idx = fleet["tri"]
+    mk = lambda **kw: plan_query(idx.cfg, idx.fixup_filter.params,
+                                 quant=QuantConfig(enabled=True, **kw))
+    p8 = mk()
+    p4 = mk(bits=4)
+    p4n = mk(bits=4, grid="nf4")
+    assert len({p8, p4, p4n}) == 3
+    assert len({group_key(p8), group_key(p4), group_key(p4n)}) == 3
+    assert "/q8" in p8.describe() and "/q8" in group_key(p8).describe()
+    assert "/q4" in p4.describe() and "/q4nf4" not in p4.describe()
+    assert "/q4nf4" in p4n.describe()
+    assert "/q4nf4" in group_key(p4n).describe()
+
+
+def test_quant_mode_validation():
+    with pytest.raises(ValueError):
+        QuantConfig(bits=2)
+    with pytest.raises(ValueError):
+        QuantConfig(grid="log2")
+    with pytest.raises(ValueError):
+        QuantConfig(bits=8, grid="nf4")   # nf4 is a 4-bit grid
+
+
+# ------------------------------------------------- serving bit-equality
+
+@pytest.mark.parametrize("bits,grid", MODES)
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_q4_grouped_bit_equal_ungrouped_no_fn(fleet, bits, grid,
+                                              use_kernel):
+    servers = {}
+    for grouped in (False, True):
+        srv = FilterServer(ServeConfig.from_kwargs(
+            grouped=grouped, quantized=True, quant_bits=bits,
+            quant_grid=grid, use_kernel=use_kernel, block_n=64))
+        for name, (_, idx) in fleet.items():
+            srv.admit(TenantSpec(name, index=idx))
+        servers[grouped] = srv
+    for name, (ds, _) in fleet.items():
+        probes = _probes(ds, 256, seed=7)
+        a_u = np.asarray(servers[False].handle(name).query(probes))
+        a_g = np.asarray(servers[True].handle(name).query(probes))
+        np.testing.assert_array_equal(a_g, a_u)
+        for grouped, srv in servers.items():
+            ans = np.asarray(srv.handle(name).query(ds.records))
+            assert ans.all(), \
+                f"{name}: {(~ans).sum()} false negatives " \
+                f"(grouped={grouped}, kernel={use_kernel}, {grid})"
+    for srv in servers.values():
+        srv.close()
+
+
+def test_stats_count_int4_tenants(fleet):
+    srv = FilterServer(ServeConfig.from_kwargs(
+        grouped=True, quantized=True, quant_bits=4, quant_grid="nf4"))
+    for name, (_, idx) in fleet.items():
+        srv.admit(TenantSpec(name, index=idx))
+    snap = srv.stats_snapshot()
+    assert snap["arena_tenants_int4"] == len(fleet)
+    assert snap["arena_tenants_int8"] == 0
+    assert snap["arena_tenants_fp32"] == 0
+    srv.close()
+
+
+# ------------------------------------------------ calibration (property)
+
+def _check_no_unsafe_flip(fleet, name, bits, grid, seed):
+    """At the serving threshold tau_q recomputed on the int4 grid, no
+    indexed record that fp32 said yes to flips to no: the calibrated
+    margin absorbs the (much larger) int4 quantization gap, so the
+    fixup filter's no-FN guarantee is never silently leaned on."""
+    ds, idx = fleet[name]
+    qc = QuantConfig(enabled=True, bits=bits, grid=grid)
+    qp = lmbf.quantize_params(idx.params, idx.cfg, qc.row_group,
+                              bits=bits, grid=grid)
+    tau_q = lmbf.calibrated_tau(
+        idx.params, qp, idx.cfg, idx.tau, row_group=qc.row_group,
+        n_samples=qc.calib_samples, safety=qc.margin_safety,
+        floor=qc.margin_floor, bits=bits, grid=grid)
+    rows = _probes(ds, 400, seed=seed)
+    enc = comp.encode(jnp.asarray(rows, jnp.int32), idx.cfg.plan)
+    s_f = np.asarray(lmbf.predict(idx.params, idx.cfg, enc))
+    s_q = np.asarray(lmbf.predict_q(
+        qp, idx.cfg, enc, row_group=qc.row_group, bits=bits, grid=grid))
+    flipped = (s_f[:200] >= idx.tau) & (s_q[:200] < tau_q)
+    assert not flipped.any(), \
+        f"{name}/{grid}: {flipped.sum()} indexed records flipped " \
+        "yes->no at the int4 serving threshold"
+
+
+if HAVE_HYPOTHESIS:
+    @given(data=st.data())
+    @hsettings(max_examples=10, deadline=None)
+    def test_q4_tau_margin_no_unsafe_flip(fleet, data):
+        name = data.draw(st.sampled_from(sorted(fleet)), label="shape")
+        bits, grid = data.draw(st.sampled_from(MODES), label="mode")
+        seed = data.draw(st.integers(0, 2 ** 16), label="seed")
+        _check_no_unsafe_flip(fleet, name, bits, grid, seed)
+
+
+@pytest.mark.parametrize("bits,grid", MODES)
+@pytest.mark.parametrize("seed", [17, 99])
+def test_q4_tau_margin_no_unsafe_flip_fixed_seeds(fleet, bits, grid,
+                                                  seed):
+    """Non-hypothesis stand-in (repo convention: a missing hypothesis
+    install degrades coverage, never skips the property entirely)."""
+    for name in ("wide", "tri"):
+        _check_no_unsafe_flip(fleet, name, bits, grid, seed)
+
+
+def test_calibration_draws_memoized(fleet):
+    """Sample draws are memoized per (plan, n_samples, seed): repeated
+    calibrations of the same plan shape re-use the drawn ids instead
+    of re-running the PRNG — the stats counter proves the hit."""
+    _, idx = fleet["tri"]
+    lmbf.reset_calibration_stats()
+    a = lmbf.calibration_draws(idx.cfg, 64, seed=0)
+    b = lmbf.calibration_draws(idx.cfg, 64, seed=0)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    st0 = lmbf.calibration_stats()
+    assert st0["draw_hits"] == 1
+    qp = lmbf.quantize_params(idx.params, idx.cfg, 32, bits=4)
+    for _ in range(2):
+        lmbf.calibrated_tau(idx.params, qp, idx.cfg, idx.tau,
+                            n_samples=64, bits=4)
+    st1 = lmbf.calibration_stats()
+    assert st1["count"] == 2
+    assert st1["draw_hits"] >= st0["draw_hits"] + 1
+    assert st1["seconds"] > 0
+
+
+# ------------------------------------------------------------- footprint
+
+def test_q4_arena_packed_footprint(fleet):
+    """Same 8-tenant fleet at fp32 / int8 / int4: device_nbytes must
+    reflect the PACKED storage width (the satellite-2 regression — a
+    device_nbytes derived from the logical e_max would report int4 at
+    int8's size), and the int4 arena lands >= 5x below fp32."""
+    _, idx = fleet["wide"]
+    nbytes = {}
+    for label, kw in {
+            "fp32": dict(quantized=False),
+            "int8": dict(quantized=True),
+            "int4": dict(quantized=True, quant_bits=4)}.items():
+        srv = FilterServer(ServeConfig.from_kwargs(grouped=True, **kw))
+        for i in range(8):
+            srv.admit(TenantSpec(f"t{i}", index=idx))
+        (arena,) = srv.registry.groups.values()
+        nbytes[label] = arena.device_nbytes
+        srv.close()
+    assert nbytes["int4"] < 0.75 * nbytes["int8"], nbytes
+    shrink = nbytes["fp32"] / nbytes["int4"]
+    assert shrink >= 5.0, \
+        f"int4 arena only {shrink:.2f}x smaller ({nbytes})"
+
+
+# ------------------------------------------------------------ checkpoint
+
+def test_v3_checkpoint_round_trips_bit_exact(fleet):
+    """save(quant=...) -> load: the packed payload, scales, and tau
+    come back bit-exactly, flagged pinned, and serving from the
+    reloaded index runs ZERO calibrations and answers bit-identically
+    to the in-memory original."""
+    ds, idx = fleet["tri"]
+    q = QuantConfig(enabled=True, bits=4, grid="nf4")
+    qp0, tau0 = existence.ensure_quant_state(idx, quant_meta(q))
+    probes = _probes(ds, 200, seed=11)
+    srv0 = FilterServer(ServeConfig(quant=q))
+    srv0.admit(TenantSpec("t", index=idx))
+    want = np.asarray(srv0.handle("t").query(probes))
+    srv0.close()
+    with tempfile.TemporaryDirectory() as tmp:
+        existence.save_index(os.path.join(tmp, "t"), idx, step=1,
+                             quant=quant_meta(q))
+        idx2 = existence.load_index(os.path.join(tmp, "t"), step=1)
+        cache = idx2.quant_cache
+        assert cache is not None and cache["pinned"]
+        assert cache["tau"] == tau0
+        flat0 = jax.tree_util.tree_leaves(qp0)
+        flat1 = jax.tree_util.tree_leaves(cache["qparams"])
+        assert len(flat0) == len(flat1)
+        for a, b in zip(flat0, flat1):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        lmbf.reset_calibration_stats()
+        srv = FilterServer(ServeConfig(quant=q))
+        srv.admit(TenantSpec("t", index=idx2))
+        got = np.asarray(srv.handle("t").query(probes))
+        assert lmbf.calibration_stats()["count"] == 0
+        np.testing.assert_array_equal(got, want)
+        assert np.asarray(srv.handle("t").query(ds.records)).all()
+        srv.close()
+
+
+def test_v3_mismatched_quant_config_rejected(fleet):
+    """A v3 payload pins its QuantConfig: hydrating it under a DIFFERENT
+    quantization mode must raise the typed error, not silently serve
+    stale packed bytes or silently re-quantize a pinned checkpoint."""
+    _, idx = fleet["tri"]
+    with tempfile.TemporaryDirectory() as tmp:
+        existence.save_index(
+            os.path.join(tmp, "t"), idx, step=1,
+            quant=quant_meta(QuantConfig(enabled=True, bits=4,
+                                         grid="nf4")))
+        idx2 = existence.load_index(os.path.join(tmp, "t"), step=1)
+        with pytest.raises(existence.QuantConfigMismatch):
+            existence.ensure_quant_state(
+                idx2, quant_meta(QuantConfig(enabled=True, bits=8)))
+        srv = FilterServer(ServeConfig(
+            quant=QuantConfig(enabled=True, bits=4, grid="linear")))
+        with pytest.raises(existence.QuantConfigMismatch):
+            srv.admit(TenantSpec("t", index=idx2))
+        srv.close()
+
+
+def test_v2_fp32_checkpoint_hydrates_int4_plan(fleet):
+    """Cross-version: a plain (v2, fp32-only) checkpoint admitted into
+    an int4 server takes the re-quantize path and answers exactly like
+    a server admitted from the in-memory index."""
+    ds, idx = fleet["tri"]
+    probes = _probes(ds, 200, seed=13)
+    cfg = ServeConfig.from_kwargs(grouped=True, quantized=True,
+                                  quant_bits=4, quant_grid="nf4")
+    srv0 = FilterServer(cfg)
+    srv0.admit(TenantSpec("t", index=idx))
+    want = np.asarray(srv0.handle("t").query(probes))
+    srv0.close()
+    with tempfile.TemporaryDirectory() as tmp:
+        existence.save_index(os.path.join(tmp, "t"), idx, step=1)
+        idx2 = existence.load_index(os.path.join(tmp, "t"), step=1)
+        assert idx2.quant_cache is None       # v2: nothing pinned
+        srv = FilterServer(cfg)
+        srv.admit(TenantSpec("t", index=idx2))
+        got = np.asarray(srv.handle("t").query(probes))
+        np.testing.assert_array_equal(got, want)
+        assert np.asarray(srv.handle("t").query(ds.records)).all()
+        srv.close()
+
+
+def test_registry_save_writes_v3_for_quant_servers(fleet):
+    """FilterServer.save on a quantized server persists v3 (quant
+    payload included), so the NEXT hydration skips calibration; an
+    fp32 server keeps writing v2."""
+    _, idx = fleet["tri"]
+    with tempfile.TemporaryDirectory() as tmp:
+        srv = FilterServer(ServeConfig.from_kwargs(
+            quantized=True, quant_bits=4, quant_grid="nf4"))
+        srv.admit(TenantSpec("t", index=idx))
+        srv.save("t", tmp)
+        srv.close()
+        idx2 = existence.load_index(os.path.join(tmp, "t"))
+        assert idx2.quant_cache is not None and idx2.quant_cache["pinned"]
+        assert idx2.quant_cache["meta"]["bits"] == 4
+        assert idx2.quant_cache["meta"]["grid"] == "nf4"
+    with tempfile.TemporaryDirectory() as tmp:
+        srv = FilterServer(ServeConfig())
+        srv.admit(TenantSpec("t", index=idx))
+        srv.save("t", tmp)
+        srv.close()
+        idx3 = existence.load_index(os.path.join(tmp, "t"))
+        assert idx3.quant_cache is None
